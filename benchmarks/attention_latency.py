@@ -1,0 +1,99 @@
+"""Paper Table 6 — attention-operator latency: SALS decode attention vs
+full-cache (FlashAttention-role) decode attention.
+
+CPU wall-clock on REDUCED shapes (this container's measurement) plus the
+v5e roofline-model projection for the paper's shapes (bs 8/16 × 1k..32k)
+from the §4.5 traffic formula — the projection is what the dry-run's perf
+story uses; the CPU timing demonstrates the operator actually runs and that
+the SALS/full ratio moves in the predicted direction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import HBM_BW
+from repro.config import SALSConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.core import latent_cache as lc
+from repro.core.sparse_attention import sals_decode_attend
+from repro.models import attention as attn
+from repro.models import transformer as tf
+from benchmarks import common
+from benchmarks.memory_access import traffic_ratio
+
+
+def measured_rows():
+    """CPU wall-clock of one layer's decode attention, full vs SALS."""
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=1)
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(key, cfg, jnp.float32)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])
+    rows = []
+    for bs, s in [(4, 1024), (4, 2048), (8, 1024)]:
+        x = jax.random.normal(key, (bs, 1, cfg.d_model), jnp.float32)
+        # full-cache decode attention
+        kc = jax.random.normal(key, (bs, s, cfg.n_kv_heads, cfg.head_dim),
+                               jnp.float32)
+        vc = jnp.roll(kc, 1, axis=1)
+
+        @jax.jit
+        def full(x, kc, vc):
+            return attn.attend_decode_full(bp["attn"], x, cfg, kc, vc,
+                                           jnp.int32(s - 1))[0]
+
+        t_full, sd_full = common.time_fn(full, x, kc, vc, iters=10)
+
+        sals = SALSConfig(rank_ratio=0.25, n_critical=min(432, s // 4),
+                          n_sink=16, n_recent=64, v_group=32)
+        proj = cal.random_layer_projectors(key, cfg, sals, 1)
+        u = proj["u"][0]
+        cache = lc.init_latent_cache(cfg, sals, 1, bs, s, jnp.float32)
+        layer = jax.tree.map(lambda a: a[0], cache)
+
+        @jax.jit
+        def sparse(x, layer):
+            y, _ = sals_decode_attend(bp["attn"], u, layer, x,
+                                      jnp.int32(s - 1), cfg, sals)
+            return y
+
+        t_sals, sd_sals = common.time_fn(sparse, x, layer, iters=10)
+        rows.append(("table6-cpu", bs, s, round(t_full, 1), round(t_sals, 1),
+                     round(t_full / t_sals, 2)))
+    return rows
+
+
+def projected_rows():
+    """v5e HBM-roofline projection at the paper's shapes (memory-bound
+    operator: latency ≈ bytes_moved / HBM_bw)."""
+    cfg = get_config("paper-llama2-7b")
+    rows = []
+    for bs in (8, 16):
+        for s in (1024, 2048, 4096, 32768):
+            full_bytes = bs * 2 * s * cfg.kv_dim * 2 * cfg.n_layers
+            t_full = full_bytes / HBM_BW * 1e6
+            for variant in ("25", "12.5"):
+                sals = SALSConfig(
+                    rank_ratio=0.25 if variant == "25" else 0.125,
+                    v_bits=8 if variant == "25" else 4,
+                    n_critical=512 if s <= 4096 else 1024,
+                    n_sink=16, n_recent=64, v_group=64)
+                ratio = traffic_ratio(cfg, sals, s)
+                rows.append((f"table6-v5e-SALS{variant}", bs, s,
+                             round(t_full, 1), round(t_full * ratio, 1),
+                             round(1 / ratio, 2)))
+    return rows
+
+
+def run() -> list:
+    rows = measured_rows() + projected_rows()
+    common.emit(rows, ["table", "batch", "seq", "full_us", "sals_us",
+                       "speedup"])
+    print("# paper Table 6 reference: 5.7x attention speedup at bs=8, 4k")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: a trained small model + calibrated projectors
+(cached across benchmarks), timing helpers, CSV emit."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SALSConfig, TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCorpus, make_batches
+from repro.launch.serve import calibrate, collect_pre_rope_keys
+from repro.train import trainer
+
+
+@functools.lru_cache(maxsize=2)
+def trained_model(arch: str = "qwen2-1.5b", steps: int = 60,
+                  vocab: int = 512, n_layers: int = 3):
+    """Train a reduced model on the synthetic corpus (accuracy proxies run
+    against THIS model — no pretrained 7B weights ship offline)."""
+    cfg = get_config(arch).reduced(n_layers=n_layers, vocab_size=vocab)
+    tcfg = TrainConfig(steps=steps, batch_size=8, seq_len=64, lr=5e-3,
+                       warmup_steps=5, log_every=1_000_000)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg, jnp.float32)
+    step = jax.jit(trainer.make_train_step(cfg, tcfg))
+    for i, batch in zip(range(tcfg.steps), make_batches(corpus, 8, 64)):
+        state, _ = step(state, jax.tree.map(jnp.asarray, batch))
+    return cfg, state["params"], corpus
+
+
+def sals_settings(cfg, variant: str) -> SALSConfig:
+    """Paper §5: SALS-25% and SALS-12.5% (scaled to the reduced model)."""
+    rr = 0.25 if variant == "25" else 0.125
+    return SALSConfig(rank_ratio=rr, score_ratio=0.5,
+                      v_bits=8 if variant == "25" else 4,
+                      n_critical=16, n_sink=2, n_recent=8,
+                      v_group=min(32, cfg.kv_dim),
+                      skip_layers_front=1, skip_layers_back=1)
+
+
+def projectors_for(cfg, params, corpus, sals):
+    return calibrate(params, cfg, sals, corpus, n_sequences=16, seq_len=64)
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3
+            ) -> Tuple[float, float]:
+    """(mean_us, std_us) per call; blocks on the first output leaf."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,67 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-(arch × shape ×
+mesh) roofline table (compute/memory/collective terms, bound, useful ratio)
+and emit the markdown table EXPERIMENTS.md §Roofline embeds."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load(tag: str = "") -> list:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("tag", "") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def table(rows, *, mesh: str = "pod16x16") -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+           "useful | MFU bound | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for d in rows:
+        if d.get("mesh") != mesh:
+            continue
+        if d.get("status") == "skipped":
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | "
+                       f"skipped: {d['reason']} | — | — | — |\n")
+            continue
+        if d.get("status") != "ok":
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | "
+                       f"FAILED | — | — | — |\n")
+            continue
+        r = d["roofline"]
+        peak = (d.get("memory_analysis") or {}).get("peak_bytes")
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | {r['bound']} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu']:.3f} | "
+            f"{(peak or 0) / 2**30:.1f} |\n")
+    return "".join(out)
+
+
+def run() -> list:
+    rows = load()
+    print(f"# {len(rows)} dry-run artifacts in {ART}")
+    print(table(rows))
+    ok = [d for d in rows if d.get("status") == "ok"
+          and d.get("mesh") == "pod16x16"]
+    if ok:
+        worst = sorted(ok, key=lambda d: d["roofline"]["mfu"])[:3]
+        print("# lowest-MFU cells (hillclimb candidates):")
+        for d in worst:
+            print(f"#   {d['arch']} × {d['shape']}: "
+                  f"bound={d['roofline']['bound']} "
+                  f"mfu={d['roofline']['mfu']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

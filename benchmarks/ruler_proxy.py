@@ -1,0 +1,73 @@
+"""Paper Table 5 (RULER) proxy — retrieval precision of latent-space
+selection, weights-free.
+
+RULER measures whether long-context retrieval survives compression.  The
+mechanism under test is SALS's claim that latent top-k FINDS the needle:
+we plant `n_needles` keys with high query-similarity at random positions
+in an s-token pre-RoPE key field, project to rank-r latents with a PCA
+projector fitted on the field, and measure needle recall@budget of the
+truncated-latent scores (§4.3) across (seq_len × rank_ratio), the axes of
+the paper's Table 5 degradation (SALS-25% ≈ baseline; 12.5% degrades on
+retrieval-heavy subtasks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projection as pj
+from repro.core import selection as sel
+from benchmarks import common
+
+
+def recall_at_budget(seq_len: int, rank_ratio: float, *, kv_dim: int = 128,
+                     n_needles: int = 4, budget: int = 64, trials: int = 8,
+                     true_rank: int = 40, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    hits = total = 0
+    # low-rank background with a DECAYING spectrum (the paper's pre-RoPE
+    # key structure, Fig. 4a): PCA rank order follows the decay
+    basis = np.linalg.qr(rng.normal(size=(kv_dim, kv_dim)))[0][:true_rank]
+    lam = 0.9 ** np.arange(true_rank)
+    for t in range(trials):
+        coef = rng.normal(size=(seq_len, true_rank)) * np.sqrt(lam)
+        keys = coef @ basis + 0.02 * rng.normal(size=(seq_len, kv_dim))
+        # the query-relevant direction lives in the MID-spectrum PCs
+        # (components 8..32): a rank-32 projector keeps it, rank-16 /
+        # score-rank-8 truncates it — the Table 5 degradation mechanism
+        mid = np.zeros(true_rank)
+        mid[8:32] = rng.normal(size=24)
+        q_dir = mid @ basis
+        q_dir /= np.linalg.norm(q_dir)
+        q = q_dir + 0.2 * rng.normal(size=(kv_dim,))
+        needle_pos = rng.choice(seq_len, n_needles, replace=False)
+        scale = np.linalg.norm(keys, axis=1).mean()
+        keys[needle_pos] = 2.0 * q_dir * scale + keys[needle_pos] * 0.3
+
+        r = max(8, int(rank_ratio * kv_dim))
+        p = pj.fit_projector(keys, r)
+        lat = jnp.asarray(keys, jnp.float32) @ p["u"]
+        r_star = max(8, r // 2)
+        scores = sel.latent_scores(jnp.asarray(q, jnp.float32)[None],
+                                   p["u"], lat[None], r_star)[0]
+        top = np.asarray(jnp.argsort(-scores)[:budget])
+        hits += len(set(top.tolist()) & set(needle_pos.tolist()))
+        total += n_needles
+    return hits / total
+
+
+def run() -> list:
+    rows = []
+    for s in (1024, 4096, 16384):
+        for rr, label in ((0.25, "SALS-25%"), (0.125, "SALS-12.5%")):
+            rec = recall_at_budget(s, rr, seed=s)
+            rows.append(("table5-proxy", label, s, 64, round(rec, 3)))
+    common.emit(rows, ["table", "method", "seq", "budget", "needle_recall"])
+    print("# paper Table 5: SALS-25% ~= baseline; 12.5% degrades on "
+          "retrieval-critical subtasks (MK2) — recall should drop with "
+          "rank_ratio and seq")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only mem,overlap,rank,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = [
+    ("mem", "Tables 2/3/4: memory access + accuracy proxy",
+     "benchmarks.memory_access"),
+    ("overlap", "Figure 2: overlap score across layers",
+     "benchmarks.overlap_score"),
+    ("rank", "Figure 4: key rank pre/post RoPE",
+     "benchmarks.rank_analysis"),
+    ("sparse", "Table 4: token-sparse method comparison",
+     "benchmarks.token_sparse"),
+    ("attn", "Table 6: attention operator latency",
+     "benchmarks.attention_latency"),
+    ("tput", "Table 7: end-to-end decode throughput",
+     "benchmarks.throughput"),
+    ("ruler", "Table 5 proxy: retrieval recall of latent selection",
+     "benchmarks.ruler_proxy"),
+    ("roofline", "§Roofline: dry-run roofline table",
+     "benchmarks.roofline_report"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list of section keys to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for key, title, module in SECTIONS:
+        if only and key not in only:
+            continue
+        print(f"\n{'=' * 72}\n== [{key}] {title}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"== [{key}] done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append(key)
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        return 1
+    print("\nAll benchmark sections completed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Fault-tolerance demo: a training run that CRASHES twice mid-flight and
+recovers from atomic checkpoints via the supervisor, finishing with the
+exact same weights as an uninterrupted run (deterministic data order).
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.data import SyntheticCorpus
+from repro.ft import Supervisor
+from repro.train import trainer
+
+CKPT = "artifacts/ckpt/ft-demo"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=2, vocab_size=512)
+    tcfg = TrainConfig(steps=30, batch_size=8, seq_len=64, lr=2e-3,
+                       checkpoint_every=5, log_every=10)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    crashes = {"at": [8, 19]}     # steps where a "node" dies
+
+    def train(start_step: int):
+        state = trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                   jnp.float32)
+        if start_step:
+            state, start_step = ckpt.restore(CKPT, state)
+            print(f"  -> resumed from step {start_step}")
+        step = jax.jit(trainer.make_train_step(cfg, tcfg))
+        for i in range(start_step, tcfg.steps):
+            if crashes["at"] and i == crashes["at"][0]:
+                crashes["at"].pop(0)
+                raise RuntimeError(f"simulated hardware fault at step {i}")
+            batch = jax.tree.map(jnp.asarray,
+                                 corpus.batch(i, tcfg.batch_size,
+                                              tcfg.seq_len))
+            state, m = step(state, batch)
+            if (i + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save(CKPT, i + 1, state, keep=2)
+            if i % tcfg.log_every == 0:
+                print(f"  step {i}: loss={float(m['loss']):.4f}")
+        return state
+
+    sup = Supervisor(max_restarts=4)
+    t0 = time.time()
+    state = sup.run(lambda _: train(ckpt.latest_step(CKPT) or 0))
+    print(f"finished with {sup.restarts} restarts in {time.time()-t0:.0f}s; "
+          f"checkpoints kept: {ckpt.list_checkpoints(CKPT)}")
+
+    # verify bit-identical to an uninterrupted run
+    ref = trainer.init_state(jax.random.PRNGKey(0), cfg, tcfg, jnp.float32)
+    step = jax.jit(trainer.make_train_step(cfg, tcfg))
+    for i in range(tcfg.steps):
+        batch = jax.tree.map(jnp.asarray,
+                             corpus.batch(i, tcfg.batch_size, tcfg.seq_len))
+        ref, _ = step(ref, batch)
+    deltas = [float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(state["params"]),
+                  jax.tree.leaves(ref["params"]))]
+    print(f"max param delta vs uninterrupted run: {max(deltas):.2e} "
+          f"({'EXACT RECOVERY' if max(deltas) < 1e-5 else 'MISMATCH'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Run one reduced train step + (decoders) one SALS decode step for EVERY
+assigned architecture — the '--arch' selector demo.
+
+    PYTHONPATH=src python examples/multi_arch_smoke.py [--arch yi-9b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SALSConfig, TrainConfig
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import calibration as cal
+from repro.models import transformer as tf
+from repro.train import trainer
+
+
+def run_arch(arch: str) -> None:
+    cfg = get_config(arch).reduced()
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    tcfg = TrainConfig(steps=1, batch_size=2, seq_len=64)
+    state = trainer.init_state(key, cfg, tcfg, jnp.float32)
+
+    if cfg.family == "encoder":
+        batch = {"frames": jax.random.normal(key, (2, 64, cfg.d_model)) * .1,
+                 "labels": jax.random.randint(key, (2, 64), 0,
+                                              cfg.vocab_size)}
+    else:
+        batch = {"tokens": jax.random.randint(key, (2, 64), 0,
+                                              cfg.vocab_size),
+                 "labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                              (2, 64), 0, cfg.vocab_size)}
+        if cfg.family == "vlm":
+            batch["patches"] = jax.random.normal(
+                key, (2, cfg.vision_patches, cfg.d_model)) * 0.1
+    step = jax.jit(trainer.make_train_step(cfg, tcfg))
+    state, m = step(state, batch)
+    line = f"{arch:26s} [{cfg.family:7s}] train loss={float(m['loss']):7.3f}"
+
+    if cfg.is_decoder:
+        sals = None
+        proj = None
+        if cfg.has_attention:
+            sals = SALSConfig(rank_ratio=0.25, n_critical=8, n_sink=2,
+                              n_recent=4, v_group=32,
+                              skip_layers_front=1, skip_layers_back=1)
+            proj = cal.random_layer_projectors(key, cfg, sals, cfg.n_layers)
+        pf_batch = {k: v for k, v in batch.items() if k != "labels"}
+        last, cache = tf.prefill(state["params"], proj, cfg, sals, pf_batch,
+                                 max_seq=512)
+        nxt = jnp.argmax(last, -1).astype(jnp.int32)
+        pos = 64 + (cfg.vision_patches if cfg.family == "vlm" else 0)
+        lg, _ = tf.decode_step(state["params"], proj, cache, nxt,
+                               jnp.int32(pos), cfg, sals)
+        mode = "sals" if sals else "recurrent"
+        line += f"  decode[{mode}] ok"
+    else:
+        line += "  (encoder: no decode)"
+    print(line + f"  ({time.time() - t0:.1f}s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="", choices=[""] + ASSIGNED_ARCHS)
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    for arch in archs:
+        run_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

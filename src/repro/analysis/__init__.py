@@ -1,0 +1,4 @@
+from repro.analysis.hlo_cost import CostReport, analyze_hlo
+from repro.analysis.roofline import RooflineReport, roofline
+
+__all__ = ["CostReport", "RooflineReport", "analyze_hlo", "roofline"]

@@ -1,0 +1,412 @@
+"""HLO-text cost walker with while-loop trip-count multipliers.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a 48-layer
+``lax.scan`` therefore reports 1/48th of the real FLOPs.  This walker redoes
+the accounting from ``compiled.as_text()`` (the post-SPMD, per-device
+module), multiplying each computation's cost by the product of enclosing
+``while`` trip counts (XLA records ``known_trip_count`` in backend_config
+after loop analysis).
+
+Accounting model (mirrors XLA's HloCostAnalysis conventions):
+  flops             2 · |result| · |contracting dims| for every dot/conv —
+                    including dots nested inside fusion bodies (attributed
+                    to the fusion's call site).
+  bytes             operand bytes + result bytes of every *top-level*
+                    instruction (fusion internals excluded — fusions read
+                    inputs and write outputs through HBM once).
+  collective_bytes  per-device wire traffic of all-gather / all-reduce /
+                    reduce-scatter / all-to-all / collective-permute:
+                    result bytes × (2 for all-reduce — ring sends+receives
+                    each shard twice — else 1).
+
+Shapes in the partitioned module are per-device, so every number reported
+here is PER DEVICE per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "all-gather-start": 1.0,
+    "all-reduce-start": 2.0,
+    "collective-permute-start": 1.0,
+}
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_TRIP_RE = re.compile(r'known_trip_count[\\"{:n\s]*?(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                       r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0              # per-device
+    bytes_accessed: float = 0.0     # per-device HBM traffic estimate
+    collective_bytes: float = 0.0   # per-device wire traffic
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    unknown_trip_counts: int = 0
+
+    def merged(self, other: "CostReport", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = \
+                self.collective_breakdown.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = \
+                self.collective_counts.get(k, 0) + int(v * mult)
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[_Instr] = []
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        # computation header: "%name (args) -> type {" or "ENTRY %name ..."
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = re.search(r"%?([\w.\-]+)\s*\(", stripped)
+            if m:
+                cur = _Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if stripped.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            cur.instrs.append(parsed)
+    return comps
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    """Parse '%name = TYPE opcode(...)' where TYPE may be a tuple containing
+    '/*index=N*/' comments (while/conditional results)."""
+    nm = _NAME_RE.match(line)
+    if not nm:
+        return None
+    rest = line[nm.end():]
+    if rest.startswith("("):                      # tuple type: find its ')'
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        else:
+            return None
+        type_str, tail = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp:]
+    om = re.match(r"\s*([\w\-]+)\(", tail)
+    if not om:
+        return None
+    return _Instr(nm.group(1), type_str, om.group(1), line)
+
+
+# opcodes that are pure aliasing / metadata — no HBM traffic of their own
+_POINTER_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "domain", "opt-barrier", "partition-id", "replica-id",
+}
+
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(line: str) -> List[str]:
+    """Instruction operand names: everything inside the opcode's parens."""
+    try:
+        after = line.split("=", 1)[1]
+        start = after.index("(")
+    except (IndexError, ValueError):
+        return []
+    depth = 0
+    for i in range(start, len(after)):
+        if after[i] == "(":
+            depth += 1
+        elif after[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERANDS_RE.findall(after[start:i])
+    return _OPERANDS_RE.findall(after[start:])
+
+
+def _dot_flops(instr: _Instr, types: Dict[str, str]) -> float:
+    """2 · |result| · |lhs contracting dims|."""
+    result_elems = _shape_elems(instr.result_type)
+    ops = _operand_names(instr.line)
+    lhs: List[int] = []
+    if ops and ops[0] in types:
+        m = _SHAPE_RE.search(types[ops[0]])
+        if m and m.group(2):
+            lhs = [int(d) for d in m.group(2).split(",")]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    contract = 1
+    if m and m.group(1) and lhs:
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs):
+                contract *= lhs[idx]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(instr: _Instr, types: Dict[str, str]) -> float:
+    # approximation: 2 · |result| · (kernel elems / output features)
+    result_elems = _shape_elems(instr.result_type)
+    ops = _operand_names(instr.line)
+    if len(ops) < 2 or ops[1] not in types:
+        return 2.0 * result_elems
+    m = _SHAPE_RE.search(types[ops[1]])
+    k_dims = [int(d) for d in m.group(2).split(",")] if m and m.group(2) else []
+    k = 1
+    for d in k_dims[:-1]:
+        k *= d
+    return 2.0 * result_elems * max(k, 1)
+
+
+def _fusion_bytes(ins: _Instr, comps: Dict[str, _Computation],
+                  types: Dict[str, str]) -> float:
+    """Fusion HBM traffic: result write + per-operand read, where an operand
+    read only through dynamic-slice/gather ops INSIDE the fusion body is
+    charged the slice sizes, not the whole buffer (XLA fuses the gather of
+    one scan step's K/V block into the consumer — the loop never streams the
+    full stacked array)."""
+    m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        total = float(_shape_bytes(ins.result_type))
+        for op in _operand_names(ins.line):
+            total += _shape_bytes(types.get(op, ""))
+        return total
+    # in-place update fusion: a DUS inside the body aliases its target
+    # buffer — only the update region crosses HBM (read-modify-write).
+    # Covers both DUS-rooted fusions and dus→convert-rooted ones (the
+    # latent-cache append lowers to dynamic-update-slice_convert_fusion).
+    dus_targets = set()
+    dus_update_bytes = 0.0
+    for bi in body.instrs:
+        if bi.opcode == "dynamic-update-slice":
+            ops_ = _operand_names(bi.line)
+            if ops_:
+                dus_targets.add(ops_[0])
+            u = _shape_bytes(types.get(ops_[1], "")) if len(ops_) > 1 else 0
+            dus_update_bytes += u
+    if dus_targets:
+        # trace DUS targets back to fusion params (possibly via converts)
+        target_params = set(dus_targets)
+        changed = True
+        while changed:
+            changed = False
+            for bi in body.instrs:
+                if bi.name in target_params and bi.opcode != "parameter":
+                    for op in _operand_names(bi.line):
+                        if op not in target_params:
+                            target_params.add(op)
+                            changed = True
+        param_by_idx: Dict[int, str] = {}
+        for bi in body.instrs:
+            if bi.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", bi.line)
+                if pm:
+                    param_by_idx[int(pm.group(1))] = bi.name
+        total = 2.0 * max(dus_update_bytes, 1.0)
+        for idx, op in enumerate(_operand_names(ins.line)):
+            pname = param_by_idx.get(idx)
+            if pname is not None and pname in target_params:
+                continue                       # aliased in-place target
+            b = _shape_bytes(types.get(op, ""))
+            if b < _shape_bytes(ins.result_type):
+                total += b                     # small side inputs (token etc.)
+        return total
+    total = float(_shape_bytes(ins.result_type))
+    # map fusion operand index -> body parameter instruction name
+    param_by_idx: Dict[int, str] = {}
+    for bi in body.instrs:
+        if bi.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", bi.line)
+            if pm:
+                param_by_idx[int(pm.group(1))] = bi.name
+    operands = _operand_names(ins.line)
+    for idx, op in enumerate(operands):
+        full = _shape_bytes(types.get(op, ""))
+        pname = param_by_idx.get(idx)
+        if pname is None:
+            total += full
+            continue
+        sliced = 0
+        only_sliced = True
+        for bi in body.instrs:
+            if bi.opcode == "parameter":
+                continue
+            if pname in _operand_names(bi.line):
+                if bi.opcode in ("dynamic-slice", "gather", "slice"):
+                    sliced += _shape_bytes(bi.result_type)
+                else:
+                    only_sliced = False
+                    break
+        total += min(sliced, full) if (only_sliced and sliced) else full
+    return total
+
+
+def _comp_cost(comp: _Computation, comps: Dict[str, _Computation],
+               types: Dict[str, str]
+               ) -> Tuple[CostReport, List[Tuple[str, float]]]:
+    """Local cost of one computation + list of (callee, multiplier)."""
+    rep = CostReport()
+    calls: List[Tuple[str, float]] = []
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            rep.flops += _dot_flops(ins, types)
+        elif ins.opcode == "convolution":
+            rep.flops += _conv_flops(ins, types)
+        if ins.opcode in _COLLECTIVES:
+            b = _shape_bytes(ins.result_type) * _COLLECTIVES[ins.opcode]
+            rep.collective_bytes += b
+            key = ins.opcode.replace("-start", "")
+            rep.collective_breakdown[key] = \
+                rep.collective_breakdown.get(key, 0.0) + b
+            rep.collective_counts[key] = rep.collective_counts.get(key, 0) + 1
+        # bytes: top-level materialization (result write + operand reads);
+        # aliasing/metadata ops are free.  Indexed ops only touch the
+        # slice/update region, not the whole buffer:
+        #   dynamic-slice/gather  -> read |result| + write |result|
+        #   dynamic-update-slice/scatter -> r/w the update operand only
+        if ins.opcode in ("dynamic-slice", "gather"):
+            rep.bytes_accessed += 2 * _shape_bytes(ins.result_type)
+        elif ins.opcode in ("dynamic-update-slice", "scatter"):
+            ops = _operand_names(ins.line)
+            upd = _shape_bytes(types.get(ops[1], "")) if len(ops) > 1 else 0
+            rep.bytes_accessed += 2 * upd
+        elif ins.opcode == "fusion":
+            rep.bytes_accessed += _fusion_bytes(ins, comps, types)
+        elif ins.opcode not in _POINTER_OPS and ins.opcode != "while":
+            b = _shape_bytes(ins.result_type)
+            for op in _operand_names(ins.line):
+                b += _shape_bytes(types.get(op, ""))
+            rep.bytes_accessed += b
+        if ins.opcode == "while":
+            m = _CALLS_RE.findall(ins.line)
+            trip = None
+            tm = _TRIP_RE.search(ins.line)
+            if tm:
+                trip = int(tm.group(1))
+            if trip is None:
+                trip = 1
+                rep.unknown_trip_counts += 1
+            body_cond = re.search(r"body=%?([\w.\-]+)", ins.line)
+            cond = re.search(r"condition=%?([\w.\-]+)", ins.line)
+            if body_cond:
+                calls.append((body_cond.group(1), float(trip)))
+            if cond:
+                calls.append((cond.group(1), float(trip)))
+        elif ins.opcode == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if m:
+                body = comps.get(m.group(1))
+                if body:    # count dots inside the fusion (flops only)
+                    for fin in body.instrs:
+                        if fin.opcode == "dot":
+                            rep.flops += _dot_flops(fin, types)
+                        elif fin.opcode == "convolution":
+                            rep.flops += _conv_flops(fin, types)
+        elif ins.opcode in ("call", "conditional"):
+            for group in _CALLS_RE.findall(ins.line):
+                for callee in group.split(","):
+                    calls.append((callee.strip().lstrip("%"), 1.0))
+    return rep, calls
+
+
+def analyze_hlo(hlo: str) -> CostReport:
+    comps = _parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    # module-wide name -> result type (names are unique in HLO dumps)
+    types: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            types[ins.name] = ins.result_type
+
+    total = CostReport()
+    seen_stack: List[str] = []
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.append(name)
+        local, calls = _comp_cost(comp, comps, types)
+        total.merged(local, mult)
+        for callee, m in calls:
+            walk(callee, mult * m)
+        seen_stack.pop()
+
+    walk(entry.name, 1.0)
+    return total

@@ -1,0 +1,8 @@
+from repro.checkpoint.store import (
+    latest_step,
+    list_checkpoints,
+    restore,
+    save,
+)
+
+__all__ = ["latest_step", "list_checkpoints", "restore", "save"]

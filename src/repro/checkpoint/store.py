@@ -1,0 +1,144 @@
+"""Atomic, mesh-agnostic checkpointing.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json     — step, flat key list, shapes/dtypes, config hash
+        arrays.npz        — flattened pytree leaves keyed by path string
+    <dir>/LATEST          — text file naming the newest complete step dir
+
+Write protocol: serialize into ``step_X.tmp/``, fsync, ``os.rename`` to the
+final name (atomic on POSIX), then update LATEST.  A crash mid-write leaves
+only a ``.tmp`` dir that restore ignores and the next save garbage-collects.
+
+Restore is mesh-agnostic: leaves come back as host numpy and are re-placed
+with ``jax.device_put(x, sharding)`` against whatever mesh/sharding the
+*restoring* job uses — this is what makes elastic rescaling (restore a
+16-chip checkpoint on 512 chips or vice versa) a plain restore (DESIGN §4).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3,
+         extra_meta: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` as checkpoint ``step``; prune to ``keep``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "tree_hash": hashlib.sha256(
+            json.dumps(sorted(arrays.keys())).encode()).hexdigest()[:16],
+        **(extra_meta or {}),
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(os.path.join(directory, "LATEST.tmp"),
+              os.path.join(directory, "LATEST"))
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = list_checkpoints(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+    for name in os.listdir(directory):
+        if name.endswith(".tmp"):
+            p = os.path.join(directory, name)
+            (shutil.rmtree if os.path.isdir(p) else os.remove)(p)
+
+
+def list_checkpoints(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_checkpoints(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, like, step: Optional[int] = None,
+            shardings=None):
+    """Load checkpoint ``step`` (default: latest) into the structure of
+    ``like``.  ``shardings``: optional matching pytree of NamedSharding —
+    leaves are device_put against it (mesh-agnostic reshard-on-load)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint {path} missing keys: {sorted(missing)[:5]}")
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(_key_str(p) for p in path_)
+        for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    new_leaves = []
+    for key, leaf in zip(paths, leaves):
+        a = arrays[key].astype(np.dtype(leaf.dtype)) \
+            if hasattr(leaf, "dtype") else arrays[key]
+        if key in flat_sh:
+            new_leaves.append(jax.device_put(a, flat_sh[key]))
+        else:
+            new_leaves.append(jax.numpy.asarray(a))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,27 @@
+from repro.config.base import (
+    FAMILIES,
+    SALS_125,
+    SALS_25,
+    MeshConfig,
+    ModelConfig,
+    SALSConfig,
+    ServeConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    asdict,
+)
+
+__all__ = [
+    "FAMILIES",
+    "SALS_125",
+    "SALS_25",
+    "MeshConfig",
+    "ModelConfig",
+    "SALSConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TrainConfig",
+    "asdict",
+]

@@ -1,0 +1,313 @@
+"""Configuration dataclasses for the SALS reproduction framework.
+
+Everything that varies between runs — model architecture, SALS compression
+settings, mesh/parallelism layout, training and serving hyper-parameters —
+is expressed as a frozen dataclass here. Architecture files under
+``repro/configs/`` instantiate :class:`ModelConfig`; launchers compose the
+rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model architecture
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "hybrid", "ssm", "encoder", "vlm")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for one model.
+
+    ``family`` selects the block structure:
+      dense   — attention + gated MLP          (llama/qwen/granite/gemma/yi)
+      moe     — attention + mixture-of-experts (llama4-scout, qwen3-moe)
+      hybrid  — parallel attention ‖ SSM heads (hymba)
+      ssm     — attention-free RWKV6 blocks    (rwkv6)
+      encoder — bidirectional attention        (hubert)
+      vlm     — dense LM + vision-prefix stub  (paligemma)
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    causal: bool = True
+    attn_logit_softcap: float = 0.0
+
+    # --- MLP ----------------------------------------------------------------
+    mlp_act: str = "swiglu"  # swiglu | geglu
+
+    # --- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0          # per-expert hidden dim (0 -> use d_ff)
+    n_shared_experts: int = 0  # llama4-style always-on shared expert
+    moe_capacity_factor: float = 1.25   # Switch-style per-seq expert capacity
+
+    # --- SSM / hybrid -------------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0         # hymba: mamba heads run in parallel with attn
+    ssm_conv: int = 4
+    rwkv_head_size: int = 64
+
+    # --- embeddings / frontends --------------------------------------------
+    tie_embeddings: bool = True
+    frontend: str = "none"     # none | audio_stub | vision_stub
+    vision_patches: int = 256  # number of prefix patch embeddings (vlm)
+
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # ----- derived ----------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        """Stacked multi-head key width — the SALS projection operates here."""
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.family != "encoder"
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, h = self.d_model, self.head_dim
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        per_layer = 0
+        if self.family == "ssm":  # rwkv6: time-mix + channel-mix
+            per_layer = 4 * d * d + d * self.d_ff * 2 + 6 * d  # approx
+        else:
+            attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.family == "moe":
+                ff_in = 3 * self.d_model * self.expert_d_ff
+                mlp = self.n_experts * ff_in + self.n_shared_experts * 3 * d * self.d_ff
+                mlp += d * self.n_experts  # router
+            else:
+                mlp = 3 * d * self.d_ff
+            if self.family == "hybrid":
+                ssm_d = self.ssm_heads * self.head_dim
+                mlp += 2 * d * ssm_d + ssm_d * d + ssm_d * (2 * self.ssm_state + 2)
+            per_layer = attn + mlp
+        return emb + head + self.n_layers * per_layer
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        act_mlp = (self.experts_per_token + self.n_shared_experts) * 3 * d * self.expert_d_ff
+        act_mlp += d * self.n_experts
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        return emb + head + self.n_layers * (attn + act_mlp)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 3),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            name=self.name + "-smoke",
+        )
+        if self.family == "moe":
+            # high capacity factor: drop-free routing so reduced-config
+            # prefill+decode exactly matches forward (tests)
+            small.update(n_experts=4, experts_per_token=min(2, self.experts_per_token),
+                         moe_d_ff=128, moe_capacity_factor=8.0)
+        if self.family == "hybrid":
+            small.update(ssm_heads=2, ssm_state=8)
+        if self.family == "ssm":
+            small.update(rwkv_head_size=16)
+        if self.family == "vlm":
+            small.update(vision_patches=16)
+        small.update(overrides)
+        return replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# SALS (the paper's technique)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SALSConfig:
+    """Sparse Attention in Latent Space settings (paper §4, §5.1).
+
+    ``rank_ratio``  d_r = r / kv_dim        (paper: 0.25 / 0.125)
+    ``score_ratio`` r* = score_ratio · r    (paper: 0.5)
+    ``n_critical``  top-k budget y          (paper: 432 @4k, doubled @32k)
+    ``n_sink``      always-kept prefix x    (paper: 16)
+    ``n_recent``    always-kept suffix z    (paper: 64; high-precision window)
+    ``v_bits``      value-cache quant bits  (paper: 4b @25%, 2b @12.5%;
+                    TPU-native int8/int4 used here, see DESIGN §7)
+    """
+
+    enabled: bool = True
+    rank_ratio: float = 0.25
+    score_ratio: float = 0.5
+    n_critical: int = 432
+    n_sink: int = 16
+    n_recent: int = 64
+    v_bits: int = 8
+    v_group: int = 64
+    k_latent_dtype: str = "bfloat16"   # "int8" = beyond-paper latent quant
+    skip_layers_front: int = 2
+    skip_layers_back: int = 1
+
+    def rank(self, kv_dim: int) -> int:
+        r = int(round(self.rank_ratio * kv_dim))
+        return max(8, min(kv_dim, _round_to(r, 8)))
+
+    def score_rank(self, kv_dim: int) -> int:
+        r = self.rank(kv_dim)
+        return max(8, _round_to(int(round(self.score_ratio * r)), 8))
+
+    def n_selected(self, seq_len: int) -> int:
+        """Total tokens attended per decode step."""
+        return min(seq_len, self.n_sink + self.n_critical + self.n_recent)
+
+    def sals_layer_mask(self, n_layers: int):
+        """Per-layer bool list — True where SALS sparsification is active."""
+        mask = []
+        for i in range(n_layers):
+            skip = i < self.skip_layers_front or i >= n_layers - self.skip_layers_back
+            mask.append(not skip)
+        return mask
+
+
+def _round_to(x: int, m: int) -> int:
+    return max(m, ((x + m - 1) // m) * m)
+
+
+# Paper settings (§5): SALS-25% and SALS-12.5%
+SALS_25 = SALSConfig(rank_ratio=0.25, v_bits=8, n_critical=432)
+SALS_125 = SALSConfig(rank_ratio=0.125, v_bits=4, n_critical=432)
+
+
+# ---------------------------------------------------------------------------
+# Mesh / parallelism
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """Device mesh + sharding strategy.
+
+    ``dist_mode`` for SALS decode:
+      "global" — paper-faithful: scores all-gathered, one global top-k
+      "local"  — beyond-paper: per-shard top-k + LSE merge (DESIGN §4)
+    """
+
+    shape: Tuple[int, ...] = (16, 16)
+    axis_names: Tuple[str, ...] = ("data", "model")
+    dist_mode: str = "local"
+    pipeline_stages: int = 1           # >1 enables GPipe over leading axis
+    seq_parallel: bool = True          # shard residual stream on model axis
+    remat: str = "block"               # none | block | full
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a != "model")
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell of the assigned grid."""
+
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatches: int = 1  # grad-accumulation splits for train cells
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Train / serve
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 300
+    batch_size: int = 8
+    seq_len: int = 256
+    lr: float = 3e-4
+    warmup_steps: int = 20
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    microbatches: int = 1
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    seed: int = 0
+    grad_compression: str = "none"   # none | int8_ef
+    ckpt_dir: str = "artifacts/ckpt"
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_seq_len: int = 4096
+    max_batch: int = 8
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    sals: SALSConfig = field(default_factory=SALSConfig)
+    seed: int = 0
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

@@ -1,0 +1,60 @@
+"""Architecture registry — one module per assigned architecture.
+
+``get_config(arch_id)`` resolves both the canonical ids used in the brief
+(e.g. ``llama4-scout-17b-a16e``) and their module names.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+# canonical id -> module name
+_ARCH_MODULES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "hubert-xlarge": "hubert_xlarge",
+    "hymba-1.5b": "hymba_1p5b",
+    "yi-9b": "yi_9b",
+    "qwen2-1.5b": "qwen2_1p5b",
+    "granite-3-8b": "granite_3_8b",
+    "gemma-2b": "gemma_2b",
+    "paligemma-3b": "paligemma_3b",
+    "rwkv6-7b": "rwkv6_7b",
+    # the paper's own evaluation models
+    "paper-llama2-7b": "paper_llama2_7b",
+    "paper-mistral-7b": "paper_mistral_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "llama4-scout-17b-a16e",
+    "qwen3-moe-235b-a22b",
+    "hubert-xlarge",
+    "hymba-1.5b",
+    "yi-9b",
+    "qwen2-1.5b",
+    "granite-3-8b",
+    "gemma-2b",
+    "paligemma-3b",
+    "rwkv6-7b",
+]
+
+PAPER_ARCHS: List[str] = ["paper-llama2-7b", "paper-mistral-7b"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    key = arch.replace("_", "-") if arch in _ARCH_MODULES else arch
+    if key not in _ARCH_MODULES:
+        # allow module-style names
+        rev = {v: k for k, v in _ARCH_MODULES.items()}
+        if arch in rev:
+            key = rev[arch]
+        else:
+            raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[key]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ASSIGNED_ARCHS + PAPER_ARCHS}

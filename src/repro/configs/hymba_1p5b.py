@@ -1,0 +1,21 @@
+"""hymba-1.5b — hybrid-head: parallel attention + mamba heads per layer.
+
+[arXiv:2411.13676; hf]
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    ssm_state=16,
+    ssm_heads=25,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,19 @@
+"""yi-9b — dense llama-arch GQA. [arXiv:2403.04652; hf]
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64_000,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+)

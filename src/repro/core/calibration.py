@@ -1,0 +1,94 @@
+"""Offline calibration (paper §4.2 / §5.1).
+
+Runs the model over a small calibration corpus, collects *pre-RoPE* key
+tensors per layer, and fits one rank-r PCA projector per layer
+(covariance + eigendecomposition, f64 numpy for stability — kv widths are
+256..1280 for the assigned archs, so the eigh is cheap on the host CPU).
+
+The paper samples 512×4096-token sequences from C4; offline we use the
+synthetic corpus from ``repro/data`` (same statistics pipeline, see
+DESIGN §6 — accuracy claims are validated as *proxies* on models trained in
+this repo, since no pretrained 7B weights ship with the container).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SALSConfig
+from repro.core.projection import fit_projector
+
+
+def collect_keys(key_fn: Callable[[jnp.ndarray], jnp.ndarray],
+                 batches: Iterable[np.ndarray],
+                 max_tokens: int = 65_536) -> np.ndarray:
+    """Run ``key_fn(tokens) -> (L, B, S, kvd)`` over batches, stack to
+    (L, n_tokens, kvd) on host, capped at ``max_tokens`` tokens."""
+    chunks = []
+    n = 0
+    for tokens in batches:
+        k = np.asarray(key_fn(jnp.asarray(tokens)), dtype=np.float32)
+        l, b, s, kvd = k.shape
+        chunks.append(k.reshape(l, b * s, kvd))
+        n += b * s
+        if n >= max_tokens:
+            break
+    out = np.concatenate(chunks, axis=1)
+    return out[:, :max_tokens]
+
+
+def fit_layer_projectors(keys: np.ndarray, rank: int) -> dict:
+    """keys: (L, n, kvd) -> {"u": (L, kvd, r) f32, "eigvals": (L, kvd)}."""
+    us, evs = [], []
+    for l in range(keys.shape[0]):
+        p = fit_projector(keys[l], rank)
+        us.append(p["u"])
+        evs.append(p["eigvals"])
+    return {"u": jnp.stack(us), "eigvals": jnp.stack(evs)}
+
+
+def adaptive_ranks(eigvals, target_energy: float = 0.90,
+                   round_to: int = 8) -> list:
+    """Layer-adaptive rank selection (paper appendix A: 'the required rank
+    varies substantially across layers, indicating that a layer-adaptive
+    rank selection scheme could further enhance compression').
+
+    eigvals: (L, kv_dim) descending per-layer eigenvalues.
+    Returns the per-layer rank capturing ``target_energy`` of the variance,
+    rounded up to ``round_to`` (MXU alignment).  The runtime cache uses
+    max(ranks) with per-layer masking (uniform-r scan); the BOOKKEEPING
+    compression uses the adaptive ranks — reported by
+    benchmarks/rank_analysis.py."""
+    ev = np.asarray(eigvals, np.float64)
+    ranks = []
+    for l in range(ev.shape[0]):
+        e = np.maximum(ev[l], 0)
+        c = np.cumsum(e) / max(e.sum(), 1e-12)
+        r = int(np.searchsorted(c, target_energy) + 1)
+        ranks.append(max(round_to, ((r + round_to - 1) // round_to)
+                         * round_to))
+    return ranks
+
+
+def random_layer_projectors(key, cfg: ModelConfig, sals: SALSConfig,
+                            n_layers: int) -> dict:
+    """Orthonormal random projectors — placeholder before calibration and
+    the stand-in used by the dry-run's ShapeDtypeStructs."""
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    keys = jax.random.split(key, n_layers)
+    qs = []
+    for k in keys:
+        g = jax.random.normal(k, (kvd, kvd), jnp.float32)
+        q, _ = jnp.linalg.qr(g)
+        qs.append(q[:, :r])
+    return {"u": jnp.stack(qs),
+            "eigvals": jnp.ones((n_layers, kvd), jnp.float32)}
+
+
+def projector_specs() -> dict:
+    from jax.sharding import PartitionSpec as P
+    return {"u": P(None, None, None), "eigvals": P(None, None)}

@@ -1,0 +1,233 @@
+"""Latent KV cache (paper §4.2 + §5.1 mixed-precision scheme).
+
+Per SALS layer the cache stores, for every position:
+  * ``k_lat``   — pre-RoPE keys projected to the r-dim latent space
+                  (bf16, or int8+scale under the beyond-paper latent quant),
+  * ``v_q``     — channel-group-quantized values (+ per-group scale/zero),
+and two small full-precision regions that are *always* attended:
+  * ``sink_k/v``   — the first ``n_sink`` tokens (pre-RoPE K),
+  * ``recent_k/v`` — ring buffer of the last ``n_recent`` tokens (pre-RoPE K),
+                     slot = position % n_recent.
+
+Sink/recent tokens also exist in the latent arrays (written once, never
+selected — the scoring mask excludes their ranges) so a token sliding out of
+the recent ring becomes selectable without any copying.
+
+All arrays carry a leading layer axis L so the decode loop can
+``lax.scan`` over layers; batch is axis 1, sequence axis 2.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SALSConfig
+from repro.core import quantization as qz
+from repro.core.projection import to_latent
+
+
+def init_latent_cache(cfg: ModelConfig, sals: SALSConfig, n_layers: int,
+                      batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    w = sals.n_recent
+    groups = kvd // sals.v_group
+    code_w = qz.quant_channels(kvd, sals.v_bits)
+    code_dtype = jnp.int8 if sals.v_bits == 8 else jnp.uint8
+    cache = {
+        "v_q": jnp.zeros((n_layers, batch, max_seq, code_w), code_dtype),
+        "v_scale": jnp.zeros((n_layers, batch, max_seq, groups), qz.SCALE_DTYPE),
+        "v_zero": jnp.zeros((n_layers, batch, max_seq, groups), qz.SCALE_DTYPE),
+        "sink_k": jnp.zeros((n_layers, batch, sals.n_sink, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+        "sink_v": jnp.zeros((n_layers, batch, sals.n_sink, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+        "recent_k": jnp.zeros((n_layers, batch, w, cfg.n_kv_heads,
+                               cfg.head_dim), dtype),
+        "recent_v": jnp.zeros((n_layers, batch, w, cfg.n_kv_heads,
+                               cfg.head_dim), dtype),
+    }
+    if sals.k_latent_dtype == "int8":
+        cache["k_lat"] = jnp.zeros((n_layers, batch, max_seq, r), jnp.int8)
+        cache["k_scale"] = jnp.zeros((n_layers, batch, max_seq), qz.SCALE_DTYPE)
+    else:
+        cache["k_lat"] = jnp.zeros((n_layers, batch, max_seq, r), dtype)
+    return cache
+
+
+def cache_bytes_per_token(cfg: ModelConfig, sals: SALSConfig) -> float:
+    """Stored bytes/token/layer — the compression bookkeeping (paper Table 1)."""
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    k_bytes = r * (1 if sals.k_latent_dtype == "int8" else 2)
+    if sals.k_latent_dtype == "int8":
+        k_bytes += 2  # scale
+    v_bytes = qz.bytes_per_token(kvd, sals.v_bits, sals.v_group)
+    return k_bytes + v_bytes
+
+
+def write_latents(layer_cache: dict, sals: SALSConfig, pos,
+                  k_lat: jnp.ndarray, v_flat: jnp.ndarray) -> dict:
+    """Write one token's latent K + quantized V at ``pos``.
+
+    k_lat: (B, r) pre-RoPE latent keys; v_flat: (B, kv_dim).
+    ``pos`` is a traced scalar.  Returns the updated layer cache (no ring
+    update — see :func:`write_ring`).
+    """
+    out = dict(layer_cache)
+    if sals.k_latent_dtype == "int8":
+        q, scale = qz.quantize_latent_int8(k_lat)
+        out["k_lat"] = _upd(layer_cache["k_lat"], q[:, None, :], pos)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            layer_cache["k_scale"], scale[:, None].astype(layer_cache["k_scale"].dtype),
+            pos, axis=1)
+    else:
+        out["k_lat"] = _upd(layer_cache["k_lat"],
+                            k_lat[:, None, :].astype(layer_cache["k_lat"].dtype), pos)
+    vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
+    out["v_q"] = _upd(layer_cache["v_q"], vq["q"][:, None, :], pos)
+    out["v_scale"] = _upd(layer_cache["v_scale"], vq["scale"][:, None, :], pos)
+    out["v_zero"] = _upd(layer_cache["v_zero"], vq["zero"][:, None, :], pos)
+    return out
+
+
+def write_ring(layer_cache: dict, sals: SALSConfig, pos,
+               k_pre: jnp.ndarray, v: jnp.ndarray) -> dict:
+    """Insert one token into the full-precision recent ring (and the sink
+    region while pos < n_sink).  k_pre/v: (B, n_kv, dh)."""
+    out = dict(layer_cache)
+    w = sals.n_recent
+    slot = jax.lax.rem(pos, w)
+    out["recent_k"] = _upd(layer_cache["recent_k"],
+                           k_pre[:, None].astype(layer_cache["recent_k"].dtype), slot)
+    out["recent_v"] = _upd(layer_cache["recent_v"],
+                           v[:, None].astype(layer_cache["recent_v"].dtype), slot)
+    in_sink = pos < sals.n_sink
+    sink_pos = jnp.where(in_sink, pos, 0)
+    new_sk = _upd(layer_cache["sink_k"],
+                  k_pre[:, None].astype(layer_cache["sink_k"].dtype), sink_pos)
+    new_sv = _upd(layer_cache["sink_v"],
+                  v[:, None].astype(layer_cache["sink_v"].dtype), sink_pos)
+    out["sink_k"] = jnp.where(in_sink, new_sk, layer_cache["sink_k"])
+    out["sink_v"] = jnp.where(in_sink, new_sv, layer_cache["sink_v"])
+    return out
+
+
+def read_latents(layer_cache: dict, sals: SALSConfig,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Full latent key array (B, S, r) in compute dtype."""
+    if sals.k_latent_dtype == "int8":
+        return qz.dequantize_latent_int8(layer_cache["k_lat"],
+                                         layer_cache["k_scale"], dtype)
+    return layer_cache["k_lat"].astype(dtype)
+
+
+def gather_latents(layer_cache: dict, sals: SALSConfig, idx: jnp.ndarray,
+                   dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather ``idx`` (B, Nc) latents + dequantized values WITHOUT key
+    reconstruction — feeds the fused reconstruct-RoPE-attention kernel
+    (kernels/sparse_recon_attention.py), which keeps K_C out of HBM.
+
+    Returns (lat (B, Nc, r), v_flat (B, Nc, kv_dim)).
+    """
+    lat = jnp.take_along_axis(layer_cache["k_lat"], idx[..., None], axis=-2)
+    if sals.k_latent_dtype == "int8":
+        scale = jnp.take_along_axis(layer_cache["k_scale"], idx, axis=-1)
+        lat = qz.dequantize_latent_int8(lat, scale, dtype)
+    else:
+        lat = lat.astype(dtype)
+    vq = {
+        "q": jnp.take_along_axis(layer_cache["v_q"], idx[..., None], axis=-2),
+        "scale": jnp.take_along_axis(layer_cache["v_scale"], idx[..., None], axis=-2),
+        "zero": jnp.take_along_axis(layer_cache["v_zero"], idx[..., None], axis=-2),
+    }
+    v_flat = qz.dequantize(vq, sals.v_bits, sals.v_group, dtype)
+    return lat, v_flat
+
+
+def gather_reconstruct(layer_cache: dict, u: jnp.ndarray, sals: SALSConfig,
+                       idx: jnp.ndarray, cfg: ModelConfig, dtype=jnp.bfloat16
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather ``idx`` (..., Nc) token latents + quant values, reconstruct.
+
+    Returns (k_pre (..., Nc, n_kv, dh), v (..., Nc, n_kv, dh)).
+    The gather stays in XLA (dynamic-gather); reconstruction is one matmul —
+    on TPU the fused Pallas kernel (kernels/sparse_recon_attention.py)
+    replaces reconstruct+RoPE+attend for the selected block.
+    """
+    lat = jnp.take_along_axis(layer_cache["k_lat"], idx[..., None], axis=-2)
+    if sals.k_latent_dtype == "int8":
+        scale = jnp.take_along_axis(layer_cache["k_scale"], idx, axis=-1)
+        lat = qz.dequantize_latent_int8(lat, scale, dtype)
+    else:
+        lat = lat.astype(dtype)
+    k_flat = (lat.astype(jnp.float32) @ u.astype(jnp.float32)
+              .T).astype(dtype)                                  # (..., Nc, kvd)
+    vq = {
+        "q": jnp.take_along_axis(layer_cache["v_q"], idx[..., None], axis=-2),
+        "scale": jnp.take_along_axis(layer_cache["v_scale"], idx[..., None], axis=-2),
+        "zero": jnp.take_along_axis(layer_cache["v_zero"], idx[..., None], axis=-2),
+    }
+    v_flat = qz.dequantize(vq, sals.v_bits, sals.v_group, dtype)
+    shape = (*idx.shape, cfg.n_kv_heads, cfg.head_dim)
+    return k_flat.reshape(shape), v_flat.reshape(shape)
+
+
+def prefill_latent_layer(cfg: ModelConfig, sals: SALSConfig, u: jnp.ndarray,
+                         k_pre: jnp.ndarray, v: jnp.ndarray, max_seq: int,
+                         dtype=jnp.bfloat16) -> dict:
+    """Build one layer's latent cache from prefill tensors.
+
+    k_pre/v: (B, S, n_kv, dh) pre-RoPE keys / values, S <= max_seq.
+    """
+    b, s = k_pre.shape[:2]
+    kvd = cfg.kv_dim
+    k_flat = k_pre.reshape(b, s, kvd)
+    v_flat = v.reshape(b, s, kvd)
+    lat = to_latent(u.astype(jnp.float32), k_flat)               # (B,S,r)
+    vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
+
+    def pad(x):
+        if s == max_seq:
+            return x
+        cfgp = [(0, 0), (0, max_seq - s)] + [(0, 0)] * (x.ndim - 2)
+        return jnp.pad(x, cfgp)
+
+    w = sals.n_recent
+    # ring layout: slot = position % w for the last min(s, w) positions
+    n_tail = min(s, w)
+    tail_pos = jnp.arange(s - n_tail, s)
+    slots = tail_pos % w
+    rk = jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim), dtype)
+    rv = jnp.zeros_like(rk)
+    rk = rk.at[:, slots].set(k_pre[:, s - n_tail:].astype(dtype))
+    rv = rv.at[:, slots].set(v[:, s - n_tail:].astype(dtype))
+
+    ns = sals.n_sink
+    sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
+    sv = jnp.zeros_like(sk)
+    n_head = min(s, ns)
+    sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
+    sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
+
+    out = {
+        "v_q": pad(vq["q"]),
+        "v_scale": pad(vq["scale"]),
+        "v_zero": pad(vq["zero"]),
+        "sink_k": sk, "sink_v": sv,
+        "recent_k": rk, "recent_v": rv,
+    }
+    if sals.k_latent_dtype == "int8":
+        q, scale = qz.quantize_latent_int8(lat)
+        out["k_lat"] = pad(q)
+        out["k_scale"] = pad(scale.astype(qz.SCALE_DTYPE))
+    else:
+        out["k_lat"] = pad(lat.astype(dtype))
+    return out
+
+
+def _upd(arr, val, pos):
+    return jax.lax.dynamic_update_slice_in_dim(arr, val.astype(arr.dtype),
+                                               pos, axis=1)

@@ -1,0 +1,85 @@
+"""SALS quality metrics: overlap score (paper §3.2, Fig. 2) and rank
+analysis (paper appendix A, Fig. 4)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SALSConfig
+from repro.core import selection as sel
+from repro.core.projection import effective_rank
+from repro.models.layers import apply_rope
+
+
+def overlap_score(q: jnp.ndarray, k_pre: jnp.ndarray, u: jnp.ndarray,
+                  cfg: ModelConfig, sals: SALSConfig, pos: int) -> jnp.ndarray:
+    """OS = Σ_{i∈C} p_i / Σ_i p_i  for one decode query.
+
+    q: (B, H, dh) pre-RoPE query at position ``pos``;
+    k_pre: (B, S, Hkv, dh) pre-RoPE keys of the context (S <= pos+1).
+    C = latent top-N_c ∪ sink ∪ recent (the full SALS selection).
+    Full attention mass p is computed with RoPE, exactly as the model would.
+    """
+    b, s = k_pre.shape[0], k_pre.shape[1]
+    r_star = sals.score_rank(cfg.kv_dim)
+
+    # full attention distribution (head-summed, post-RoPE — the reference)
+    positions = jnp.arange(s)[None, :]
+    q_r = apply_rope(q[:, None], jnp.full((b, 1), pos), cfg.rope_theta)[:, 0] \
+        if cfg.use_rope else q
+    k_r = apply_rope(k_pre, positions, cfg.rope_theta) if cfg.use_rope else k_pre
+    kk = jnp.repeat(k_r, cfg.group_size, axis=2)          # (B,S,H,dh)
+    logits = jnp.einsum("bhd,bshd->bhs", q_r.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    p_full = jax.nn.softmax(logits, axis=-1)              # (B,H,S)
+    p_tok = jnp.mean(p_full, axis=1)                      # (B,S) head-avg mass
+
+    # SALS selection
+    q_bar = sel.group_query(q, cfg)
+    k_lat = (k_pre.reshape(b, s, cfg.kv_dim).astype(jnp.float32)
+             @ u.astype(jnp.float32))
+    scores = sel.latent_scores(q_bar, u, k_lat, r_star)
+    mask = sel.selectable_mask(jnp.arange(s), pos, sals)[None, :]
+    mask = jnp.broadcast_to(mask, scores.shape)
+    idx, valid = sel.topk_global(scores, mask, min(sals.n_critical, s))
+
+    selected = jnp.zeros((b, s), bool)
+    selected = jax.vmap(lambda sl, ix, vd: sl.at[ix].set(vd))(selected, idx, valid)
+    always = (jnp.arange(s) < sals.n_sink) | (jnp.arange(s) > pos - sals.n_recent)
+    keep = selected | always[None, :]
+    keep = keep & (jnp.arange(s) <= pos)[None, :]
+    return jnp.sum(jnp.where(keep, p_tok, 0.0), axis=-1) / \
+        jnp.maximum(jnp.sum(jnp.where((jnp.arange(s) <= pos)[None, :],
+                                      p_tok, 0.0), axis=-1), 1e-9)
+
+
+def rank_pre_post_rope(k_pre: np.ndarray, cfg: ModelConfig, v: float = 90.0
+                       ) -> Tuple[int, int, np.ndarray, np.ndarray]:
+    """Effective Rank_l(v) of keys before vs after RoPE (paper Fig. 4).
+
+    k_pre: (n, Hkv, dh) pre-RoPE keys at positions 0..n-1.
+    Returns (rank_pre, rank_post, eig_pre, eig_post) on the stacked kv width.
+    """
+    n = k_pre.shape[0]
+    k_post = np.asarray(apply_rope(jnp.asarray(k_pre)[None], jnp.arange(n)[None],
+                                   cfg.rope_theta))[0]
+    def spec(k):
+        flat = np.asarray(k, np.float64).reshape(n, -1)
+        cov = flat.T @ flat
+        ev = np.linalg.eigvalsh(cov)[::-1]
+        return ev
+    ev_pre, ev_post = spec(k_pre), spec(k_post)
+    return (effective_rank(ev_pre, v), effective_rank(ev_post, v),
+            ev_pre, ev_post)
+
+
+def latent_mse(k_pre: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Relative reconstruction error of the rank-r projector on keys."""
+    flat = k_pre.reshape(-1, k_pre.shape[-2] * k_pre.shape[-1]) \
+        if k_pre.ndim > 2 else k_pre
+    flat = flat.astype(jnp.float32)
+    rec = (flat @ u) @ u.T
+    return jnp.sum((flat - rec) ** 2) / jnp.maximum(jnp.sum(flat ** 2), 1e-9)

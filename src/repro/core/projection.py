@@ -1,0 +1,97 @@
+"""Latent-space projection (paper §4.2, Lemma 1).
+
+The projector ``U_r ∈ R^{kv_dim × r}`` maps stacked multi-head pre-RoPE keys
+into the latent space: K̃ = K·U_r; reconstruction is K ≈ K̃·U_rᵀ. Eigenvectors
+are ordered by descending eigenvalue, so the leading ``r*`` latent dims carry
+the most energy — that ordering is what makes truncated-latent scoring
+(§4.3) work.
+
+Two groupings:
+  "joint"     — one projector over all kv heads (paper default, Lemma 1)
+  "per_shard" — block-diagonal over ``n_groups`` head groups (Palu-style
+                fallback that keeps reconstruction head-sharded under TP)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fit_projector(keys: np.ndarray, rank: int) -> dict:
+    """PCA fit of the projector from calibration keys.
+
+    keys: (n_samples, kv_dim) pre-RoPE stacked multi-head keys.
+    Returns {"u": (kv_dim, rank) f32, "eigvals": (kv_dim,) f32 descending}.
+    """
+    k = np.asarray(keys, dtype=np.float64)
+    cov = k.T @ k
+    eigvals, eigvecs = np.linalg.eigh(cov)  # ascending
+    order = np.argsort(eigvals)[::-1]
+    eigvals = eigvals[order]
+    u = eigvecs[:, order[:rank]]
+    return {
+        "u": jnp.asarray(u, dtype=jnp.float32),
+        "eigvals": jnp.asarray(eigvals, dtype=jnp.float32),
+    }
+
+
+def fit_projector_grouped(keys: np.ndarray, rank: int, n_groups: int) -> dict:
+    """Block-diagonal projector: independent PCA per head group.
+
+    Rank is split evenly across groups; the assembled ``u`` is
+    (kv_dim, rank) with disjoint row blocks (Lemma 1's B_r set).
+    """
+    k = np.asarray(keys, dtype=np.float64)
+    kv_dim = k.shape[-1]
+    assert kv_dim % n_groups == 0 and rank % n_groups == 0
+    gd, gr = kv_dim // n_groups, rank // n_groups
+    u = np.zeros((kv_dim, rank))
+    eigvals = []
+    for g in range(n_groups):
+        blk = k[:, g * gd:(g + 1) * gd]
+        cov = blk.T @ blk
+        ev, evec = np.linalg.eigh(cov)
+        order = np.argsort(ev)[::-1]
+        u[g * gd:(g + 1) * gd, g * gr:(g + 1) * gr] = evec[:, order[:gr]]
+        eigvals.append(ev[order])
+    return {
+        "u": jnp.asarray(u, dtype=jnp.float32),
+        "eigvals": jnp.asarray(np.stack(eigvals), dtype=jnp.float32),
+    }
+
+
+def random_projector(key, kv_dim: int, rank: int) -> dict:
+    """Orthonormal random projector — used for tests and un-calibrated init."""
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (kv_dim, kv_dim), jnp.float32))
+    return {"u": q[:, :rank], "eigvals": jnp.ones((kv_dim,), jnp.float32)}
+
+
+def to_latent(u: jnp.ndarray, k_flat: jnp.ndarray) -> jnp.ndarray:
+    """K̃ = K·U_r. k_flat: (..., kv_dim) -> (..., r)."""
+    return (k_flat.astype(jnp.float32) @ u.astype(jnp.float32)).astype(k_flat.dtype)
+
+
+def reconstruct(u: jnp.ndarray, lat: jnp.ndarray) -> jnp.ndarray:
+    """K ≈ K̃·U_rᵀ. lat: (..., r) -> (..., kv_dim)."""
+    return (lat.astype(jnp.float32) @ u.T.astype(jnp.float32)).astype(lat.dtype)
+
+
+def captured_energy(eigvals: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """Fraction of total variance captured by the leading ``rank`` components."""
+    ev = jnp.asarray(eigvals)
+    return jnp.sum(ev[..., :rank], axis=-1) / jnp.maximum(jnp.sum(ev, axis=-1), 1e-12)
+
+
+def effective_rank(eigvals: np.ndarray, v: float = 90.0) -> int:
+    """Rank_l(v) from the paper's appendix (Loki metric): smallest d s.t. the
+    top-d eigenvalues capture at least v% of total variance."""
+    ev = np.asarray(eigvals, dtype=np.float64)
+    ev = np.sort(ev)[::-1]
+    total = ev.sum()
+    if total <= 0:
+        return len(ev)
+    c = np.cumsum(ev) / total
+    return int(np.searchsorted(c, v / 100.0) + 1)

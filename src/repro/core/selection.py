@@ -1,0 +1,102 @@
+"""Critical-token selection in latent space (paper §4.3).
+
+Scores are cheap truncated inner products: the query is head-group-summed,
+projected once by U_r, truncated to the leading r* dims, and dotted against
+the leading r* dims of every cached latent key (which are *already stored* —
+no extra memory).
+
+Two top-k strategies:
+
+  ``global`` — paper-faithful: one top-N_c over the full sequence.  Under a
+               sequence-sharded cache XLA must all-gather the (B, S) scores.
+  ``hier``   — beyond-paper: scores reshaped to (B, G, S/G) groups matching
+               the kv_seq sharding; each group takes its local top-(N_c/G).
+               No score collective; attention later LSE-merges the groups
+               (see sparse_attention).  Equal per-group quotas make this an
+               approximation of global top-k — quality is measured by the
+               overlap-score benchmark.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SALSConfig
+
+NEG = -2.0 ** 30
+
+
+def group_query(q: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Sum query heads within each kv group: (B, H, dh) -> (B, kv_dim).
+
+    Σ_h q_h·k_{g(h)} = (Σ_{h∈g} q_h)·k_g — the latent score then approximates
+    the head-aggregated attention logit (DESIGN §7).
+    """
+    b = q.shape[0]
+    qg = q.reshape(b, cfg.n_kv_heads, cfg.group_size, cfg.head_dim)
+    return jnp.sum(qg, axis=2).reshape(b, cfg.kv_dim)
+
+
+def latent_scores(q_bar: jnp.ndarray, u: jnp.ndarray, k_lat: jnp.ndarray,
+                  r_star: int) -> jnp.ndarray:
+    """s_j = q̃[:r*]·k̃_j[:r*].  q_bar: (B, kv_dim); k_lat: (B, S, r).
+
+    The streaming matvec goes through the kernel dispatch (jnp on CPU,
+    Pallas latent_score kernel on TPU)."""
+    from repro.kernels import ops
+    q_lat = (q_bar.astype(jnp.float32) @ u.astype(jnp.float32)[:, :r_star])
+    return ops.latent_score(q_lat, k_lat)
+
+
+def selectable_mask(seq_positions: jnp.ndarray, pos, sals: SALSConfig
+                    ) -> jnp.ndarray:
+    """True where a cached token may be *selected* (not sink / not in the
+    recent ring / already written).  seq_positions: int32 positions array."""
+    lo = seq_positions >= sals.n_sink
+    hi = seq_positions <= pos - sals.n_recent
+    return lo & hi
+
+
+def topk_global(scores: jnp.ndarray, mask: jnp.ndarray, n_critical: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper-faithful top-N_c.  scores/mask: (B, S).
+
+    Returns (idx (B, Nc), valid (B, Nc)) — ``valid`` is False for slots that
+    fell on masked entries (short sequences), which the attention must mask.
+    """
+    masked = jnp.where(mask, scores, NEG)
+    vals, idx = jax.lax.top_k(masked, n_critical)
+    return idx, vals > NEG / 2
+
+
+def topk_grouped(scores: jnp.ndarray, mask: jnp.ndarray, n_critical: int,
+                 n_groups: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hierarchical top-k: (B, S) -> per-group (B, G, Nc/G) local indices.
+
+    Returned indices are LOCAL to each group (caller gathers from the
+    group-reshaped cache); valid has the same shape.
+
+    Implemented with argsort + slice rather than ``lax.top_k``: XLA's TopK
+    SPMD rule all-gathers the non-top-k (batch) dims, while the sort
+    partitioner keeps them sharded (§Perf iteration A3 — removed a
+    per-layer (B_global, G, S/G) f32 all-gather over the data axis).
+    """
+    b, s = scores.shape
+    assert s % n_groups == 0
+    k_loc = -(-n_critical // n_groups)
+    sg = jnp.where(mask, scores, NEG).reshape(b, n_groups, s // n_groups)
+    order = jnp.argsort(-sg, axis=-1)[..., :k_loc].astype(jnp.int32)
+    vals = jnp.take_along_axis(sg, order, axis=-1)
+    return order, vals > NEG / 2
+
+
+def ring_positions(pos, n_recent: int) -> jnp.ndarray:
+    """Global position held by each ring slot at decode step ``pos``
+    (after the current token was inserted at slot pos % W).
+
+    slot i holds position p = pos - ((pos - i) mod W); negative -> empty.
+    """
+    i = jnp.arange(n_recent)
+    return pos - (pos - i) % n_recent  # jnp % is floored -> non-negative

@@ -1,0 +1,198 @@
+"""SALS decode attention: selective reconstruction + exact sparse attention
+(paper §4.4, Algorithm 1).
+
+One decode step per SALS layer:
+
+  1. project the new token's pre-RoPE key to the latent space and append;
+     quantize + append its value; insert (k_pre, v) into the recent ring;
+  2. score all cached latents with the truncated latent query (§4.3);
+  3. top-N_c select (global = paper-faithful, grouped = distributed-local);
+  4. gather + reconstruct ONLY the selected latents (K̃_C·U_rᵀ), apply RoPE
+     at their original positions, dequantize their values;
+  5. exact attention over [sink ∪ selected ∪ recent] — grouped mode merges
+     per-group partial attention with flash-style LSE rescaling, which under
+     a sequence-sharded cache lowers to one small all-reduce of
+     (B,H,dh)+(B,H) instead of an all-gather of scores or selected K/V.
+
+The grouped formulation is written in plain jnp over a leading group axis
+that matches the kv_seq sharding, so the SAME code runs unsharded in unit
+tests and SPMD-partitioned under pjit on the production mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SALSConfig
+from repro.core import latent_cache as lc
+from repro.core import selection as sel
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.attention import out_proj, qkv_proj, repeat_kv
+from repro.models.layers import apply_rope
+
+NEG = sel.NEG
+
+
+def _region_logits(q_r: jnp.ndarray, k_pre: jnp.ndarray,
+                   positions: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """RoPE + GQA QK^T for one region of pre-RoPE keys.
+
+    q_r: (B, H, dh) already-RoPE'd f32 query.
+    k_pre: (B, [G,] N, Hkv, dh); positions broadcastable to (B, [G,] N).
+    Returns logits (B, [G,] H, N) in f32 (scaled, softcapped).
+
+    GQA is contracted with an explicit (Hkv, group) split of the query —
+    no repeat_kv materialization, and under a sequence-sharded cache the
+    grouped einsum keeps the G axis intact so GSPMD computes each group's
+    logits on its own shard (reshape-merging a sharded G axis made the
+    partitioner all-gather the selected keys — §Perf iteration A3).
+    """
+    if cfg.use_rope:
+        k = apply_rope(k_pre, jnp.broadcast_to(positions, k_pre.shape[:-2]),
+                       cfg.rope_theta)
+    else:
+        k = k_pre
+    b = q_r.shape[0]
+    q_g = q_r.reshape(b, cfg.n_kv_heads, cfg.group_size, cfg.head_dim) \
+        .astype(jnp.float32)
+    if k.ndim == 5:                                        # (B,G,N,Hkv,dh)
+        logits = jnp.einsum("bkrd,bgnkd->bgkrn", q_g, k.astype(jnp.float32))
+        g, n = k.shape[1], k.shape[2]
+        logits = logits.reshape(b, g, cfg.n_heads, n)
+    else:                                                  # (B,N,Hkv,dh)
+        logits = jnp.einsum("bkrd,bnkd->bkrn", q_g, k.astype(jnp.float32))
+        logits = logits.reshape(b, cfg.n_heads, k.shape[1])
+    logits = logits * (cfg.head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    return logits
+
+
+def _partial_attend(logits: jnp.ndarray, v: jnp.ndarray, cfg: ModelConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Flash-style partial softmax stats over the last axis.
+
+    logits: (..., H, N) f32; v: (..., N, Hkv, dh) — UNEXPANDED kv heads;
+    the GQA value contraction splits H into (Hkv, group) instead of
+    materializing repeat_kv'd values (×group memory).
+    Returns (m (...,H), l (...,H), o (...,H,dh)) with o = Σ exp(x-m)·v.
+    """
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(logits <= NEG / 2, 0.0, p)   # fully-masked rows -> 0
+    l = jnp.sum(p, axis=-1)
+    lead = logits.shape[:-2]
+    n = logits.shape[-1]
+    p_g = p.reshape(*lead, cfg.n_kv_heads, cfg.group_size, n)
+    o = jnp.einsum("...krn,...nkd->...krd", p_g, v.astype(jnp.float32))
+    return m, l, o.reshape(*lead, cfg.n_heads, cfg.head_dim)
+
+
+def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
+                       x: jnp.ndarray, pos, cfg: ModelConfig,
+                       sals: SALSConfig, n_groups: int = 1
+                       ) -> Tuple[jnp.ndarray, dict]:
+    """One-token SALS attention for one layer.
+
+    x: (B, 1, d); pos: traced scalar position of this token.
+    n_groups=1 -> paper-faithful global top-k; >1 -> grouped/hierarchical.
+    Returns (y (B,1,d), updated layer cache).
+    """
+    b = x.shape[0]
+    kvd = cfg.kv_dim
+    r_star = sals.score_rank(kvd)
+    w = sals.n_recent
+
+    q, k_new, v_new = qkv_proj(params, x, cfg)             # (B,1,H,dh)/(B,1,Hkv,dh)
+    k_flat = k_new.reshape(b, kvd)
+    v_flat = v_new.reshape(b, kvd)
+
+    # ---- stage 1: append to caches ---------------------------------------
+    k_lat_new = (k_flat.astype(jnp.float32) @ u.astype(jnp.float32))
+    layer_cache = lc.write_latents(layer_cache, sals, pos, k_lat_new, v_flat)
+    layer_cache = lc.write_ring(layer_cache, sals, pos, k_new[:, 0], v_new[:, 0])
+
+    # ---- stage 2: latent scoring ------------------------------------------
+    q_bar = sel.group_query(q[:, 0], cfg)                  # (B, kvd)
+    k_lat = lc.read_latents(layer_cache, sals, x.dtype)    # (B, S, r)
+    k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+    scores = sel.latent_scores(q_bar, u, k_lat, r_star)    # (B, S) f32
+    s_max = scores.shape[1]
+    positions_all = jnp.arange(s_max)
+    mask = sel.selectable_mask(positions_all, pos, sals)[None, :]
+    mask = jnp.broadcast_to(mask, scores.shape)
+
+    # RoPE'd query for the exact attention
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    q_r = (apply_rope(q, pos_b, cfg.rope_theta) if cfg.use_rope else q)[:, 0]
+
+    # ---- sink + recent region (always attended, full precision) ----------
+    ns = sals.n_sink
+    sink_pos = jnp.arange(ns)
+    rec_pos = sel.ring_positions(pos, w)
+    sr_k = jnp.concatenate([layer_cache["sink_k"], layer_cache["recent_k"]],
+                           axis=1)                         # (B, ns+W, Hkv, dh)
+    sr_v = jnp.concatenate([layer_cache["sink_v"], layer_cache["recent_v"]],
+                           axis=1)
+    sr_positions = jnp.concatenate([sink_pos, rec_pos])
+    sr_valid = (sr_positions >= 0) & (sr_positions <= pos)
+    sr_logits = _region_logits(q_r, sr_k, sr_positions[None, :], cfg)
+    sr_logits = jnp.where(sr_valid[None, None, :], sr_logits, NEG)
+
+    if n_groups <= 1:
+        # ---- paper-faithful: one global top-k -----------------------------
+        # Selected block goes through the fused reconstruct→RoPE→attention
+        # kernel (ops dispatch: jnp oracle on CPU, Pallas on TPU); its flash
+        # partials LSE-merge with the sink/recent window partials.
+        idx, valid = sel.topk_global(scores, mask, sals.n_critical)
+        lat_sel, v_sel_flat = lc.gather_latents(layer_cache, sals, idx, x.dtype)
+        m_c, l_c, o_c = ops.sparse_recon_attention(
+            q[:, 0], lat_sel, v_sel_flat, u, idx, valid, pos,
+            n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope)
+        m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
+        m_all = jnp.maximum(m_c, m_sr)                      # (B,H)
+        wc = jnp.exp(m_c - m_all)
+        wsr = jnp.exp(m_sr - m_all)
+        denom = wc * l_c + wsr * l_sr
+        numer = wc[..., None] * o_c + wsr[..., None] * o_sr
+        o = numer / jnp.maximum(denom, 1e-30)[..., None]
+    else:
+        # ---- grouped: per-shard top-k + LSE merge -------------------------
+        g = n_groups
+        s_loc = s_max // g
+        idx, valid = sel.topk_grouped(scores, mask, sals.n_critical, g)
+        grouped_cache = _group_view(layer_cache, g, sals)
+        k_sel, v_sel = lc.gather_reconstruct(grouped_cache, u, sals, idx, cfg,
+                                             x.dtype)      # (B,G,k,Hkv,dh)
+        gpos = idx + (jnp.arange(g) * s_loc)[None, :, None]
+        sel_logits = _region_logits(q_r, k_sel, gpos, cfg)  # (B,G,H,k)
+        sel_logits = jnp.where(valid[:, :, None, :], sel_logits, NEG)
+        m_g, l_g, o_g = _partial_attend(sel_logits, v_sel, cfg)  # (B,G,H[,dh])
+        m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
+        m_all = jnp.maximum(jnp.max(m_g, axis=1), m_sr)     # (B,H)
+        wg = jnp.exp(m_g - m_all[:, None, :])               # (B,G,H)
+        wsr = jnp.exp(m_sr - m_all)
+        denom = jnp.sum(wg * l_g, axis=1) + wsr * l_sr
+        numer = jnp.sum(wg[..., None] * o_g, axis=1) + wsr[..., None] * o_sr
+        o = numer / jnp.maximum(denom, 1e-30)[..., None]
+
+    y = out_proj(params, o[:, None].astype(x.dtype), cfg)
+    return y, layer_cache
+
+
+def _group_view(layer_cache: dict, g: int, sals: SALSConfig) -> dict:
+    """Reshape the seq axis of the latent arrays to (G, S/G)."""
+    out = {}
+    for name in ("k_lat", "v_q", "v_scale", "v_zero"):
+        a = layer_cache[name]
+        b, s = a.shape[:2]
+        out[name] = a.reshape(b, g, s // g, *a.shape[2:])
+    if "k_scale" in layer_cache:
+        a = layer_cache["k_scale"]
+        b, s = a.shape
+        out["k_scale"] = a.reshape(b, g, s // g)
+    return out

@@ -1,0 +1,15 @@
+from repro.data.corpus import (
+    CalibrationSampler,
+    SyntheticCorpus,
+    byte_decode,
+    byte_encode,
+    make_batches,
+)
+
+__all__ = [
+    "CalibrationSampler",
+    "SyntheticCorpus",
+    "byte_decode",
+    "byte_encode",
+    "make_batches",
+]

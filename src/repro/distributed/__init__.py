@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    ShardingCtx,
+    constrain,
+    current_ctx,
+    default_rules,
+    logical_spec,
+    use_sharding,
+)
+
+__all__ = [
+    "ShardingCtx",
+    "constrain",
+    "current_ctx",
+    "default_rules",
+    "logical_spec",
+    "use_sharding",
+]

@@ -1,0 +1,4 @@
+from repro.ft.supervisor import Supervisor, run_with_restarts
+from repro.ft.straggler import StragglerMonitor
+
+__all__ = ["StragglerMonitor", "Supervisor", "run_with_restarts"]

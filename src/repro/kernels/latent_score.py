@@ -1,0 +1,59 @@
+"""Pallas TPU kernel — SALS critical-token scoring (paper §4.3).
+
+One blocked matvec per batch row: scores = K̃[:, :r*] · q̃[:r*].  The seq axis
+is tiled (default 1024 rows) so one (bs × r*) latent tile + the r* query
+vector live in VMEM; the reduction runs on the MXU with r* padded to a
+128 multiple by the caller's rank rounding.
+
+This is the memory-bound first pass of SALS decode (reads s·r* elements —
+the ``s·r*`` term of the §4.5 traffic model), so the kernel's job is purely
+to stream K̃ through VMEM at HBM bandwidth.
+
+Validated on CPU via ``interpret=True`` against ``ref.latent_score_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 1024
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _score_kernel(q_ref, k_ref, o_ref):
+    q = q_ref[0].astype(jnp.float32)                       # (r*,)
+    k = k_ref[0].astype(jnp.float32)                       # (bs, r*)
+    o_ref[0] = jax.lax.dot_general(
+        k, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def latent_score_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                        block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
+    """q_lat: (B, r*); k_lat: (B, S, r>=r*) -> (B, S) f32 scores."""
+    b, r_star = q_lat.shape
+    s = k_lat.shape[1]
+    k_lat = k_lat[..., :r_star]
+    bs = min(block_s, s)
+    s_p = ((s + bs - 1) // bs) * bs
+    if s_p != s:
+        k_lat = jnp.pad(k_lat, ((0, 0), (0, s_p - s), (0, 0)))
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=(b, s_p // bs),
+        in_specs=[
+            pl.BlockSpec((1, r_star), lambda b_, i: (b_, 0)),
+            pl.BlockSpec((1, bs, r_star), lambda b_, i: (b_, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda b_, i: (b_, i)),
+        out_shape=jax.ShapeDtypeStruct((b, s_p), jnp.float32),
+        interpret=_interpret(),
+    )(q_lat, k_lat)
+    return out[:, :s]

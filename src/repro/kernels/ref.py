@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are small, obviously-correct implementations: naive materialized
+attention, naive latent scoring, naive gather→reconstruct→RoPE→attend.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, dh); positions broadcastable to (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, softcap: float = 0.0,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Naive attention. q: (B,Sq,H,dh), k/v: (B,Sk,H,dh) -> (B,Sq,H,dh)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        cm = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        logits = jnp.where(cm[None, None], logits, NEG_INF)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def latent_score_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray) -> jnp.ndarray:
+    """q_lat: (B, r*), k_lat: (B, S, r>=r*) -> (B, S) f32 scores."""
+    r_star = q_lat.shape[-1]
+    return jnp.einsum("br,bsr->bs", q_lat.astype(jnp.float32),
+                      k_lat[..., :r_star].astype(jnp.float32))
+
+
+def sparse_recon_attention_ref(q: jnp.ndarray, lat_sel: jnp.ndarray,
+                               v_sel: jnp.ndarray, u: jnp.ndarray,
+                               sel_pos: jnp.ndarray, valid: jnp.ndarray,
+                               q_pos: jnp.ndarray, *, n_kv: int,
+                               theta: float = 10_000.0,
+                               softcap: float = 0.0,
+                               use_rope: bool = True
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused reconstruct→RoPE→partial-attention oracle (decode, one token).
+
+    q: (B, H, dh) pre-RoPE query; lat_sel: (B, N, r) selected latents;
+    v_sel: (B, N, kvd) dequantized selected values; u: (kvd, r);
+    sel_pos/valid: (B, N); q_pos: scalar or (B,).
+    Returns flash-style partials (m (B,H), l (B,H), o (B,H,dh)).
+    """
+    b, h, dh = q.shape
+    n = lat_sel.shape[1]
+    kvd = u.shape[0]
+    group = h // (kvd // dh)
+    k_flat = lat_sel.astype(jnp.float32) @ u.T.astype(jnp.float32)  # (B,N,kvd)
+    k_pre = k_flat.reshape(b, n, n_kv, dh)
+    if use_rope:
+        k_r = _rope(k_pre, jnp.broadcast_to(sel_pos, (b, n)), theta)
+        q_r = _rope(q[:, None], jnp.broadcast_to(
+            jnp.asarray(q_pos).reshape(-1, 1), (b, 1)), theta)[:, 0]
+    else:
+        k_r, q_r = k_pre, q
+    kk = jnp.repeat(k_r, group, axis=2)                             # (B,N,H,dh)
+    logits = jnp.einsum("bhd,bnhd->bhn", q_r.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * dh ** -0.5
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, jnp.exp(logits - m[..., None]))
+    l = jnp.sum(p, axis=-1)
+    vv = jnp.repeat(v_sel.reshape(b, n, n_kv, dh), group, axis=2)
+    o = jnp.einsum("bhn,bnhd->bhd", p, vv.astype(jnp.float32))
+    return m, l, o

@@ -1,0 +1,189 @@
+"""Pallas TPU kernel — fused reconstruct→RoPE→sparse-attention (SALS
+stages 3-4, the paper's fused Triton kernel adapted to TPU; DESIGN §3).
+
+After XLA gathers the selected latents K̃_C (B, N, r) and dequantized values
+V_C (B, N, kvd), this kernel runs one VMEM-resident pass per (batch, N-tile):
+
+    1. reconstruct   K_C = K̃_C · U_rᵀ        — (bn×r)·(r×kvd) on the MXU,
+    2. rotate        RoPE(K_C) at the tokens' *original* positions
+                     (cos/sin computed in-register on the VPU),
+    3. score         Q·K_Cᵀ (GQA via a batched head-group matmul),
+    4. accumulate    online-softmax partials (m, l, acc) in VMEM scratch.
+
+The reconstructed keys NEVER touch HBM — that is the paper's fusion insight
+restated for the HBM→VMEM→VREG hierarchy (a GPU Triton kernel instead keeps
+them in shared memory).  Returns flash-style partials so the caller can
+LSE-merge with the sink/recent window partials (and, under a sequence-
+sharded cache, across shards with one tiny all-reduce).
+
+Working set per grid cell ≈ bn·r + bn·kvd + r·kvd + H·dh floats; with
+bn=128..512, r≤512, kvd≤1280 this stays well under VMEM.
+
+Validated on CPU via ``interpret=True`` vs ``ref.sparse_recon_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+DEFAULT_BLOCK_N = 256
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _rope_rotate(x32: jnp.ndarray, pos: jnp.ndarray, theta: float
+                 ) -> jnp.ndarray:
+    """Half-rotation RoPE. x32: (..., n, heads, dh) f32; pos: (..., n)."""
+    dh = x32.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos[..., :, None].astype(jnp.float32) * freqs    # (..., n, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x32[..., :half], x32[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _sra_kernel(q_ref, lat_ref, v_ref, u_ref, pos_ref, valid_ref, qpos_ref,
+                m_ref, l_ref, o_ref, m_s, l_s, acc_s, *,
+                n_kv: int, group: int, theta: float, softcap: float,
+                use_rope: bool, nb: int, bn: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    h, dh = q_ref.shape[1], q_ref.shape[2]
+    # ---- 1. reconstruct: K = lat · Uᵀ  (bn, r)·(r, kvd) -------------------
+    lat = lat_ref[0].astype(jnp.float32)                    # (bn, r)
+    u = u_ref[...].astype(jnp.float32)                      # (kvd, r)
+    k_flat = jax.lax.dot_general(
+        lat, u, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (bn, kvd)
+    k_pre = k_flat.reshape(bn, n_kv, dh)
+
+    # ---- 2. RoPE at original positions ------------------------------------
+    pos = pos_ref[0]                                        # (bn,) int32
+    if use_rope:
+        k_r = _rope_rotate(k_pre, pos, theta)
+        q_r = _rope_rotate(q_ref[0].astype(jnp.float32)[None],
+                           qpos_ref[0][None].astype(jnp.float32),
+                           theta)[0]                        # (H, dh)
+    else:
+        k_r = k_pre
+        q_r = q_ref[0].astype(jnp.float32)
+
+    # ---- 3. GQA scores: (n_kv, G, dh) · (n_kv, dh, bn) ---------------------
+    q_g = q_r.reshape(n_kv, group, dh)
+    k_t = jnp.swapaxes(k_r, 0, 1)                           # (n_kv, bn, dh)
+    logits = jax.lax.dot_general(
+        q_g, k_t, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                 # (n_kv, G, bn)
+    logits = logits.reshape(h, bn) * (dh ** -0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    valid = valid_ref[0] != 0                               # (bn,)
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    # ---- 4. online-softmax accumulate --------------------------------------
+    v = v_ref[0].astype(jnp.float32)                        # (bn, kvd)
+    m_prev = m_s[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))   # (H,)
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, p)            # (H, bn)
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
+    # GQA value contraction: (n_kv, G, bn) · (n_kv, bn, dh)
+    p_g = p.reshape(n_kv, group, bn)
+    v_g = jnp.swapaxes(v.reshape(bn, n_kv, dh), 0, 1)       # (n_kv, bn, dh)
+    pv = jax.lax.dot_general(
+        p_g, v_g, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                 # (n_kv, G, dh)
+    acc_s[...] = acc_s[...] * alpha[:, None] + pv.reshape(h, dh)
+    m_s[:, 0] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        m_ref[0] = m_s[:, 0]
+        l_ref[0] = l_s[:, 0]
+        o_ref[0] = acc_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "theta", "softcap",
+                                             "use_rope", "block_n"))
+def sparse_recon_attention_pallas(
+        q: jnp.ndarray, lat_sel: jnp.ndarray, v_sel: jnp.ndarray,
+        u: jnp.ndarray, sel_pos: jnp.ndarray, valid: jnp.ndarray,
+        q_pos: jnp.ndarray, *, n_kv: int, theta: float = 10_000.0,
+        softcap: float = 0.0, use_rope: bool = True,
+        block_n: int = DEFAULT_BLOCK_N
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused decode partial-attention over the selected token block.
+
+    q: (B, H, dh) pre-RoPE query; lat_sel: (B, N, r); v_sel: (B, N, kvd);
+    u: (kvd, r); sel_pos/valid: (B, N); q_pos: scalar or (B,).
+    Returns (m (B,H), l (B,H), o (B,H,dh)) flash partials, f32.
+    """
+    b, h, dh = q.shape
+    n = lat_sel.shape[1]
+    r = lat_sel.shape[2]
+    kvd = u.shape[0]
+    group = h // n_kv
+    bn = min(block_n, n)
+    n_p = ((n + bn - 1) // bn) * bn
+    if n_p != n:
+        pad = ((0, 0), (0, n_p - n))
+        lat_sel = jnp.pad(lat_sel, (*pad, (0, 0)))
+        v_sel = jnp.pad(v_sel, (*pad, (0, 0)))
+        sel_pos = jnp.pad(sel_pos, pad)
+        valid = jnp.pad(valid, pad)
+    nb = n_p // bn
+    q_pos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    valid_i = valid.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _sra_kernel, n_kv=n_kv, group=group, theta=theta, softcap=softcap,
+        use_rope=use_rope, nb=nb, bn=bn)
+
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda b_, j: (b_, 0, 0)),     # q
+            pl.BlockSpec((1, bn, r), lambda b_, j: (b_, j, 0)),     # latents
+            pl.BlockSpec((1, bn, kvd), lambda b_, j: (b_, j, 0)),   # values
+            pl.BlockSpec((kvd, r), lambda b_, j: (0, 0)),           # U (resident)
+            pl.BlockSpec((1, bn), lambda b_, j: (b_, j)),           # positions
+            pl.BlockSpec((1, bn), lambda b_, j: (b_, j)),           # valid
+            pl.BlockSpec((1,), lambda b_, j: (b_,)),                # q_pos
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
+            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
+            pl.BlockSpec((1, h, dh), lambda b_, j: (b_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(q, lat_sel, v_sel, u, sel_pos, valid_i, q_pos_b)
+    return m, l, o

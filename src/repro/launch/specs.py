@@ -1,0 +1,438 @@
+"""Per-(arch × shape × mesh) step assembly for launchers and the dry-run.
+
+Three lowerable step kinds (matching the assigned shape grid):
+
+  train   — ``train_step(state, batch)``: fwd + chunked CE + AdamW.
+            Sharding: FSDP('data') × TP('model') params, DP batch over
+            ('pod','data'), sequence-parallel residual, remat=block.
+  prefill — ``prefill_step(params, projectors, batch)``: build the decode
+            cache (SALS latent projection + value quant on the fly).
+  decode  — ``serve_step(params, projectors, cache, tokens, pos)``: one new
+            token against a seq_len KV cache (SALS sparse attention).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation); ``build_*`` return (fn, in_shardings, out_shardings, arg_shapes)
+ready for ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import (MeshConfig, ModelConfig, SALSConfig, ShapeConfig,
+                          TrainConfig)
+from repro.core import calibration as cal
+from repro.distributed.sharding import (default_rules, fsdp_specs,
+                                        sanitize_pspecs, tree_shardings,
+                                        use_sharding)
+from repro.models import transformer as tf
+from repro.train import trainer
+
+BIG_PARAMS = 20e9        # above this: bf16 Adam moments (DESIGN §7)
+P_REP = P()
+
+
+# ---------------------------------------------------------------------------
+# SALS settings per shape (paper §5.1/§5.2 scaling)
+# ---------------------------------------------------------------------------
+
+def sals_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                   rank_ratio: float = 0.25,
+                   k_latent_dtype: str = "bfloat16") -> Optional[SALSConfig]:
+    if not (cfg.has_attention and cfg.is_decoder):
+        return None
+    s = shape.seq_len
+    if s <= 4096:
+        n_crit, n_recent = 432, 64          # paper: x=16, y=432, z=64
+    elif s <= 32768:
+        n_crit, n_recent = 1024, 128        # paper doubles at 32k
+    else:
+        n_crit, n_recent = 2048, 128        # 500k: constant working set
+    return SALSConfig(
+        rank_ratio=rank_ratio,
+        v_bits=8 if rank_ratio >= 0.25 else 4,
+        n_critical=n_crit, n_sink=16, n_recent=n_recent,
+        v_group=min(64, cfg.kv_dim),
+        k_latent_dtype=k_latent_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one grid cell (no cache/state — see build_*)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+    if cfg.family == "encoder":
+        batch = {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_patches, cfg.d_model), bf16)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: dict) -> dict:
+    ba = rules["batch"]
+    sp = {}
+    for name in input_specs(cfg, shape):
+        if name == "tokens" and shape.kind == "decode":
+            sp[name] = P(ba)
+        elif name in ("tokens", "labels"):
+            sp[name] = P(ba, None)
+        else:  # frames / patches
+            sp[name] = P(ba, None, None)
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode/prefill)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cache_shapes, rules: dict) -> Any:
+    """PartitionSpec pytree matching init_cache's structure, by leaf name."""
+    ba, sa = rules["batch"], rules["kv_seq"]
+
+    def by_name(path, leaf) -> P:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        nd = len(leaf.shape)
+        if name in ("k_lat", "v_q", "v_scale", "v_zero"):
+            return P(None, ba, sa, *([None] * (nd - 3)))
+        if name == "k_scale":
+            return P(None, ba, sa)
+        if name in ("sink_k", "sink_v", "recent_k", "recent_v"):
+            return P(None, ba, None, None, None)
+        if name in ("k", "v"):               # full-precision skip layers:
+            # seq-sharded: the 1-token DUS at a traced position stays local
+            # (masked select per shard) and the softmax reduction over the
+            # sharded kv axis lowers to tiny max/sum psums (§Perf A4)
+            return P(None, ba, sa if isinstance(sa, str) else None,
+                     None, None)
+        if name == "wkv":                    # rwkv6 (L,B,H,hs,hs)
+            return P(None, ba, None, None, None)
+        if name in ("tm_x", "cm_x"):
+            return P(None, ba, None)
+        if name == "ssm":                    # hybrid (L,B,H,P,N)
+            return P(None, ba, *([None] * (nd - 2)))
+        if name == "conv":                   # hybrid (L,B,K-1,inner)
+            return P(None, ba, None, None)
+        return P(*([None] * nd))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)[0]
+    treedef = jax.tree_util.tree_structure(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [by_name(path, leaf) for path, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# Param/state specs
+# ---------------------------------------------------------------------------
+
+def train_state_pspecs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                       state_shapes, *, strategy: str = "tp_sp") -> dict:
+    if strategy == "fsdp":
+        # pure ZeRO-3: no TP placements; shard every param's largest dim
+        # over ALL mesh axes (256/512-way)
+        base = jax.tree.map(
+            lambda s: P(*([None] * len(s.shape))), state_shapes["params"],
+            is_leaf=lambda x: hasattr(x, "shape"))
+        psp = fsdp_specs(base, state_shapes["params"], mesh,
+                         tuple(mesh.axis_names))
+    elif strategy == "ep_dp":
+        # MoE: experts stay EP('model') — their weights are far too big to
+        # stream FSDP-style (qwen3: 4.8 GB/layer) and the dispatch
+        # all-to-all is tiny.  Every DENSE weight (attention, router,
+        # embeddings) drops its TP placement and is FSDP('data')-streamed
+        # instead (~142 MB/layer at qwen3) — eliminating the per-layer
+        # TP activation all-reduces that dominate tp_sp (§Perf B2).
+        flat = jax.tree_util.tree_flatten_with_path(
+            tf.param_specs(cfg))[0]
+        treedef = jax.tree_util.tree_structure(tf.param_specs(cfg))
+        leaves = []
+        for path, spec in flat:
+            keys = [str(p.key) for p in path if hasattr(p, "key")]
+            if "moe" in keys and any(k in ("w_gate", "w_up", "w_down")
+                                     for k in keys):
+                leaves.append(spec)            # keep EP placement
+            else:
+                leaves.append(P(*([None] * len(spec))))
+        psp = jax.tree_util.tree_unflatten(treedef, leaves)
+        psp = sanitize_pspecs(psp, state_shapes["params"], mesh)
+        psp = fsdp_specs(psp, state_shapes["params"], mesh, "data")
+    else:
+        psp = sanitize_pspecs(tf.param_specs(cfg), state_shapes["params"],
+                              mesh)
+        if "data" in mesh.axis_names:
+            psp = fsdp_specs(psp, state_shapes["params"], mesh, "data")
+    out = {"params": psp, "opt": {
+        "mu": psp, "nu": psp, "count": P_REP}}
+    if "master" in state_shapes["opt"]:
+        out["opt"]["master"] = psp
+    if "ef" in state_shapes:
+        out["ef"] = psp
+    return out
+
+
+def train_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                mesh_cfg: MeshConfig, strategy: str) -> dict:
+    """Logical-axis rules per train parallelism strategy.
+
+    tp_sp — Megatron TP('model') + sequence-parallel residual + FSDP('data')
+            weights.  Pays per-layer activation all-gather/reduce-scatter
+            on the model axis: right for models too big for pure FSDP.
+    fsdp  — ZeRO-3 over ALL mesh axes, batch spread over every axis (one
+            sequence per chip at train_4k).  NO per-layer activation
+            collectives — weights stream instead (8.8 GB/model pass ≪
+            930 GB of TP activation traffic at yi-9b: §Perf iteration C2).
+            When the global batch can't cover the mesh, batch covers the
+            data axes and the residual seq shards over 'model'.
+    """
+    rules = default_rules(mesh_cfg, shape)
+    if strategy == "ep_dp":
+        data_axes = tuple(a for a in mesh.axis_names if a != "model")
+        rules["batch"] = data_axes if len(data_axes) > 1 else data_axes[0]
+        rules.update(residual_seq="model", heads=None, kv_heads=None,
+                     mlp=None, experts="model", seq=None, vocab="model")
+        return rules
+    if strategy != "fsdp":
+        return rules
+    n_dev = mesh.devices.size
+    if shape.global_batch % n_dev == 0:
+        # one (or more) whole sequences per chip: all compute embarrassingly
+        # batch-parallel, zero per-layer activation collectives.  (The
+        # data+seq-parallel variant — batch on 'data', seq on 'model',
+        # vocab on 'model' — was measured and REFUTED: un-sharding heads
+        # replicates attention compute 16x; see §Perf C3.)
+        rules["batch"] = tuple(mesh.axis_names)
+        rules["residual_seq"] = None
+    else:
+        rules["batch"] = tuple(a for a in mesh.axis_names if a != "model")
+        rules["residual_seq"] = "model"
+    rules.update(heads=None, kv_heads=None, mlp=None, experts=None,
+                 seq=None, vocab=None)
+    return rules
+
+
+SERVE_TP_BUDGET = 4 * 2**30   # bf16 param bytes per chip before adding FSDP
+
+
+def serve_param_pspecs(cfg: ModelConfig, param_shapes, mesh: Mesh) -> dict:
+    """Serve weights: TP('model'), plus FSDP('data') only when TP-16 alone
+    exceeds ~4 GiB/chip of weights.
+
+    Models that fit (yi-9b: 1.1 GiB/chip at TP-16) keep weights replicated
+    across 'data' — pure TP emits NO weight collectives at decode.  Big
+    models (llama4 13.8 GiB/chip, qwen3 29 GiB/chip at TP-16) add the data
+    axis; with one-token activations GSPMD then emits per-layer activation
+    psums (KBs) rather than weight all-gathers (§Perf iteration A2: the
+    always-FSDP variant paid ×45 × 16 MiB weight all-gathers per step on
+    yi-9b×decode_32k)."""
+    psp = sanitize_pspecs(tf.param_specs(cfg), param_shapes, mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp_bytes = 2 * cfg.param_count() / axis_sizes.get("model", 1)
+    if "data" in mesh.axis_names and tp_bytes > SERVE_TP_BUDGET:
+        psp = fsdp_specs(psp, param_shapes, mesh, "data")
+    return psp
+
+
+# ---------------------------------------------------------------------------
+# Step builders — each returns (fn, args, in_shardings, out_shardings)
+# ---------------------------------------------------------------------------
+
+def _shardings(mesh, pspec_tree):
+    return tree_shardings(mesh, pspec_tree)
+
+
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                mesh_cfg: MeshConfig, *, microbatches: int = 1,
+                remat: str = "block", strategy: str = "tp_sp"):
+    tcfg = TrainConfig(steps=1000, batch_size=shape.global_batch,
+                       seq_len=shape.seq_len, microbatches=microbatches)
+    rules = train_rules(cfg, shape, mesh, mesh_cfg, strategy)
+    moment_dtype = jnp.bfloat16 if cfg.param_count() > BIG_PARAMS \
+        else jnp.float32
+
+    key = jax.random.PRNGKey(0)
+    state_shapes = jax.eval_shape(
+        lambda k: trainer.init_state(k, cfg, tcfg, moment_dtype=moment_dtype),
+        key)
+    batch_shapes = input_specs(cfg, shape)
+
+    state_sp = train_state_pspecs(cfg, tcfg, mesh, state_shapes,
+                                  strategy=strategy)
+    batch_sp = batch_pspecs(cfg, shape, rules)
+    metrics_sp = {k: P_REP for k in
+                  ("loss", "ce", "aux", "lr", "grad_norm")}
+
+    step = trainer.make_train_step(cfg, tcfg, remat=remat)
+
+    def fn(state, batch):
+        with use_sharding(mesh, rules):
+            return step(state, batch)
+
+    return (fn, (state_shapes, batch_shapes),
+            (_shardings(mesh, state_sp), _shardings(mesh, batch_sp)),
+            (_shardings(mesh, state_sp), _shardings(mesh, metrics_sp)))
+
+
+def _eval_cache_shapes(cfg, sals, batch, max_seq):
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.eval_shape(
+        functools.partial(tf.init_cache, cfg, sals, batch, max_seq, dtype))
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  mesh_cfg: MeshConfig, *, rank_ratio: float = 0.25,
+                  sals_enabled: bool = True,
+                  k_latent_dtype: str = "bfloat16"):
+    rules = default_rules(mesh_cfg, shape)
+    sals = sals_for_shape(cfg, shape, rank_ratio, k_latent_dtype) \
+        if sals_enabled else None
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(
+        lambda k: tf.init_params(k, cfg, jnp.dtype(cfg.dtype)), key)
+    param_sp = serve_param_pspecs(cfg, param_shapes, mesh)
+    batch_shapes = input_specs(cfg, shape)
+    batch_sp = batch_pspecs(cfg, shape, rules)
+
+    if cfg.family == "encoder":
+        def fn(params, batch):
+            with use_sharding(mesh, rules):
+                h, _ = tf.hidden(params, cfg, batch)
+                return h
+        out_sp = P(rules["batch"], None, None)
+        return (fn, (param_shapes, batch_shapes),
+                (_shardings(mesh, param_sp), _shardings(mesh, batch_sp)),
+                NamedSharding(mesh, out_sp))
+
+    proj_shapes, proj_sp = _projector_stand_ins(cfg, sals)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s += cfg.vision_patches          # patch prefix occupies cache slots
+    cache_shapes = _eval_cache_shapes(cfg, sals, b, s)
+    cache_sp = sanitize_pspecs(cache_pspecs(cache_shapes, rules),
+                               cache_shapes, mesh)
+    logits_sp = sanitize_pspecs(
+        P(rules["batch"], rules["vocab"]),
+        jax.ShapeDtypeStruct((b, cfg.vocab_size), jnp.float32), mesh)
+
+    def fn(params, projectors, batch):
+        with use_sharding(mesh, rules):
+            return tf.prefill(params, projectors, cfg, sals, batch, s)
+
+    return (fn, (param_shapes, proj_shapes, batch_shapes),
+            (_shardings(mesh, param_sp), _shardings(mesh, proj_sp),
+             _shardings(mesh, batch_sp)),
+            (NamedSharding(mesh, logits_sp), _shardings(mesh, cache_sp)))
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 mesh_cfg: MeshConfig, *, rank_ratio: float = 0.25,
+                 sals_enabled: bool = True, dist_mode: Optional[str] = None,
+                 k_latent_dtype: str = "bfloat16"):
+    rules = default_rules(mesh_cfg, shape)
+    sals = sals_for_shape(cfg, shape, rank_ratio, k_latent_dtype) \
+        if sals_enabled else None
+    dist_mode = dist_mode or mesh_cfg.dist_mode
+    if shape.global_batch == 1 and sals is not None:
+        # long-context b=1: the skip-layer full caches can't batch-shard.
+        # Replicated they cost 2·s·kv_dim·2B·n_skip per device — shard seq
+        # over 'model' only when that exceeds ~4 GiB (seq-sharded decode
+        # attention costs ~0.26 s of softmax-merge collectives at 500k,
+        # so don't pay it when the cache fits: §Perf A6, measured both ways)
+        n_skip = sals.skip_layers_front + sals.skip_layers_back
+        repl = 2 * shape.seq_len * cfg.kv_dim * 2 * n_skip
+        if repl > 4 * 2**30:
+            rules["kv_seq_full"] = "model"
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(
+        lambda k: tf.init_params(k, cfg, jnp.dtype(cfg.dtype)), key)
+    param_sp = serve_param_pspecs(cfg, param_shapes, mesh)
+    proj_shapes, proj_sp = _projector_stand_ins(cfg, sals)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        s += cfg.vision_patches          # patch prefix occupies cache slots
+    cache_shapes = _eval_cache_shapes(cfg, sals, b, s)
+    cache_sp = sanitize_pspecs(cache_pspecs(cache_shapes, rules),
+                               cache_shapes, mesh)
+    tok_shapes = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sp = P(rules["batch"])
+    logits_sp = sanitize_pspecs(
+        P(rules["batch"], rules["vocab"]),
+        jax.ShapeDtypeStruct((b, cfg.vocab_size), jnp.float32), mesh)
+
+    # local top-k groups = number of kv_seq shards
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sa = rules["kv_seq"]
+    sa_axes = (sa,) if isinstance(sa, str) else tuple(sa or ())
+    n_groups = 1
+    if dist_mode == "local" and sals is not None:
+        for a in sa_axes:
+            n_groups *= axis_sizes[a]
+        if n_groups > 1 and s % n_groups:
+            n_groups = 1
+
+    def fn(params, projectors, cache, tokens, pos):
+        with use_sharding(mesh, rules):
+            return tf.decode_step(params, projectors, cache, tokens, pos,
+                                  cfg, sals, n_groups)
+
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    return (fn,
+            (param_shapes, proj_shapes, cache_shapes, tok_shapes, pos_shape),
+            (_shardings(mesh, param_sp), _shardings(mesh, proj_sp),
+             _shardings(mesh, cache_sp), NamedSharding(mesh, tok_sp),
+             NamedSharding(mesh, P_REP)),
+            (NamedSharding(mesh, logits_sp), _shardings(mesh, cache_sp)))
+
+
+def _projector_stand_ins(cfg: ModelConfig, sals: Optional[SALSConfig]):
+    if sals is None:
+        return None, None
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    shapes = {
+        "u": jax.ShapeDtypeStruct((cfg.n_layers, kvd, r), jnp.float32),
+        "eigvals": jax.ShapeDtypeStruct((cfg.n_layers, kvd), jnp.float32),
+    }
+    return shapes, cal.projector_specs()
+
+
+def build_step(kind: str, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               mesh_cfg: MeshConfig, **kw):
+    if kind == "train":
+        return build_train(cfg, shape, mesh, mesh_cfg, **kw)
+    if kind == "prefill":
+        return build_prefill(cfg, shape, mesh, mesh_cfg, **kw)
+    if kind == "decode":
+        return build_decode(cfg, shape, mesh, mesh_cfg, **kw)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Grid / skip logic (DESIGN §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+def cell_status(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason)."""
+    if shape.kind == "decode" and not cfg.is_decoder:
+        return False, "encoder-only: no decode step"
+    return True, ""

@@ -1,0 +1,120 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        [--reduced] [--steps 200] [--microbatches 2] [--grad-compression] \
+        [--ckpt-dir artifacts/ckpt/qwen2] [--resume]
+
+On this CPU container ``--reduced`` (tiny same-family config) is the
+practical mode; the full configs are exercised by the dry-run.  The same
+code path drives a real pod: the mesh comes from ``make_host_mesh`` here
+and from ``make_production_mesh`` under the dry-run, everything else is
+identical (pjit + logical-rule sharding + checkpoint/restart).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.config import MeshConfig, ShapeConfig, TrainConfig
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config
+from repro.data import SyntheticCorpus, make_batches
+from repro.distributed.sharding import default_rules, use_sharding
+from repro.ft import StragglerMonitor, run_with_restarts
+from repro.launch.mesh import make_host_mesh
+from repro.train import trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=ASSIGNED_ARCHS + PAPER_ARCHS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--remat", default="none",
+                    choices=("none", "block", "save_dots"))
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(steps=args.steps, batch_size=args.batch_size,
+                       seq_len=args.seq_len, lr=args.lr,
+                       microbatches=args.microbatches, seed=args.seed)
+    mesh = make_host_mesh()
+    mesh_cfg = MeshConfig(shape=tuple(mesh.devices.shape),
+                          axis_names=mesh.axis_names, seq_parallel=False)
+    shape_cfg = ShapeConfig("cli", "train", args.seq_len, args.batch_size)
+    rules = default_rules(mesh_cfg, shape_cfg)
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=args.seed)
+
+    def make_batches_for(start_step: int):
+        gen = make_batches(corpus, tcfg.batch_size, tcfg.seq_len, start_step)
+        if cfg.family == "encoder":
+            # frontend stub: frames = embeddings of the token stream
+            def to_frames(b):
+                emb = jax.random.normal(
+                    jax.random.PRNGKey(0), (cfg.vocab_size, cfg.d_model),
+                    jnp.float32) * 0.02
+                return {"frames": emb[b["tokens"]],
+                        "labels": b["labels"] % cfg.vocab_size}
+            return ({k: v for k, v in to_frames(b).items()} for b in gen)
+        if cfg.family == "vlm":
+            def add_patches(b):
+                bsz = b["tokens"].shape[0]
+                import numpy as np
+                rng = np.random.default_rng(0)
+                b = dict(b)
+                b["patches"] = rng.normal(
+                    0, 0.02, (bsz, cfg.vision_patches, cfg.d_model)
+                ).astype(np.float32)
+                return b
+            return (add_patches(b) for b in gen)
+        return gen
+
+    def train_once(start_step: int):
+        key = jax.random.PRNGKey(tcfg.seed)
+        state = trainer.init_state(key, cfg, tcfg, jnp.float32,
+                                   ef_residual=args.grad_compression)
+        if start_step and args.ckpt_dir:
+            state, start_step = ckpt.restore(args.ckpt_dir, state)
+            print(f"[train] restored step {start_step}")
+        if args.grad_compression:
+            step_fn = trainer.make_compressed_train_step(
+                cfg, tcfg, mesh, ("data",), remat=args.remat)
+        else:
+            step_fn = trainer.make_train_step(cfg, tcfg, remat=args.remat)
+        mon = StragglerMonitor()
+        with use_sharding(mesh, rules):
+            state = trainer.train_loop(
+                cfg, tcfg, state=state, step_fn=step_fn,
+                batches=make_batches_for(start_step),
+                start_step=start_step,
+                ckpt_dir=args.ckpt_dir or None, straggler=mon)
+        if mon.flags:
+            print(f"[train] straggler steps flagged: {mon.flags[:5]}")
+        return state
+
+    if args.ckpt_dir and args.resume:
+        run_with_restarts(train_once, args.ckpt_dir,
+                          max_restarts=args.max_restarts)
+    else:
+        train_once(0)
+
+
+if __name__ == "__main__":
+    main()

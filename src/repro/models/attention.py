@@ -1,0 +1,243 @@
+"""Multi-head / grouped-query / multi-query attention.
+
+Three execution paths share one parameter set:
+
+  * ``attend_train``   — full (flash-style) attention over the whole block,
+                         causal or bidirectional.  Used by train_step and by
+                         the encoder family.
+  * ``attend_prefill`` — same math as train, but also returns the pre-RoPE
+                         K and the V tensors so the caller can build caches.
+  * ``attend_decode_full`` — one-token decode against a *full-precision*
+                         KV cache (post-RoPE keys, standard layout).  Used
+                         for the SALS skip-layers (0, 1, last) and for the
+                         ``sals.enabled=False`` baseline.
+
+The SALS decode path (latent cache) lives in ``repro/core/sparse_attention``;
+it reuses ``qkv_proj`` / ``out_proj`` from here.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.models.layers import apply_rope, truncated_normal
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16 softmax without NaN
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    std = d ** -0.5
+    params = {
+        "wq": truncated_normal(kq, (d, qd), std, dtype),
+        "wk": truncated_normal(kk, (d, kvd), std, dtype),
+        "wv": truncated_normal(kv, (d, kvd), std, dtype),
+        "wo": truncated_normal(ko, (qd, d), qd ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((qd,), dtype)
+        params["bk"] = jnp.zeros((kvd,), dtype)
+        params["bv"] = jnp.zeros((kvd,), dtype)
+    return params
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    specs = {
+        "wq": P(None, "model"),
+        "wk": P(None, "model"),
+        "wv": P(None, "model"),
+        "wo": P("model", None),
+    }
+    if cfg.qkv_bias:
+        specs.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def qkv_proj(params: dict, x: jnp.ndarray, cfg: ModelConfig
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> q (B,S,H,dh), k/v (B,S,Hkv,dh).  No RoPE applied."""
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def out_proj(params: dict, attn_out: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """attn_out: (B, S, H, dh) -> (B, S, d)."""
+    b, s = attn_out.shape[:2]
+    y = attn_out.reshape(b, s, cfg.q_dim)
+    return y @ params["wo"]
+
+
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(B, S, Hkv, dh) -> (B, S, Hkv*group, dh) for GQA head expansion."""
+    if group == 1:
+        return x
+    b, s, hkv, dh = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, hkv, group, dh))
+    return x.reshape(b, s, hkv * group, dh)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (pure-jnp; the Pallas flash kernel mirrors this — see
+# repro/kernels/flash_attention.py, validated against kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+         causal: bool, softcap: float = 0.0,
+         q_positions: Optional[jnp.ndarray] = None,
+         kv_positions: Optional[jnp.ndarray] = None,
+         mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Scaled dot-product attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Sk, H, dh) (already GQA-expanded).
+    ``causal`` masks by position when q/kv_positions given, else by index.
+    Returns (B, Sq, H, dh).
+    """
+    dh = q.shape[-1]
+    scale = dh ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if causal:
+        if q_positions is None:
+            q_positions = jnp.arange(q.shape[1])
+        if kv_positions is None:
+            kv_positions = jnp.arange(k.shape[1])
+        cm = q_positions[..., :, None] >= kv_positions[..., None, :]  # (Sq, Sk)
+        cm = jnp.broadcast_to(cm, (*logits.shape[:-2], *cm.shape[-2:]))
+        logits = jnp.where(cm, logits, NEG_INF)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def attend_train(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: Optional[jnp.ndarray] = None,
+                 prefix_len: int = 0) -> jnp.ndarray:
+    """Full attention over a block: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = qkv_proj(params, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = repeat_kv(k, cfg.group_size)
+    v = repeat_kv(v, cfg.group_size)
+    o = ops.flash_attention(q, k, v,
+                            causal=cfg.causal and not prefix_len,
+                            softcap=cfg.attn_logit_softcap,
+                            prefix_len=prefix_len)
+    o = constrain(o, ("batch", "seq", "heads", None))
+    return out_proj(params, o, cfg)
+
+
+def attend_prefill(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                   positions: Optional[jnp.ndarray] = None,
+                   prefix_len: int = 0
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Like attend_train but also returns (pre-RoPE K, V) for cache builds.
+
+    Returns (y, k_pre_rope (B,S,Hkv,dh), v (B,S,Hkv,dh)).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k_pre, v = qkv_proj(params, x, cfg)
+    q_r = apply_rope(q, positions, cfg.rope_theta) if cfg.use_rope else q
+    k_r = apply_rope(k_pre, positions, cfg.rope_theta) if cfg.use_rope else k_pre
+    kk = repeat_kv(k_r, cfg.group_size)
+    vv = repeat_kv(v, cfg.group_size)
+    o = ops.flash_attention(q_r, kk, vv,
+                            causal=cfg.causal and not prefix_len,
+                            softcap=cfg.attn_logit_softcap,
+                            prefix_len=prefix_len)
+    y = out_proj(params, o, cfg)
+    return y, k_pre, v
+
+
+def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                       k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                       pos: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a full-precision cache.
+
+    x: (B, 1, d).  k_cache/v_cache: (B, S_max, Hkv, dh) — k_cache holds
+    *post-RoPE* keys (standard layout; these layers never reconstruct).
+    pos: scalar int32 — current token position (same across batch; the
+    serve engine right-aligns).  Returns (y, new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k, v = qkv_proj(params, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # pin the cache layout (batch [, seq] sharded; heads replicated) —
+    # without the constraint GSPMD propagates the wk column sharding into
+    # the cache and re-gathers the whole 32k cache every step (§Perf A3)
+    cache_axes = ("batch", "kv_seq_full", "kv_heads", None)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, constrain(k, ("batch", "seq", "kv_heads", None))
+        .astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, constrain(v, ("batch", "seq", "kv_heads", None))
+        .astype(v_cache.dtype), pos, axis=1)
+    k_cache = constrain(k_cache, cache_axes)
+    v_cache = constrain(v_cache, cache_axes)
+    s_max = k_cache.shape[1]
+    valid = jnp.arange(s_max) <= pos  # (S,)
+    # GQA einsum without repeat_kv materialization (×group memory); bf16
+    # operands with f32 accumulation — .astype(f32) on the cache would
+    # materialize a full f32 copy of the 32k cache every step (§Perf A4)
+    q_g = q[:, 0].reshape(b, cfg.n_kv_heads, cfg.group_size, cfg.head_dim)
+    logits = jnp.einsum("bkrd,bskd->bkrs", q_g, k_cache.astype(q.dtype),
+                        preferred_element_type=jnp.float32) \
+        * cfg.head_dim ** -0.5
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(
+            logits / cfg.attn_logit_softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkrs,bskd->bkrd", p.astype(q.dtype),
+                   v_cache.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    y = out_proj(params, o, cfg)
+    return y, k_cache, v_cache
+
+
+def init_full_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    """Cache pytree for one full-precision layer."""
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

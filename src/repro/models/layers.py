@@ -1,0 +1,141 @@
+"""Basic neural-net layers: RMSNorm, RoPE, gated MLPs, embeddings.
+
+Pure-functional style: every module is an ``init(key, cfg) -> params`` plus
+an ``apply(params, x, ...) -> y`` pair operating on plain dict pytrees, and a
+``specs(...)`` pytree of :class:`jax.sharding.PartitionSpec` used by the
+launchers (see ``repro/distributed/sharding.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def truncated_normal(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(cfg: ModelConfig, dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_specs() -> dict:
+    return {"scale": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (half-rotation convention, llama-style)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,), f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., :half], x32[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in = d ** -0.5
+    std_out = f ** -0.5
+    return {
+        "w_gate": truncated_normal(k1, (d, f), std_in, dtype),
+        "w_up": truncated_normal(k2, (d, f), std_in, dtype),
+        "w_down": truncated_normal(k3, (f, d), std_out, dtype),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    gate = x @ params["w_gate"]
+    up = x @ params["w_up"]
+    if act == "geglu":
+        gate = jax.nn.gelu(gate, approximate=True)
+    else:
+        gate = jax.nn.silu(gate)
+    h = constrain(gate * up, ("batch", "seq", "mlp"))
+    return h @ params["w_down"]
+
+
+def mlp_specs() -> dict:
+    return {
+        "w_gate": P(None, "model"),
+        "w_up": P(None, "model"),
+        "w_down": P("model", None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig, dtype) -> dict:
+    # stddev 1/sqrt(d): with the sqrt(d) apply-time scale the embedding
+    # output is unit-variance and tied-head logits start near zero
+    params = {
+        "embedding": truncated_normal(key, (cfg.vocab_size, cfg.d_model),
+                                      cfg.d_model ** -0.5, dtype)
+    }
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        params["lm_head"] = truncated_normal(
+            k2, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, dtype)
+    return params
+
+
+def embed_apply(params: dict, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    # gemma-style sqrt(d) scaling keeps tied-embedding logits sane
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dtype=x.dtype)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def unembed_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = x @ params["embedding"].T.astype(x.dtype)
+    else:
+        logits = x @ params["lm_head"]
+    logits = constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+    if cfg.attn_logit_softcap:  # reuse for final-logit softcap if configured
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    return logits
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    specs = {"embedding": P("model", None)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")
+    return specs

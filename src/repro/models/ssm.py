@@ -1,0 +1,348 @@
+"""State-space sequence mixers: Mamba2-style SSD heads (hymba) and RWKV6.
+
+Mamba head (hymba's parallel-SSM branch) uses the chunked SSD formulation —
+within-chunk quadratic (masked matmuls, MXU-friendly) + inter-chunk state
+carried by a ``lax.scan`` — which is the TPU-native adaptation of the mamba2
+kernel (DESIGN §3: no warp-level scan on TPU; chunked matmuls instead).
+
+RWKV6 (Finch) uses data-dependent per-channel decay; its recurrence is
+evaluated with a ``lax.scan`` over time (state (B, H, hs, hs)).  A chunked
+variant is possible but numerically delicate with per-channel decay; the
+scan is the correctness-first baseline (see DESIGN §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import truncated_normal
+
+SSD_CHUNK = 128
+RWKV_CHUNK = 128
+
+
+# ===========================================================================
+# Mamba2-style multihead SSD (hymba parallel branch)
+# ===========================================================================
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h, p, n = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    inner = h * p
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        "w_in": truncated_normal(k1, (d, 2 * inner), std, dtype),   # x, z
+        "conv": truncated_normal(k2, (cfg.ssm_conv, inner), 0.2, dtype),
+        "w_dt": truncated_normal(k3, (d, h), std, jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),                      # A = -exp
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_bc": truncated_normal(k4, (d, 2 * n), std, dtype),       # B, C
+        "w_out": truncated_normal(k5, (inner, d), inner ** -0.5, dtype),
+        "norm_scale": jnp.ones((inner,), dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    return {
+        "w_in": P(None, "model"),
+        "conv": P(None, "model"),
+        "w_dt": P(None, None),
+        "dt_bias": P(None),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "w_bc": P(None, None),
+        "w_out": P("model", None),
+        "norm_scale": P("model"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C).  ``state`` holds the
+    last K-1 inputs for decode continuity: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out
+
+
+def _ssd_chunk_scan(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    bmat: jnp.ndarray, cmat: jnp.ndarray,
+                    h0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: h_t = exp(A·dt_t)·h_{t-1} + dt_t·(x_t ⊗ B_t); y_t = C_t·h_t.
+
+    x: (B,S,H,P) f32; dt: (B,S,H) f32 (post-softplus); a_log: (H,)
+    bmat/cmat: (B,S,N); h0: (B,H,P,N).  Returns (y (B,S,H,P), h_final).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(SSD_CHUNK, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    def resh(t):  # (B, S, ...) -> (nc, B, q, ...)
+        return jnp.moveaxis(t.reshape(b, nc, q, *t.shape[2:]), 1, 0)
+
+    xs, dts, bs, cs = resh(x), resh(dt), resh(bmat), resh(cmat)
+    neg_a = -jnp.exp(a_log)  # (H,) < 0
+
+    def step(h_in, inp):
+        xc, dtc, bc, cc = inp            # (B,q,H,P), (B,q,H), (B,q,N) ×2
+        la = dtc * neg_a                 # log-decay increments (B,q,H)
+        lcum = jnp.cumsum(la, axis=1)    # L_t inclusive (B,q,H)
+        # inter-chunk: y_in[t] = exp(L_t) * C_t · h_in
+        y_in = jnp.einsum("bqn,bhpn->bqhp", cc, h_in) * jnp.exp(lcum)[..., None]
+        # within-chunk: scores[t,s] = (C_t·B_s)·exp(L_t-L_s)·dt_s, s<=t
+        cb = jnp.einsum("bqn,bkn->bqk", cc, bc)                  # (B,q,q)
+        ldiff = lcum[:, :, None, :] - lcum[:, None, :, :]        # (B,q,k,H)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        dec = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        scores = cb[:, :, :, None] * dec * dtc[:, None, :, :]    # (B,q,k,H)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xc)
+        # state update: h_out = exp(L_Q)·h_in + Σ_s exp(L_Q-L_s)·dt_s·x_s⊗B_s
+        ltot = lcum[:, -1, :]                                    # (B,H)
+        w_s = jnp.exp(ltot[:, None, :] - lcum) * dtc             # (B,q,H)
+        h_out = jnp.exp(ltot)[:, :, None, None] * h_in + \
+            jnp.einsum("bqh,bqhp,bqn->bhpn", w_s, xc, bc)
+        return h_out, y_in + y_intra
+
+    h_fin, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, h_fin
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: dict | None = None, return_state: bool = False):
+    """Full-sequence SSD. x: (B,S,d) -> (B,S,d) [, state dict]."""
+    b, s, d = x.shape
+    h, p, n = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    inner = h * p
+    xz = x @ params["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state_in = None if state is None else state["conv"]
+    xs = jax.nn.silu(_causal_conv(xs, params["conv"], conv_state_in))
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ params["w_dt"]
+                         + params["dt_bias"])                    # (B,S,H)
+    bc = (x @ params["w_bc"]).astype(jnp.float32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                       # (B,S,N)
+    xh = xs.reshape(b, s, h, p).astype(jnp.float32)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32) if state is None \
+        else state["ssm"].astype(jnp.float32)
+    y, h_fin = _ssd_chunk_scan(xh, dt, params["a_log"], bmat, cmat, h0)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, inner).astype(x.dtype)
+    y = _rms(y, params["norm_scale"]) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    if return_state:
+        new_state = {
+            "ssm": h_fin.astype(jnp.float32),
+            "conv": _conv_tail(xz[..., :inner], params["conv"].shape[0], conv_state_in),
+        }
+        return out, new_state
+    return out
+
+
+def mamba_decode(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                 state: dict) -> Tuple[jnp.ndarray, dict]:
+    """One-token SSD update. x: (B,1,d); state {"ssm": (B,H,P,N), "conv": (B,K-1,inner)}."""
+    b = x.shape[0]
+    h, p, n = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    inner = h * p
+    xz = x @ params["w_in"]
+    xs_raw, z = jnp.split(xz, 2, axis=-1)                        # (B,1,inner)
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), xs_raw], axis=1)
+    w = params["conv"]
+    xs = jax.nn.silu(jnp.sum(conv_in * w[None, :, :], axis=1, keepdims=True))
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ params["w_dt"]
+                         + params["dt_bias"])[:, 0]              # (B,H)
+    bc = (x @ params["w_bc"]).astype(jnp.float32)[:, 0]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)                       # (B,N)
+    xh = xs.reshape(b, h, p).astype(jnp.float32)
+    decay = jnp.exp(dt * (-jnp.exp(params["a_log"])))            # (B,H)
+    h_new = decay[:, :, None, None] * state["ssm"] + \
+        jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bmat)
+    y = jnp.einsum("bn,bhpn->bhp", cmat, h_new)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, inner).astype(x.dtype)
+    y = _rms(y, params["norm_scale"]) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, {"ssm": h_new, "conv": conv_in[:, 1:, :].astype(jnp.float32)}
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int) -> dict:
+    h, p, n = cfg.ssm_heads, cfg.head_dim, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, h * p), jnp.float32),
+    }
+
+
+def _conv_tail(x: jnp.ndarray, k: int, prev) -> jnp.ndarray:
+    """Last k-1 raw conv inputs (for decode continuity after a prefill)."""
+    b, s, c = x.shape
+    if s >= k - 1:
+        return x[:, s - (k - 1):, :].astype(jnp.float32)
+    pad = jnp.zeros((b, k - 1 - s, c), jnp.float32) if prev is None \
+        else prev[:, s:, :].astype(jnp.float32)
+    return jnp.concatenate([pad, x.astype(jnp.float32)], axis=1)
+
+
+def _rms(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ===========================================================================
+# RWKV6 (Finch): data-dependent decay time-mix + squared-relu channel-mix
+# ===========================================================================
+
+RWKV_LORA = 64
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hs = cfg.d_model, cfg.rwkv_head_size
+    h = d // hs
+    ks = jax.random.split(key, 10)
+    std = d ** -0.5
+    return {
+        # token-shift lerp coefficients (static simplification of Finch's
+        # data-dependent mix for r/k/v/g; decay w keeps the full LoRA)
+        "mu": truncated_normal(ks[0], (5, d), 0.5, jnp.float32),   # r,k,v,g,w
+        "w_r": truncated_normal(ks[1], (d, d), std, dtype),
+        "w_k": truncated_normal(ks[2], (d, d), std, dtype),
+        "w_v": truncated_normal(ks[3], (d, d), std, dtype),
+        "w_g": truncated_normal(ks[4], (d, d), std, dtype),
+        "w_o": truncated_normal(ks[5], (d, d), std, dtype),
+        "w0": truncated_normal(ks[6], (d,), 0.5, jnp.float32),
+        "w_lora_a": truncated_normal(ks[7], (d, RWKV_LORA), std, jnp.float32),
+        "w_lora_b": truncated_normal(ks[8], (RWKV_LORA, d), RWKV_LORA ** -0.5,
+                                     jnp.float32),
+        "bonus_u": truncated_normal(ks[9], (h, hs), 0.5, jnp.float32),
+        "ln_scale": jnp.ones((d,), dtype),                         # per-head GN
+        # channel mix
+        "mu_cm": truncated_normal(jax.random.fold_in(key, 11), (2, d), 0.5,
+                                  jnp.float32),
+        "cm_k": truncated_normal(jax.random.fold_in(key, 12), (d, cfg.d_ff),
+                                 std, dtype),
+        "cm_v": truncated_normal(jax.random.fold_in(key, 13), (cfg.d_ff, d),
+                                 cfg.d_ff ** -0.5, dtype),
+        "cm_r": truncated_normal(jax.random.fold_in(key, 14), (d, d), std, dtype),
+    }
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    return {
+        "mu": P(None, None),
+        "w_r": P(None, "model"), "w_k": P(None, "model"),
+        "w_v": P(None, "model"), "w_g": P(None, "model"),
+        "w_o": P("model", None),
+        "w0": P(None), "w_lora_a": P(None, None), "w_lora_b": P(None, None),
+        "bonus_u": P(None, None), "ln_scale": P(None),
+        "mu_cm": P(None, None),
+        "cm_k": P(None, "model"), "cm_v": P("model", None),
+        "cm_r": P(None, "model"),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x_{t-1} with a carried boundary token. x: (B,S,d); prev: (B,d)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def rwkv_time_mix(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                  state: dict | None) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Finch time-mix over a sequence.  Returns (y, wkv_state, last_x)."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    xp = _shift(x, None if state is None else state["tm_x"])
+    mu = params["mu"]
+    xr, xk, xv, xg, xw = (_lerp(x, xp, mu[i]) for i in range(5))
+    r = (xr @ params["w_r"]).reshape(b, s, h, hs).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(b, s, h, hs).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(b, s, h, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay (the Finch contribution)
+    dw = jnp.tanh(xw.astype(jnp.float32) @ params["w_lora_a"]) @ params["w_lora_b"]
+    logw = -jnp.exp(params["w0"] + dw)                    # (B,S,d), < 0
+    w = jnp.exp(logw).reshape(b, s, h, hs)                # decay in (0,1)
+    u = params["bonus_u"]
+
+    wkv0 = jnp.zeros((b, h, hs, hs), jnp.float32) if state is None \
+        else state["wkv"]
+
+    def step(carry, inp):
+        wkv = carry
+        rt, kt, vt, wt = inp                              # (B,H,hs) ×4
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", rt, wkv + u[None, :, :, None] * kv)
+        wkv = wt[..., :, None] * wkv + kv
+        return wkv, y
+
+    # two-level scan: outer over chunks (checkpointed — backward saves only
+    # the per-chunk wkv carries, (S/T)·B·H·hs² f32 instead of S·B·H·hs²),
+    # inner per-token recurrence rematerialized inside each chunk.
+    t_chunk = RWKV_CHUNK if s % RWKV_CHUNK == 0 else s
+    nc = s // t_chunk
+
+    @jax.checkpoint
+    def chunk_step(wkv, inp):
+        return jax.lax.scan(step, wkv, inp)
+
+    def resh(t):  # (B,S,H,hs) -> (nc, T, B, H, hs)
+        return jnp.moveaxis(t, 1, 0).reshape(nc, t_chunk, *t.shape[0:1],
+                                             *t.shape[2:])
+
+    rs, ks_, vs, ws = (resh(t) for t in (r, k, v, w))
+    wkv_fin, ys = jax.lax.scan(chunk_step, wkv0, (rs, ks_, vs, ws))
+    ys = ys.reshape(s, b, h, hs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hs)       # (B,S,H,hs)
+    y = _groupnorm_heads(y, params["ln_scale"]).reshape(b, s, d).astype(x.dtype)
+    out = (y * g) @ params["w_o"]
+    return out, wkv_fin, x[:, -1, :].astype(jnp.float32)
+
+
+def rwkv_channel_mix(params: dict, x: jnp.ndarray,
+                     state: dict | None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xp = _shift(x, None if state is None else state["cm_x"])
+    xk = _lerp(x, xp, params["mu_cm"][0])
+    xr = _lerp(x, xp, params["mu_cm"][1])
+    kk = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
+    out = jax.nn.sigmoid(xr @ params["cm_r"]) * (kk @ params["cm_v"])
+    return out, x[:, -1, :].astype(jnp.float32)
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d, hs = cfg.d_model, cfg.rwkv_head_size
+    h = d // hs
+    return {
+        "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32),
+        "tm_x": jnp.zeros((batch, d), jnp.float32),
+        "cm_x": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _groupnorm_heads(y: jnp.ndarray, scale: jnp.ndarray, eps=1e-5):
+    """Per-head layer norm (RWKV 'group norm'). y: (B,S,H,hs)."""
+    y32 = y.astype(jnp.float32)
+    mean = jnp.mean(y32, axis=-1, keepdims=True)
+    var = jnp.var(y32, axis=-1, keepdims=True)
+    yn = (y32 - mean) * jax.lax.rsqrt(var + eps)
+    b, s, h, hs = y.shape
+    return yn.reshape(b, s, h * hs) * scale.astype(jnp.float32)

@@ -1,0 +1,480 @@
+"""Model assembly: init / train-forward / prefill / decode for every family.
+
+Layer stacking.  Block parameters are stacked over the layer axis L (leaf
+shape (L, ...)), so the forward pass is a single ``lax.scan`` over layers
+(one HLO block regardless of depth) and checkpoints are layout-stable.
+
+Segments.  The SALS layer mask (paper §5.1: layers 0, 1 and the last bypass
+sparsification) is always front/back-contiguous, so decode splits the stack
+into up to three scanned segments — ``full | sals | full`` — each with its
+own cache structure.  Step functions slice the stacked params per segment
+(static slices on the leading axis; XLA folds them).
+
+Entry points
+------------
+  init_params(key, cfg)                      -> params
+  forward(params, cfg, batch, ...)           -> (logits, aux)     [train]
+  init_cache(cfg, sals, batch, max_seq)      -> cache
+  prefill(params, proj, cfg, sals, batch, max_seq) -> (last_logits, cache)
+  decode_step(params, proj, cache, tokens, pos, cfg, sals) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, SALSConfig
+from repro.core import latent_cache as lc
+from repro.core.sparse_attention import sals_decode_attend
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embed_apply, embedding_init, embedding_specs,
+                                 mlp_apply, mlp_init, mlp_specs, rmsnorm_apply,
+                                 rmsnorm_init, rmsnorm_specs, unembed_apply)
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+def segment_plan(cfg: ModelConfig, sals: Optional[SALSConfig]
+                 ) -> List[Tuple[int, int, str]]:
+    """[(start, stop, mode)] with mode in {"full", "sals"}."""
+    l = cfg.n_layers
+    if (sals is None or not sals.enabled or not cfg.has_attention
+            or not cfg.is_decoder):
+        return [(0, l, "full")]
+    f = min(sals.skip_layers_front, l)
+    b = min(sals.skip_layers_back, l - f)
+    segs = []
+    if f:
+        segs.append((0, f, "full"))
+    if l - f - b > 0:
+        segs.append((f, l - b, "sals"))
+    if b:
+        segs.append((l - b, l, "full"))
+    return segs
+
+
+def _slice_tree(tree, i0: int, i1: int):
+    return jax.tree.map(lambda a: a[i0:i1], tree)
+
+
+# ---------------------------------------------------------------------------
+# Block params
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    if cfg.family == "ssm":
+        return {
+            "norm1": rmsnorm_init(cfg, cfg.d_model, dtype),
+            "norm2": rmsnorm_init(cfg, cfg.d_model, dtype),
+            "rwkv": ssm_mod.rwkv_init(ks[0], cfg, dtype),
+        }
+    p = {
+        "attn_norm": rmsnorm_init(cfg, cfg.d_model, dtype),
+        "attn": attn.attention_init(ks[0], cfg, dtype),
+        "mlp_norm": rmsnorm_init(cfg, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.mamba_init(ks[2], cfg, dtype)
+    return p
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    """PartitionSpecs for one (stacked) block — leading layer axis unsharded."""
+    def stack(spec_tree):
+        return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+    if cfg.family == "ssm":
+        return stack({
+            "norm1": rmsnorm_specs(), "norm2": rmsnorm_specs(),
+            "rwkv": ssm_mod.rwkv_specs(cfg),
+        })
+    sp = {
+        "attn_norm": rmsnorm_specs(),
+        "attn": attn.attention_specs(cfg),
+        "mlp_norm": rmsnorm_specs(),
+    }
+    if cfg.family == "moe":
+        sp["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        sp["mlp"] = mlp_specs()
+    if cfg.family == "hybrid":
+        sp["mamba"] = ssm_mod.mamba_specs(cfg)
+    return stack(sp)
+
+
+def init_params(key, cfg: ModelConfig, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    k_emb, k_blocks, k_norm = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg, dtype))(layer_keys)
+    return {
+        "embed": embedding_init(k_emb, cfg, dtype),
+        "blocks": blocks,
+        "final_norm": rmsnorm_init(cfg, cfg.d_model, dtype),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": embedding_specs(cfg),
+        "blocks": block_specs(cfg),
+        "final_norm": rmsnorm_specs(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence — train / prefill / encode)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(bp: dict, x: jnp.ndarray, cfg: ModelConfig,
+               positions: jnp.ndarray, prefix_len: int,
+               collect_kv: bool):
+    """One block over a full sequence.
+
+    Returns (x, aux_loss, extras) where extras = (k_pre, v[, ssm_state]) when
+    ``collect_kv`` (prefill) else None.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    extras = None
+    if cfg.family == "ssm":
+        h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+        tm, wkv, tm_x = ssm_mod.rwkv_time_mix(bp["rwkv"], h, cfg, None)
+        x = x + tm
+        h2 = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+        cm, cm_x = ssm_mod.rwkv_channel_mix(bp["rwkv"], h2, None)
+        x = x + cm
+        if collect_kv:
+            extras = {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+        return x, aux, extras
+
+    h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+    if collect_kv:
+        a, k_pre, v = attn.attend_prefill(bp["attn"], h, cfg, positions,
+                                          prefix_len)
+        extras = {"k_pre": k_pre, "v": v}
+    else:
+        a = attn.attend_train(bp["attn"], h, cfg, positions, prefix_len)
+    if cfg.family == "hybrid":
+        if collect_kv:
+            s_out, s_state = ssm_mod.mamba_apply(bp["mamba"], h, cfg,
+                                                 return_state=True)
+            extras["ssm"] = s_state
+        else:
+            s_out = ssm_mod.mamba_apply(bp["mamba"], h, cfg)
+        a = (a + s_out) * 0.5
+    x = x + a
+    x = constrain(x, ("batch", "residual_seq", "embed"))
+    h2 = rmsnorm_apply(bp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe_mod.moe_apply(bp["moe"], h2, cfg)
+    else:
+        m = mlp_apply(bp["mlp"], h2, cfg.mlp_act)
+    x = x + m
+    x = constrain(x, ("batch", "residual_seq", "embed"))
+    return x, aux, extras
+
+
+# ---------------------------------------------------------------------------
+# Inputs -> embeddings
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, int]:
+    """Returns (x (B,S,d), prefix_len) from the family's input dict.
+
+    dense/moe/hybrid/ssm: {"tokens"}; encoder (audio): {"frames"} —
+    precomputed frame embeddings (frontend stub); vlm: {"patches","tokens"}
+    — precomputed patch embeddings prefix + token ids.
+    """
+    if cfg.family == "encoder":
+        # cast to the params' compute dtype (tests train in f32)
+        dtype = params["final_norm"]["scale"].dtype
+        x = batch["frames"].astype(dtype)
+        return constrain(x, ("batch", "seq", "embed")), 0
+    tok_emb = embed_apply(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm" and "patches" in batch:
+        patches = batch["patches"].astype(tok_emb.dtype)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+        return constrain(x, ("batch", "seq", "embed")), patches.shape[1]
+    return tok_emb, 0
+
+
+# ---------------------------------------------------------------------------
+# Train / encode forward
+# ---------------------------------------------------------------------------
+
+def hidden(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+           remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward up to the final norm.
+
+    Returns (hidden (B,S,d), aux_loss)."""
+    x, prefix_len = embed_inputs(params, cfg, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a, _ = _block_fwd(bp, x, cfg, positions, prefix_len, False)
+        return (x, aux + a), None
+
+    if remat in ("block", "save_dots"):
+        # "block": save only block boundaries (x carried between layers);
+        # "save_dots": also keep matmul outputs (less recompute, more HBM)
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable \
+            if remat == "save_dots" else None
+        body = jax.checkpoint(body, policy=policy)
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits (B,S,V) f32, aux_loss)."""
+    x, aux = hidden(params, cfg, batch, remat=remat)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits, aux
+
+
+def forward_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                 *, remat: str = "none", ce_chunk: int = 512
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward + CHUNKED cross-entropy (the production train loss).
+
+    The (B,S,V) logits tensor is never materialized: the unembed matmul and
+    logsumexp run per seq-chunk inside a rematerialized scan, so peak memory
+    holds one (B, chunk, V) tile (e.g. llama4-scout: 202k vocab × 1M tokens
+    would otherwise be ~800 GB/step in f32).  Returns (mean_nll, aux)."""
+    x, aux = hidden(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:        # vlm: loss over the text suffix
+        x = x[:, -labels.shape[1]:]
+    b, s, d = x.shape
+    c = min(ce_chunk, s)
+    if s % c:
+        c = s  # fall back to unchunked for odd small shapes
+    nc = s // c
+
+    @jax.checkpoint
+    def chunk_nll(x_c, y_c):
+        logits = unembed_apply(params["embed"], x_c, cfg)      # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, xy):
+        x_c, y_c = xy
+        return acc + chunk_nll(x_c, y_c), None
+
+    xs = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    return total / (b * s), aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
+               max_seq: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if not cfg.is_decoder:
+        raise ValueError("encoder family has no decode cache")
+    segs = segment_plan(cfg, sals)
+    cache: Dict[str, Any] = {}
+    for si, (i0, i1, mode) in enumerate(segs):
+        ls = i1 - i0
+        if cfg.family == "ssm":
+            st = ssm_mod.rwkv_state_init(cfg, batch)
+            seg = jax.tree.map(lambda a: jnp.zeros((ls, *a.shape), a.dtype), st)
+        elif mode == "full":
+            kv = attn.init_full_cache(cfg, batch, max_seq, dtype)
+            seg = {k: jnp.zeros((ls, *v.shape), v.dtype)
+                   for k, v in kv.items()}
+        else:
+            seg = lc.init_latent_cache(cfg, sals, ls, batch, max_seq, dtype)
+        if cfg.family == "hybrid":
+            st = ssm_mod.mamba_state_init(cfg, batch)
+            seg["ssm"] = jax.tree.map(
+                lambda a: jnp.zeros((ls, *a.shape), a.dtype), st)
+        cache[f"seg{si}"] = seg
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
+            sals: Optional[SALSConfig], batch: Dict[str, jnp.ndarray],
+            max_seq: int) -> Tuple[jnp.ndarray, dict]:
+    """Process the prompt, build the decode cache.
+
+    Returns (last-position logits (B, V) f32, cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x, prefix_len = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    segs = segment_plan(cfg, sals)
+    cache: Dict[str, Any] = {}
+
+    for si, (i0, i1, mode) in enumerate(segs):
+        bp_seg = _slice_tree(params["blocks"], i0, i1)
+        if mode == "sals":
+            u_seg = projectors["u"][i0:i1]
+
+            def body_s(x, bp_u):
+                bp, u_l = bp_u
+                x, _, ex = _block_fwd(bp, x, cfg, positions, prefix_len, True)
+                layer = lc.prefill_latent_layer(cfg, sals, u_l, ex["k_pre"],
+                                                ex["v"], max_seq, dtype)
+                if cfg.family == "hybrid":
+                    layer["ssm"] = ex["ssm"]
+                return x, layer
+
+            x, seg = jax.lax.scan(body_s, x, (bp_seg, u_seg))
+        else:
+            def body_f(x, bp):
+                x, _, ex = _block_fwd(bp, x, cfg, positions, prefix_len, True)
+                if cfg.family == "ssm":
+                    return x, ex
+                k_r = attn.apply_rope(ex["k_pre"], positions, cfg.rope_theta) \
+                    if cfg.use_rope else ex["k_pre"]
+                layer = {"k": _pad_seq(k_r.astype(dtype), max_seq),
+                         "v": _pad_seq(ex["v"].astype(dtype), max_seq)}
+                if cfg.family == "hybrid":
+                    layer["ssm"] = ex["ssm"]
+                return x, layer
+
+            x, seg = jax.lax.scan(body_f, x, bp_seg)
+        cache[f"seg{si}"] = seg
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:, :]
+    logits = unembed_apply(params["embed"], last, cfg)[:, 0]
+    return logits, cache
+
+
+def _pad_seq(a: jnp.ndarray, max_seq: int) -> jnp.ndarray:
+    """Pad axis 1 (seq) of (B, S, ...) up to max_seq."""
+    s = a.shape[1]
+    if s == max_seq:
+        return a
+    pad = [(0, 0), (0, max_seq - s)] + [(0, 0)] * (a.ndim - 2)
+    return jnp.pad(a, pad)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, projectors: Optional[dict], cache: dict,
+                tokens: jnp.ndarray, pos, cfg: ModelConfig,
+                sals: Optional[SALSConfig], n_groups: int = 1
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One decode step. tokens: (B,) int32; pos: traced scalar.
+
+    Returns (logits (B, V) f32, updated cache).
+    """
+    if not cfg.is_decoder:
+        raise ValueError("encoder family has no decode step")
+    x = embed_apply(params["embed"], tokens[:, None], cfg)     # (B,1,d)
+    segs = segment_plan(cfg, sals)
+    new_cache: Dict[str, Any] = {}
+
+    for si, (i0, i1, mode) in enumerate(segs):
+        bp_seg = _slice_tree(params["blocks"], i0, i1)
+        seg_cache = cache[f"seg{si}"]
+        if cfg.family == "ssm":
+            def body_r(x, bp_st):
+                bp, st = bp_st
+                h = rmsnorm_apply(bp["norm1"], x, cfg.norm_eps)
+                tm, wkv, tm_x = ssm_mod.rwkv_time_mix(bp["rwkv"], h, cfg, st)
+                x = x + tm
+                h2 = rmsnorm_apply(bp["norm2"], x, cfg.norm_eps)
+                cm, cm_x = ssm_mod.rwkv_channel_mix(bp["rwkv"], h2, st)
+                x = x + cm
+                return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+            x, new_seg = jax.lax.scan(body_r, x, (bp_seg, seg_cache))
+        elif mode == "sals":
+            u_seg = projectors["u"][i0:i1]
+
+            def body_sals(x, bp_u_cl):
+                bp, u_l, cl = bp_u_cl
+                cl = dict(cl)
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                ssm_cl = cl.pop("ssm") if cfg.family == "hybrid" else None
+                a, cl = sals_decode_attend(bp["attn"], u_l, cl, h, pos, cfg,
+                                           sals, n_groups)
+                x, cl = _finish_block(bp, x, h, a, cl, ssm_cl, cfg)
+                return x, cl
+
+            x, new_seg = jax.lax.scan(body_sals, x, (bp_seg, u_seg, seg_cache))
+        else:
+            def body_full(x, bp_cl):
+                bp, cl = bp_cl
+                cl = dict(cl)
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                ssm_cl = cl.pop("ssm") if cfg.family == "hybrid" else None
+                a, k_c, v_c = attn.attend_decode_full(bp["attn"], h, cfg,
+                                                      cl["k"], cl["v"], pos)
+                cl = {"k": k_c, "v": v_c}
+                x, cl = _finish_block(bp, x, h, a, cl, ssm_cl, cfg)
+                return x, cl
+
+            x, new_seg = jax.lax.scan(body_full, x, (bp_seg, seg_cache))
+        new_cache[f"seg{si}"] = new_seg
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _finish_block(bp, x, h, a, cl, ssm_cl, cfg: ModelConfig):
+    """Shared tail of a decode block: hybrid SSM merge + MLP/MoE residual."""
+    if cfg.family == "hybrid":
+        s_out, new_ssm = ssm_mod.mamba_decode(bp["mamba"], h, cfg, ssm_cl)
+        a = (a + s_out) * 0.5
+        cl = dict(cl)
+        cl["ssm"] = new_ssm
+    x = x + a
+    h2 = rmsnorm_apply(bp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m, _ = moe_mod.moe_apply(bp["moe"], h2, cfg)
+    else:
+        m = mlp_apply(bp["mlp"], h2, cfg.mlp_act)
+    return x + m, cl
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE. logits (B,S,V) f32; labels (B,S) int32; mask optional."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

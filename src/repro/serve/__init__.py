@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, RequestScheduler
+
+__all__ = ["Request", "RequestScheduler", "ServeEngine"]

@@ -1,0 +1,70 @@
+"""Batched request scheduler.
+
+Groups pending requests into fixed-size generation batches (static shapes —
+one compiled decode HLO), FIFO with a length-bucketing heuristic: requests
+are sorted by prompt length inside the admission window so a batch pads to
+its own bucket, not the global max.  Each batch runs prefill → decode-until-
+done on the engine; finished results are delivered via per-request futures.
+
+This is deliberately a *static* batcher (GPT-fast-style) rather than
+continuous batching: SALS's latent cache is a fixed-shape ring+arena per
+slot, so joining a running batch would need cache compaction; the scheduler
+instead keeps the engine busy with back-to-back full batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import GenerationResult, ServeEngine
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int = 32
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    result: Optional[GenerationResult] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class RequestScheduler:
+    def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None):
+        self.engine = engine
+        self.max_batch = max_batch or engine.scfg.max_batch
+        self.pending: List[Request] = []
+        self.completed: Dict[int, Request] = {}
+
+    def submit(self, req: Request) -> int:
+        self.pending.append(req)
+        return req.req_id
+
+    def run(self, on_batch: Optional[Callable[[List[Request]], None]] = None
+            ) -> List[Request]:
+        """Drain the queue; returns all completed requests in issue order."""
+        issued: List[Request] = []
+        # length-bucket inside the admission window
+        self.pending.sort(key=lambda r: len(r.prompt))
+        while self.pending:
+            batch = self.pending[:self.max_batch]
+            del self.pending[:len(batch)]
+            mnt = max(r.max_new_tokens for r in batch)
+            results = self.engine.generate(
+                [r.prompt for r in batch], max_new_tokens=mnt)
+            for req, res in zip(batch, results):
+                req.result = GenerationResult(
+                    res.tokens[:req.max_new_tokens], res.prompt_len,
+                    min(res.steps, req.max_new_tokens))
+                self.completed[req.req_id] = req
+            issued.extend(batch)
+            if on_batch:
+                on_batch(batch)
+        return issued

@@ -1,0 +1,11 @@
+from repro.train.optimizer import adamw_init, adamw_update, lr_schedule
+from repro.train.trainer import TrainState, make_train_step, train_loop
+
+__all__ = [
+    "TrainState",
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "make_train_step",
+    "train_loop",
+]

@@ -1,0 +1,90 @@
+"""AdamW with f32 master weights and DP-sharded moments (ZeRO-1-ish).
+
+Moments (and the f32 master copy when params are bf16) are stored as a
+pytree parallel to the params; the launcher shards them with the SAME
+PartitionSpecs as the params, so under TP the optimizer state is sharded
+over 'model' exactly like the weights — and the update is purely local
+(no optimizer collectives).  Warmup + cosine decay schedule.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_schedule(step: jnp.ndarray, tcfg: TrainConfig) -> jnp.ndarray:
+    """Linear warmup to ``lr`` then cosine to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> dict:
+    """``moment_dtype=bfloat16`` halves mu/nu memory — used for >20B-param
+    configs where f32 moments alone would exceed the per-chip HBM budget
+    (update math still runs in f32; see DESIGN §7)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state: dict, params, tcfg: TrainConfig
+                 ) -> Tuple[dict, dict, dict]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    lr = lr_schedule(count, tcfg)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tcfg.grad_clip > 0 else jnp.float32(1.0)
+
+    b1, b2 = tcfg.b1, tcfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    master = opt_state.get("master", params)
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32) * clip
+        mdt = mu.dtype
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step_dir = (mu32 / c1) / (jnp.sqrt(nu32 / c2) + 1e-8)
+        m_new = m - lr * (step_dir + tcfg.weight_decay * m)
+        return mu32.astype(mdt), nu32.astype(mdt), m_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_m = treedef.flatten_up_to(master)
+    out = [upd(g, mu, nu, m) for g, mu, nu, m
+           in zip(flat_g, flat_mu, flat_nu, flat_m)]
+    new_mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+    new_params = jax.tree.unflatten(
+        treedef, [m.astype(p.dtype) for m, p
+                  in zip(treedef.flatten_up_to(new_master), flat_p)])
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    if "master" in opt_state:
+        new_state["master"] = new_master
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

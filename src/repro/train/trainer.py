@@ -1,0 +1,157 @@
+"""Training step + loop: microbatch grad accumulation, remat, optional int8
+error-feedback DP gradient compression, checkpoint/restart integration.
+
+``make_train_step`` builds the jit-able pure function; ``train_loop`` is the
+host-side driver (data, checkpoints, straggler timing, logging).  Both are
+mesh-agnostic: the launcher wraps the step in pjit with the param specs from
+``transformer.param_specs`` and installs the logical-axis rules.
+
+Gradient compression uses ``shard_map`` with the model axis left *auto*
+(pjit-style TP inside) and the data axes manual, so only the DP reduction is
+hand-written (distributed/compression.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.distributed import compression as gc
+from repro.models import transformer as tf
+from repro.train.optimizer import adamw_init, adamw_update
+
+TrainState = Dict[str, Any]
+AUX_WEIGHT = 0.01   # MoE load-balance loss weight
+
+
+def init_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+               dtype=None, ef_residual: bool = False,
+               moment_dtype=jnp.float32) -> TrainState:
+    params = tf.init_params(key, cfg, dtype)
+    state: TrainState = {"params": params,
+                         "opt": adamw_init(params, moment_dtype)}
+    if ef_residual:
+        state["ef"] = gc.init_residual(params)
+    return state
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat: str = "none",
+            ce_chunk: int = 512) -> Tuple[jnp.ndarray, dict]:
+    ce, aux = tf.forward_loss(params, cfg, batch, remat=remat,
+                              ce_chunk=ce_chunk)
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    remat: str = "none") -> Callable:
+    """Returns step(state, batch) -> (state, metrics).
+
+    Microbatch accumulation: the global batch is split on axis 0 into
+    ``tcfg.microbatches`` slices scanned sequentially; grads accumulate in
+    f32.  Under pjit + XLA's latency-hiding scheduler the DP grad psum of
+    microbatch i overlaps the backward of microbatch i+1.
+    """
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, remat), has_aux=True)
+
+    def step(state: TrainState, batch: dict):
+        params = state["params"]
+        mb = tcfg.microbatches
+        if mb <= 1:
+            (loss, extras), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            mbatch = jax.tree.map(split, batch)
+
+            def body(acc, b):
+                (l, ex), g = grad_fn(params, b)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / mb, acc, g)
+                return acc, (l, ex)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, extra_seq) = jax.lax.scan(body, zeros, mbatch)
+            loss = jnp.mean(losses)
+            extras = jax.tree.map(jnp.mean, extra_seq)
+
+        new_params, new_opt, om = adamw_update(grads, state["opt"], params, tcfg)
+        new_state = dict(state, params=new_params, opt=new_opt)
+        metrics = {"loss": loss, **extras, **om}
+        return new_state, metrics
+
+    return step
+
+
+def make_compressed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                               data_axes: Tuple[str, ...] = ("data",), *,
+                               remat: str = "none") -> Callable:
+    """DP-compressed variant: shard_map with manual data axes (int8 EF
+    all-gather reduction) and the model axis left auto (pjit TP inside)."""
+    from jax.sharding import PartitionSpec as P
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, remat), has_aux=True)
+    manual = set(data_axes)   # model axis (if any) stays auto — pjit TP inside
+
+    def local_step(state, batch):
+        params = state["params"]
+        (loss, extras), grads = grad_fn(params, batch)
+        grads, new_ef = gc.compressed_mean_grads(grads, state["ef"], data_axes)
+        loss = jax.lax.pmean(loss, data_axes)
+        extras = jax.tree.map(lambda x: jax.lax.pmean(x, data_axes), extras)
+        new_params, new_opt, om = adamw_update(grads, state["opt"], params, tcfg)
+        new_state = dict(state, params=new_params, opt=new_opt, ef=new_ef)
+        return new_state, {"loss": loss, **extras, **om}
+
+    rep = P()
+    batch_spec = P(data_axes)
+
+    def specs_like(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def step(state, batch):
+        state_specs = specs_like(state, rep)
+        bspecs = specs_like(batch, batch_spec)
+        return jax.shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, bspecs),
+            out_specs=(state_specs, specs_like(
+                {"loss": 0, "ce": 0, "aux": 0, "lr": 0, "grad_norm": 0}, rep)),
+            axis_names=manual, check_vma=False,
+        )(state, batch)
+
+    return step
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, *, state: TrainState,
+               step_fn: Callable, batches, start_step: int = 0,
+               ckpt_dir: Optional[str] = None,
+               straggler=None, log: Callable = print) -> TrainState:
+    """Host driver: steps, periodic checkpoints, straggler timing."""
+    from repro import checkpoint as ckpt
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    t_last = time.perf_counter()
+    for step_i in range(start_step, tcfg.steps):
+        batch = next(batches)
+        batch = jax.tree.map(jnp.asarray, batch)
+        state, metrics = jit_step(state, batch)
+        if straggler is not None:
+            now = time.perf_counter()
+            straggler.record(step_i, now - t_last)
+            t_last = now
+        if step_i % tcfg.log_every == 0 or step_i == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            log(f"step {step_i}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.3f}")
+        if ckpt_dir and (step_i + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(ckpt_dir, step_i + 1, state,
+                      keep=tcfg.keep_checkpoints)
+    return state

@@ -1,0 +1,10 @@
+import os
+
+# Tests run single-device CPU (the dry-run sets its own 512-device flag in a
+# subprocess).  Some distributed tests spawn subprocesses with their own
+# XLA_FLAGS — see tests/test_distributed.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,66 @@
+"""HLO cost walker tests: trip-count multipliers, dot FLOPs, collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.analysis.roofline import model_flops_for
+from repro.config import SHAPES
+from repro.configs import get_config
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    w = jnp.ones((256, 256), jnp.float32)
+    x = jnp.ones((256, 256), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    def unrolled(x, w):
+        for _ in range(10):
+            x = x @ w
+        return x
+
+    f_scan = analyze_hlo(_compile_text(scanned, x, w)).flops
+    f_unroll = analyze_hlo(_compile_text(unrolled, x, w)).flops
+    expected = 2 * 256**3 * 10
+    assert abs(f_scan - expected) / expected < 0.05, f_scan
+    assert abs(f_unroll - expected) / expected < 0.05, f_unroll
+    # and they agree with each other
+    assert abs(f_scan - f_unroll) / f_unroll < 0.05
+
+
+def test_dot_flops_simple_matmul():
+    a = jnp.ones((128, 512), jnp.float32)
+    b = jnp.ones((512, 64), jnp.float32)
+    rep = analyze_hlo(_compile_text(lambda a, b: a @ b, a, b))
+    expected = 2 * 128 * 512 * 64
+    assert abs(rep.flops - expected) / expected < 0.01
+
+
+def test_bytes_accessed_reasonable():
+    a = jnp.ones((1024, 1024), jnp.float32)
+    rep = analyze_hlo(_compile_text(lambda a: a * 2.0 + 1.0, a))
+    # one read + one write of 4MB, modulo fusion bookkeeping
+    assert 4e6 <= rep.bytes_accessed <= 4e7, rep.bytes_accessed
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("yi-9b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    de = model_flops_for(cfg, SHAPES["decode_32k"])
+    n = cfg.param_count()
+    assert abs(tr - 6 * n * 256 * 4096) / tr < 1e-6
+    assert abs(de - 2 * n * 128) / de < 1e-6
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    assert tr < 6 * cfg.param_count() * 256 * 4096  # active < total

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: REDUCED same-family config, one forward /
+train step on CPU, asserting output shapes + finite values.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SALSConfig, TrainConfig
+from repro.configs import ASSIGNED_ARCHS, all_configs, get_config
+from repro.core import calibration as cal
+from repro.models import transformer as tf
+from repro.train import trainer
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                        jnp.float32) * 0.1,
+            "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        }
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.vision_patches, cfg.d_model), jnp.float32) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    batch = _batch(cfg, KEY)
+    logits, aux = tf.forward(params, cfg, batch)
+    s_out = S + (cfg.vision_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, s_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_decreases_nothing_nan(arch):
+    cfg = get_config(arch).reduced()
+    tcfg = TrainConfig(steps=3, batch_size=B, seq_len=S, lr=1e-3)
+    state = trainer.init_state(KEY, cfg, tcfg, jnp.float32)
+    step = jax.jit(trainer.make_train_step(cfg, tcfg))
+    batch = _batch(cfg, KEY)
+    losses = []
+    for i in range(2):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    # one repeated batch: second step must not increase loss dramatically
+    assert losses[1] < losses[0] * 1.5
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).is_decoder])
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill must match forward() on the extended
+    sequence (full-attention path, no SALS)."""
+    cfg = get_config(arch).reduced()
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    batch = _batch(cfg, KEY)
+    batch.pop("labels")
+    pos0 = S + (cfg.vision_patches if cfg.family == "vlm" else 0)
+    last, cache = tf.prefill(params, None, cfg, None, batch,
+                             max_seq=pos0 + 8)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)
+    lg, cache = tf.decode_step(params, None, cache, nxt, jnp.int32(pos0),
+                               cfg, None)
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], nxt[:, None]], axis=1)
+    ref = tf.forward(params, cfg, ext)[0][:, -1]
+    err = np.abs(np.asarray(lg - ref)).max() / \
+        max(np.abs(np.asarray(ref)).max(), 1e-6)
+    assert err < 2e-3, err
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).is_decoder
+                                  and get_config(a).has_attention])
+def test_sals_decode_close_to_full(arch):
+    """SALS with full-rank projector + full token budget ≈ exact decode."""
+    cfg = get_config(arch).reduced()
+    sals = SALSConfig(rank_ratio=1.0, score_ratio=1.0, n_critical=S + 8,
+                      n_sink=2, n_recent=4, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    batch = _batch(cfg, KEY)
+    batch.pop("labels")
+    last_f, cache_f = tf.prefill(params, None, cfg, None, batch,
+                                 max_seq=S + 272)
+    nxt = jnp.argmax(last_f, -1).astype(jnp.int32)
+    pos0 = S + (cfg.vision_patches if cfg.family == "vlm" else 0)
+    ref, _ = tf.decode_step(params, None, cache_f, nxt, jnp.int32(pos0),
+                            cfg, None)
+    last_s, cache_s = tf.prefill(params, proj, cfg, sals, batch,
+                                 max_seq=S + 272)
+    got, _ = tf.decode_step(params, proj, cache_s, nxt, jnp.int32(pos0),
+                            cfg, sals)
+    err = np.abs(np.asarray(got - ref)).max() / \
+        max(np.abs(np.asarray(ref)).max(), 1e-6)
+    assert err < 0.02, err
+
+
+def test_all_configs_well_formed():
+    for name, cfg in all_configs().items():
+        assert cfg.n_heads % max(cfg.n_kv_heads, 1) == 0, name
+        assert cfg.param_count() > 0
+        assert cfg.active_param_count() <= cfg.param_count()
+        if cfg.family == "moe":
+            assert cfg.active_param_count() < cfg.param_count()
+
+
+def test_full_config_param_counts_in_range():
+    """Sanity-check the analytic param counts against the model names."""
+    expect = {
+        "yi-9b": (8e9, 10e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "granite-3-8b": (7e9, 10e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),   # total (not active)
+        "hubert-xlarge": (0.8e9, 1.3e9),
+        "hymba-1.5b": (1.2e9, 2.2e9),
+        "paligemma-3b": (2.0e9, 3.5e9),           # LM backbone only
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.2e} not in [{lo:.0e},{hi:.0e}]"
+
+
+def test_moe_active_params():
+    qwen3 = get_config("qwen3-moe-235b-a22b")
+    active = qwen3.active_param_count()
+    assert 15e9 <= active <= 30e9, f"{active:.2e}"  # ~22B active

@@ -1,0 +1,183 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.latent_score import latent_score_pallas
+from repro.kernels.sparse_recon_attention import sparse_recon_attention_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,sk,h,dh", [
+    (1, 128, 128, 2, 64),
+    (2, 256, 256, 4, 64),
+    (1, 128, 384, 2, 128),     # decode-style sq < sk
+    (2, 192, 192, 3, 32),      # non-128-multiple seq -> padding path
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, sk, h, dh, causal, dtype):
+    if not causal and sq != sk:
+        pytest.skip("bidirectional requires square block")
+    if not causal and sq % 128:
+        pytest.skip("kv padding requires causal masking")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, sk, h, dh), dtype)
+    v = jax.random.normal(ks[2], (b, sk, h, dh), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal,
+                                 block_q=128, block_k=128)
+    expected = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32), **tol(dtype))
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=True, softcap=30.0,
+                                 block_q=128, block_k=128)
+    expected = ref.attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_prefix_lm():
+    """Prefix-LM mask (paligemma): prefix columns bidirectional."""
+    ks = jax.random.split(KEY, 3)
+    b, s, h, dh, pfx = 1, 256, 2, 64, 64
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, dh), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=False, prefix_len=pfx,
+                                 block_q=128, block_k=128)
+    kv = jnp.arange(s)
+    mask = ((kv[None, :] < pfx) |
+            (jnp.arange(s)[:, None] >= kv[None, :]))[None, None]
+    expected = ref.attention_ref(q, k, v, causal=False, mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+    # ops dispatch agrees across backends
+    for backend in ("naive", "xla", "pallas"):
+        got = ops.flash_attention(q, k, v, causal=True, prefix_len=pfx,
+                                  backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_xla_long_matches_naive():
+    """Chunked XLA path beyond the naive-threshold sequence length."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4096, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4096, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 4096, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, backend="xla")
+    expected = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# latent score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,r,r_star", [
+    (1, 256, 64, 32), (3, 1000, 128, 64), (2, 512, 96, 96),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_latent_score_matches_ref(b, s, r, r_star, dtype):
+    q_lat = jax.random.normal(KEY, (b, r_star), dtype)
+    k_lat = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, r), dtype)
+    got = latent_score_pallas(q_lat, k_lat, block_s=128)
+    want = ref.latent_score_ref(q_lat, k_lat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused reconstruct-RoPE-attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,n_kv,dh,n,r", [
+    (1, 4, 2, 64, 64, 32),
+    (2, 8, 2, 64, 100, 96),      # n not a block multiple -> padding
+    (2, 8, 1, 128, 256, 64),     # MQA, gemma-style head_dim
+    (1, 6, 6, 32, 50, 48),       # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sparse_recon_attention_matches_ref(b, h, n_kv, dh, n, r, dtype):
+    kvd = n_kv * dh
+    ks = jax.random.split(KEY, 6)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    lat = jax.random.normal(ks[1], (b, n, r), dtype)
+    vs = jax.random.normal(ks[2], (b, n, kvd), dtype)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    pos = jax.random.randint(ks[4], (b, n), 0, 500)
+    valid = jax.random.bernoulli(ks[5], 0.85, (b, n))
+    qp = jnp.full((b,), 600, jnp.int32)
+    m1, l1, o1 = sparse_recon_attention_pallas(
+        q, lat, vs, u, pos, valid, qp, n_kv=n_kv, block_n=32)
+    m2, l2, o2 = ref.sparse_recon_attention_ref(
+        q, lat, vs, u, pos, valid, qp, n_kv=n_kv)
+    t = tol(dtype)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), **t)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=10 * t["rtol"], atol=10 * t["atol"])
+    y1 = np.asarray(o1) / np.maximum(np.asarray(l1), 1e-30)[..., None]
+    y2 = np.asarray(o2) / np.maximum(np.asarray(l2), 1e-30)[..., None]
+    np.testing.assert_allclose(y1, y2, rtol=10 * t["rtol"],
+                               atol=10 * t["atol"])
+
+
+def test_sparse_recon_attention_no_rope():
+    """NoPE path (hubert-style)."""
+    b, h, n_kv, dh, n, r = 1, 4, 2, 64, 64, 32
+    kvd = n_kv * dh
+    ks = jax.random.split(KEY, 6)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, n, r), jnp.float32)
+    vs = jax.random.normal(ks[2], (b, n, kvd), jnp.float32)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    pos = jax.random.randint(ks[4], (b, n), 0, 500)
+    valid = jnp.ones((b, n), bool)
+    qp = jnp.full((b,), 600, jnp.int32)
+    outs_p = sparse_recon_attention_pallas(q, lat, vs, u, pos, valid, qp,
+                                           n_kv=n_kv, use_rope=False,
+                                           block_n=32)
+    outs_r = ref.sparse_recon_attention_ref(q, lat, vs, u, pos, valid, qp,
+                                            n_kv=n_kv, use_rope=False)
+    for a, b_ in zip(outs_p, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_all_invalid_rows_are_safe():
+    """A row with zero valid tokens must produce l=0, o=0 (no NaNs)."""
+    b, h, n_kv, dh, n, r = 1, 2, 1, 32, 32, 16
+    kvd = n_kv * dh
+    q = jax.random.normal(KEY, (b, h, dh), jnp.float32)
+    lat = jax.random.normal(KEY, (b, n, r), jnp.float32)
+    vs = jax.random.normal(KEY, (b, n, kvd), jnp.float32)
+    u = jax.random.normal(KEY, (kvd, r), jnp.float32)
+    pos = jnp.zeros((b, n), jnp.int32)
+    valid = jnp.zeros((b, n), bool)
+    qp = jnp.zeros((b,), jnp.int32)
+    m, l, o = sparse_recon_attention_pallas(q, lat, vs, u, pos, valid, qp,
+                                            n_kv=n_kv, block_n=16)
+    assert np.all(np.asarray(l) == 0.0)
+    assert np.all(np.asarray(o) == 0.0)
+    assert not np.any(np.isnan(np.asarray(m)))

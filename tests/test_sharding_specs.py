@@ -1,0 +1,106 @@
+"""Spec machinery: sanitizer divisibility, FSDP derivation, cache specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import MeshConfig, SALSConfig, ShapeConfig
+from repro.configs import get_config
+from repro.distributed.sharding import (default_rules, fsdp_specs,
+                                        sanitize_pspecs)
+from repro.launch import specs as sp
+
+
+@pytest.fixture
+def mesh():
+    dev = np.array(jax.devices()[:1] * 8).reshape(2, 4) \
+        if len(jax.devices()) < 8 else \
+        np.array(jax.devices()[:8]).reshape(2, 4)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_sanitize_drops_nondivisible(mesh):
+    shaped = jax.ShapeDtypeStruct((49155, 4096), jnp.float32)
+    out = sanitize_pspecs(P("model", None), shaped, mesh)
+    assert out == P(None, None)            # 49155 % 4 != 0 -> replicated
+    out2 = sanitize_pspecs(P(None, "model"), shaped, mesh)
+    assert out2 == P(None, "model")        # 4096 % 4 == 0 -> kept
+
+
+def test_sanitize_composite_prefix(mesh):
+    shaped = jax.ShapeDtypeStruct((6, 128), jnp.float32)
+    out = sanitize_pspecs(P(("data", "model"), None), shaped, mesh)
+    assert out == P("data", None)          # 6 % 8 != 0 but 6 % 2 == 0
+
+
+def test_fsdp_shards_largest_free_dim(mesh):
+    specs = {"w": P(None, "model")}
+    shapes = {"w": jax.ShapeDtypeStruct((512, 64), jnp.float32)}
+    out = fsdp_specs(specs, shapes, mesh, "data")
+    assert out["w"] == P("data", "model")
+
+
+def test_fsdp_composite_axes(mesh):
+    specs = {"w": P(None, None)}
+    shapes = {"w": jax.ShapeDtypeStruct((64, 16), jnp.float32)}
+    out = fsdp_specs(specs, shapes, mesh, ("data", "model"))
+    assert out["w"] == P(("data", "model"), None)   # 64 % 8 == 0
+
+
+def test_fsdp_skips_used_axes(mesh):
+    specs = {"w": P("model", None)}
+    shapes = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
+    out = fsdp_specs(specs, shapes, mesh, ("data", "model"))
+    # 'model' already used on dim0; only 'data' free for dim1
+    assert out["w"] == P("model", "data")
+
+
+def test_decode_rules_replicate_heads():
+    mc = MeshConfig(shape=(2, 4), axis_names=("data", "model"))
+    rules = default_rules(mc, ShapeConfig("d", "decode", 256, 8))
+    assert rules["heads"] is None
+    assert rules["kv_seq"] == "model"
+    rules_long = default_rules(mc, ShapeConfig("l", "decode", 512, 1))
+    assert rules_long["batch"] is None
+    assert rules_long["kv_seq"] == ("data", "model")
+
+
+def test_cache_pspecs_by_leaf_name():
+    cfg = get_config("yi-9b").reduced()
+    sals = SALSConfig(n_critical=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    from repro.models import transformer as tf
+    shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, sals, 2, 64, jnp.float32))
+    mc = MeshConfig(shape=(2, 4), axis_names=("data", "model"))
+    rules = default_rules(mc, ShapeConfig("d", "decode", 64, 8))
+    specs = sp.cache_pspecs(shapes, rules)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    by_name = {}
+    for path, spec in flat:
+        name = [str(p.key) for p in path if hasattr(p, "key")][-1]
+        by_name[name] = spec
+    assert by_name["k_lat"] == P(None, "data", "model", None)
+    assert by_name["sink_k"] == P(None, "data", None, None, None)
+    assert by_name["k"][2] == "model"     # skip-layer cache seq-sharded
+
+
+def test_sals_for_shape_scaling():
+    cfg = get_config("yi-9b")
+    s4k = sp.sals_for_shape(cfg, ShapeConfig("t", "decode", 4096, 8))
+    s32k = sp.sals_for_shape(cfg, ShapeConfig("t", "decode", 32768, 8))
+    s500k = sp.sals_for_shape(cfg, ShapeConfig("t", "decode", 524288, 1))
+    assert s4k.n_critical == 432 and s4k.n_recent == 64     # paper @4k
+    assert s32k.n_critical == 1024                          # paper doubles
+    assert s500k.n_critical == 2048                         # bounded @500k
+    assert sp.sals_for_shape(get_config("rwkv6-7b"),
+                             ShapeConfig("t", "decode", 4096, 8)) is None
+
+
+def test_cell_status_skips():
+    hubert = get_config("hubert-xlarge")
+    ok, reason = sp.cell_status(hubert, ShapeConfig("d", "decode", 256, 8))
+    assert not ok and "encoder" in reason
+    ok, _ = sp.cell_status(hubert, ShapeConfig("t", "train", 256, 8))
+    assert ok
