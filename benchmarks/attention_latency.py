@@ -9,6 +9,9 @@ the SALS/full ratio moves in the predicted direction.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,7 +25,9 @@ from repro.core.sparse_attention import sals_decode_attend
 from repro.models import attention as attn
 from repro.models import transformer as tf
 from benchmarks import common
-from benchmarks.memory_access import traffic_ratio
+from benchmarks.memory_access import decode_stage_bytes, traffic_ratio
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
 
 
 def measured_rows():
@@ -87,12 +92,57 @@ def projected_rows():
     return rows
 
 
+def traffic_model_rows():
+    """ISSUE 1 ledger: modeled HBM bytes/step/layer for the old
+    (gather-then-attend) vs new (fused scalar-prefetch gather) decode
+    paths, per stage, at 4k/32k/128k."""
+    cfg = get_config("paper-llama2-7b")
+    rows = []
+    for s in (4096, 32768, 131072):
+        for kdt in ("bfloat16", "int8"):
+            sals = SALSConfig(rank_ratio=0.25, v_bits=8,
+                              n_critical=512 if s <= 4096 else 1024,
+                              n_sink=16, n_recent=64, v_group=64,
+                              k_latent_dtype=kdt)
+            old = decode_stage_bytes(cfg, sals, s, fused=False)
+            new = decode_stage_bytes(cfg, sals, s, fused=True)
+            rows.append({
+                "model": "paper-llama2-7b", "seq": s, "k_latent_dtype": kdt,
+                "old": old, "new": new,
+                "score_ratio": round(old["score_bytes"] / new["score_bytes"], 2),
+                "selected_ratio": round(
+                    old["selected_bytes"] / new["selected_bytes"], 2),
+                "total_ratio": round(old["total_bytes"] / new["total_bytes"], 2),
+            })
+    return rows
+
+
 def run() -> list:
-    rows = measured_rows() + projected_rows()
+    cpu_rows = measured_rows()
+    v5e_rows = projected_rows()
+    rows = cpu_rows + v5e_rows
     common.emit(rows, ["table", "batch", "seq", "full_us", "sals_us",
                        "speedup"])
     print("# paper Table 6 reference: 5.7x attention speedup at bs=8, 4k")
-    return rows
+    model_rows = traffic_model_rows()
+    common.emit(
+        [(r["seq"], r["k_latent_dtype"],
+          r["old"]["score_bytes"], r["new"]["score_bytes"], r["score_ratio"],
+          r["old"]["selected_bytes"], r["new"]["selected_bytes"],
+          r["selected_ratio"], r["total_ratio"]) for r in model_rows],
+        ["seq", "k_lat", "score_old_B", "score_new_B", "score_x",
+         "sel_old_B", "sel_new_B", "sel_x", "total_x"])
+    cols = ["table", "batch", "seq", "full_us", "sals_us", "speedup"]
+    payload = {
+        "bench": "attention",
+        "unit": "modeled HBM bytes/decode-step/layer (+ measured CPU us)",
+        "measured_cpu": [dict(zip(cols, r)) for r in cpu_rows],
+        "projected_v5e": [dict(zip(cols, r)) for r in v5e_rows],
+        "traffic_model": model_rows,
+    }
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {BENCH_JSON}")
+    return rows + model_rows
 
 
 if __name__ == "__main__":

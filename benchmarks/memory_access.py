@@ -39,6 +39,69 @@ def storage_ratio(cfg, sals: SALSConfig) -> float:
     return lc.cache_bytes_per_token(cfg, sals) / full
 
 
+def decode_stage_bytes(cfg, sals: SALSConfig, s: int, fused: bool) -> dict:
+    """Modeled HBM bytes/decode-step/layer, per pipeline stage.
+
+    ``fused=False`` models the gather-then-attend path this repo shipped
+    before ISSUE 1 (dense dequant pass for int8 scoring, ``[..., :r*]``
+    slice + pad copies feeding the score kernel, XLA-gathered and
+    dequantized (B, N_c, r)+(B, N_c, kvd) bf16 buffers feeding the
+    attention kernel).  ``fused=True`` models the scalar-prefetch kernels:
+    every §4.5 traffic term is paid exactly once, streaming from the raw
+    quantized cache.  Each key maps a §4.5 term to the kernel that pays it
+    (see ROADMAP "Decode dataflow & traffic model").
+    """
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    r_star = sals.score_rank(kvd)
+    nc = min(s, sals.n_critical)
+    int8 = sals.k_latent_dtype == "int8"
+    lat_b = 1 if int8 else 2
+    scale_b = 2 if int8 else 0                    # bf16 per-token scale
+    code_w = kvd // 2 if sals.v_bits == 4 else kvd
+    v_meta = 2 * 2 * (kvd // sals.v_group)        # bf16 scale + zero
+    v_tok = code_w + v_meta                       # stored value bytes/token
+    from repro.kernels.latent_score import topk_candidate_shape
+    attend_block = 256      # pre-PR-1 sparse_recon_attention DEFAULT_BLOCK_N
+
+    def pad_to(n, m):
+        return ((n + m - 1) // m) * m
+
+    if fused:
+        # scoring kernel streams the leading r* columns of the raw cache;
+        # per-block candidates ((nb·kb) f32+i32 pairs) replace (B, S) scores
+        nb, kb = topk_candidate_shape(s, sals.n_critical)
+        score = s * (r_star * lat_b + scale_b) + 2 * nb * kb * 8
+        # attention kernel DMAs each selected token's raw rows once
+        selected = nc * (r * lat_b + scale_b + v_tok) + nc * 8   # + idx/valid
+    else:
+        # scoring: (int8 only) dense dequant pass, then slice copy, then a
+        # pad copy when S isn't block-aligned, then the kernel read
+        s_p = pad_to(s, min(1024, s))   # pre-PR-1 latent_score block size
+        dequant = (s * (r + 2) + s * r * 2) if int8 else 0
+        slice_copy = 2 * s * r_star * 2
+        pad_copy = 2 * s_p * r_star * 2 if s_p != s else 0
+        score = dequant + slice_copy + pad_copy + s_p * r_star * 2
+        # selected: XLA gather reads raw rows, writes dense bf16 buffers,
+        # kernel (after its own pad copy) reads them back
+        nc_p = pad_to(nc, min(attend_block, nc))
+        gather_read = nc * (r * lat_b + scale_b + v_tok)
+        gather_write = nc * (r + kvd) * 2
+        kernel_pad = 2 * nc_p * (r + kvd) * 2 if nc_p != nc else 0
+        selected = gather_read + gather_write + kernel_pad \
+            + nc_p * (r + kvd) * 2
+    # identical on both paths: U_r (resident f32), sink+recent window K/V
+    window = (sals.n_sink + sals.n_recent) * 2 * kvd * 2
+    u_bytes = kvd * r * 4
+    return {
+        "score_bytes": score,
+        "selected_bytes": selected,
+        "window_bytes": window,
+        "u_bytes": u_bytes,
+        "total_bytes": score + selected + window + u_bytes,
+    }
+
+
 def accuracy_proxy():
     """Next-token agreement + logit MSE of SALS vs full on a trained model."""
     cfg, params, corpus = common.trained_model()

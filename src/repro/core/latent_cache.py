@@ -124,11 +124,25 @@ def read_latents(layer_cache: dict, sals: SALSConfig,
     return layer_cache["k_lat"].astype(dtype)
 
 
+def latent_views(layer_cache: dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw quantized cache views for the fused decode kernels.
+
+    Returns (k_lat (B, S, r) — bf16 or int8, exactly as stored — and
+    k_scale (B, S) or None).  The hot path hands these straight to
+    ops.latent_topk / ops.sparse_recon_attention, which index them
+    in-kernel; no dequantized or gathered copy is materialized.
+    """
+    return layer_cache["k_lat"], layer_cache.get("k_scale")
+
+
 def gather_latents(layer_cache: dict, sals: SALSConfig, idx: jnp.ndarray,
                    dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Gather ``idx`` (B, Nc) latents + dequantized values WITHOUT key
-    reconstruction — feeds the fused reconstruct-RoPE-attention kernel
-    (kernels/sparse_recon_attention.py), which keeps K_C out of HBM.
+    """ORACLE-ONLY dense gather (tests / analysis — not the decode path).
+
+    Gathers ``idx`` (B, Nc) latents + dequantized values as explicit HBM
+    buffers.  The serving hot path instead passes raw cache views (see
+    :func:`latent_views`) to the fused Pallas kernel, which gathers via
+    scalar-prefetch indexing and never materializes these arrays.
 
     Returns (lat (B, Nc, r), v_flat (B, Nc, kv_dim)).
     """

@@ -115,15 +115,8 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
     layer_cache = lc.write_latents(layer_cache, sals, pos, k_lat_new, v_flat)
     layer_cache = lc.write_ring(layer_cache, sals, pos, k_new[:, 0], v_new[:, 0])
 
-    # ---- stage 2: latent scoring ------------------------------------------
+    # ---- stage 2 input: head-group-summed query ---------------------------
     q_bar = sel.group_query(q[:, 0], cfg)                  # (B, kvd)
-    k_lat = lc.read_latents(layer_cache, sals, x.dtype)    # (B, S, r)
-    k_lat = constrain(k_lat, ("batch", "kv_seq", None))
-    scores = sel.latent_scores(q_bar, u, k_lat, r_star)    # (B, S) f32
-    s_max = scores.shape[1]
-    positions_all = jnp.arange(s_max)
-    mask = sel.selectable_mask(positions_all, pos, sals)[None, :]
-    mask = jnp.broadcast_to(mask, scores.shape)
 
     # RoPE'd query for the exact attention
     pos_b = jnp.full((b, 1), pos, jnp.int32)
@@ -144,14 +137,24 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
 
     if n_groups <= 1:
         # ---- paper-faithful: one global top-k -----------------------------
-        # Selected block goes through the fused reconstruct→RoPE→attention
-        # kernel (ops dispatch: jnp oracle on CPU, Pallas on TPU); its flash
+        # Stages 2-4 fused over the RAW cache: scoring + selection stream
+        # the quantized latents once (ops.latent_topk), then the top-k
+        # indices are the ONLY artifact handed to the attention kernel,
+        # which gathers / dequantizes / reconstructs in-kernel via
+        # scalar-prefetch indexing — no dense score buffer, no gathered or
+        # dequantized (B, N_c, ·) intermediate ever reaches HBM.  Its flash
         # partials LSE-merge with the sink/recent window partials.
-        idx, valid = sel.topk_global(scores, mask, sals.n_critical)
-        lat_sel, v_sel_flat = lc.gather_latents(layer_cache, sals, idx, x.dtype)
+        k_lat_raw, k_scale = lc.latent_views(layer_cache)
+        k_lat_raw = constrain(k_lat_raw, ("batch", "kv_seq", None))
+        if k_scale is not None:
+            k_scale = constrain(k_scale, ("batch", "kv_seq"))
+        idx, valid = sel.topk_latent(q_bar, u, k_lat_raw, k_scale, pos,
+                                     sals, r_star)
         m_c, l_c, o_c = ops.sparse_recon_attention(
-            q[:, 0], lat_sel, v_sel_flat, u, idx, valid, pos,
-            n_kv=cfg.n_kv_heads, theta=cfg.rope_theta,
+            q[:, 0], k_lat_raw, k_scale, layer_cache["v_q"],
+            layer_cache["v_scale"], layer_cache["v_zero"], u, idx, valid,
+            pos, n_kv=cfg.n_kv_heads, v_bits=sals.v_bits,
+            v_group=sals.v_group, theta=cfg.rope_theta,
             softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope)
         m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
         m_all = jnp.maximum(m_c, m_sr)                      # (B,H)
@@ -162,6 +165,15 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
         o = numer / jnp.maximum(denom, 1e-30)[..., None]
     else:
         # ---- grouped: per-shard top-k + LSE merge -------------------------
+        # Dense scoring path: the G axis matches the kv_seq sharding, so the
+        # per-group score/top-k stays shard-local under pjit (§Perf A3);
+        # the fused global kernel above has no grouped formulation yet.
+        k_lat = lc.read_latents(layer_cache, sals, x.dtype)    # (B, S, r)
+        k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+        scores = sel.latent_scores(q_bar, u, k_lat, r_star)    # (B, S) f32
+        s_max = scores.shape[1]
+        mask = sel.selectable_mask(jnp.arange(s_max), pos, sals)[None, :]
+        mask = jnp.broadcast_to(mask, scores.shape)
         g = n_groups
         s_loc = s_max // g
         idx, valid = sel.topk_grouped(scores, mask, sals.n_critical, g)

@@ -1,23 +1,43 @@
-"""Pallas TPU kernel — SALS critical-token scoring (paper §4.3).
+"""Pallas TPU kernels — SALS critical-token scoring (paper §4.3), fused.
 
-One blocked matvec per batch row: scores = K̃[:, :r*] · q̃[:r*].  The seq axis
-is tiled (default 1024 rows) so one (bs × r*) latent tile + the r* query
-vector live in VMEM; the reduction runs on the MXU with r* padded to a
-128 multiple by the caller's rank rounding.
+Two kernels over the RAW latent cache (no host-side slice/pad/dequant copy —
+the §4.5 traffic model's ``s·r*`` term is paid exactly once, streaming):
 
-This is the memory-bound first pass of SALS decode (reads s·r* elements —
-the ``s·r*`` term of the §4.5 traffic model), so the kernel's job is purely
-to stream K̃ through VMEM at HBM bandwidth.
+``latent_score_pallas``
+    scores = K̃[:, :r*] · q̃[:r*] as one blocked matvec per batch row.  The
+    leading r* columns of the (B, S, r) cache are read directly via BlockSpec
+    (block index 0 of an r*-wide column split) — no ``k_lat[..., :r_star]``
+    copy, no pad copy; the ragged seq tail is masked in-kernel.  int8 latents
+    are handled by a per-token scale multiply on the *scores* (the scale is
+    per-token, so it commutes out of the r* contraction).
 
-Validated on CPU via ``interpret=True`` against ``ref.latent_score_ref``.
+``latent_topk_pallas``
+    The same streaming scores, plus the §4.3 selection fused in: the decode
+    position arrives as a scalar-prefetch operand, the sink/recent
+    selectability mask is computed from an in-kernel iota, and each seq block
+    emits its top-min(N_c, bs) candidates via an iterative max-extract loop
+    (Mosaic-safe: max + iota-argmin + mask, no sort).  The host-side
+    ``jax.lax.top_k`` then runs over (B, nb·k) candidates instead of (B, S).
+    Per-block top-min(N_c, bs) is *exact*: a token in the global top-N_c has
+    at most N_c-1 tokens above it, so at most N_c-1 in its own block.
+    Candidate emission order (value desc, index asc; blocks in seq order)
+    makes the final merge tie-break identically to a full-sequence
+    ``lax.top_k`` — indices match the oracle bit-for-bit.
+
+Validated on CPU via ``interpret=True`` against ``ref.latent_score_ref`` /
+``ref.latent_topk_ref``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
 
 DEFAULT_BLOCK_S = 1024
 
@@ -26,34 +46,177 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _score_kernel(q_ref, k_ref, o_ref):
-    q = q_ref[0].astype(jnp.float32)                       # (r*,)
-    k = k_ref[0].astype(jnp.float32)                       # (bs, r*)
-    o_ref[0] = jax.lax.dot_general(
-        k, q[:, None], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)[:, 0]
+def topk_candidate_shape(s: int, n_critical: int,
+                         block_s: int = DEFAULT_BLOCK_S) -> Tuple[int, int]:
+    """(n_blocks, candidates_per_block) emitted by ``latent_topk_pallas``.
+
+    Exported so the traffic-model ledger (benchmarks/memory_access.py)
+    stays in lockstep with the kernel's actual candidate count."""
+    bs = min(block_s, s)
+    return -(-s // bs), min(n_critical, bs)
+
+
+def _block_scores(q_ref, k_ref, scale_ref, i: int, bs: int, s: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(1, bs) scores for seq block ``i`` + the (1, bs) iota of column ids.
+
+    Rows past ``s`` (ragged tail of the last block) contract garbage — the
+    caller must mask them with the returned iota before use.
+    """
+    q = q_ref[...].astype(jnp.float32)                      # (1, r*)
+    k = k_ref[0].astype(jnp.float32)                        # (bs, r*)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, bs)
+    if scale_ref is not None:
+        # per-token scale commutes out of the r* contraction
+        scores = scores * scale_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    return scores, col
+
+
+# ---------------------------------------------------------------------------
+# plain scoring (dense (B, S) output — metrics / overlap benchmarks)
+# ---------------------------------------------------------------------------
+
+def _score_body(q_ref, k_ref, scale_ref, o_ref, *, bs: int, s: int):
+    i = pl.program_id(1)
+    scores, col = _block_scores(q_ref, k_ref, scale_ref, i, bs, s)
+    o_ref[...] = jnp.where(i * bs + col < s, scores, 0.0)
+
+
+def _score_kernel_plain(q_ref, k_ref, o_ref, *, bs, s):
+    _score_body(q_ref, k_ref, None, o_ref, bs=bs, s=s)
+
+
+def _score_kernel_scaled(q_ref, k_ref, scale_ref, o_ref, *, bs, s):
+    _score_body(q_ref, k_ref, scale_ref, o_ref, bs=bs, s=s)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s",))
 def latent_score_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                        k_scale: Optional[jnp.ndarray] = None,
                         block_s: int = DEFAULT_BLOCK_S) -> jnp.ndarray:
-    """q_lat: (B, r*); k_lat: (B, S, r>=r*) -> (B, S) f32 scores."""
+    """q_lat: (B, r*); k_lat: (B, S, r>=r*) raw latents (bf16/f32/int8);
+    k_scale: (B, S) per-token scale for int8 latents, else None.
+    Returns (B, S) f32 scores.  No (B, S, r*) host copy is made."""
     b, r_star = q_lat.shape
     s = k_lat.shape[1]
-    k_lat = k_lat[..., :r_star]
     bs = min(block_s, s)
-    s_p = ((s + bs - 1) // bs) * bs
-    if s_p != s:
-        k_lat = jnp.pad(k_lat, ((0, 0), (0, s_p - s), (0, 0)))
+    nb = pl.cdiv(s, bs)
+    in_specs = [
+        pl.BlockSpec((1, r_star), lambda b_, i: (b_, 0)),
+        pl.BlockSpec((1, bs, r_star), lambda b_, i: (b_, i, 0)),
+    ]
+    args = [q_lat, k_lat]
+    if k_scale is not None:
+        in_specs.append(pl.BlockSpec((1, bs), lambda b_, i: (b_, i)))
+        args.append(k_scale)
+        kernel = functools.partial(_score_kernel_scaled, bs=bs, s=s)
+    else:
+        kernel = functools.partial(_score_kernel_plain, bs=bs, s=s)
     out = pl.pallas_call(
-        _score_kernel,
-        grid=(b, s_p // bs),
-        in_specs=[
-            pl.BlockSpec((1, r_star), lambda b_, i: (b_, 0)),
-            pl.BlockSpec((1, bs, r_star), lambda b_, i: (b_, i, 0)),
-        ],
+        kernel,
+        grid=(b, nb),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bs), lambda b_, i: (b_, i)),
-        out_shape=jax.ShapeDtypeStruct((b, s_p), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, nb * bs), jnp.float32),
         interpret=_interpret(),
-    )(q_lat, k_lat)
+    )(*args)
     return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# fused scoring -> per-block partial top-k (the decode hot path)
+# ---------------------------------------------------------------------------
+
+def _topk_body(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref, *,
+               bs: int, s: int, kb: int, n_sink: int, n_recent: int):
+    i = pl.program_id(1)
+    scores, col = _block_scores(q_ref, k_ref, scale_ref, i, bs, s)
+    pos = pos_ref[0]
+    posn = i * bs + col                                     # (1, bs)
+    ok = (posn >= n_sink) & (posn <= pos - n_recent) & (posn < s)
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    def extract(t, sc):
+        m = jnp.max(sc)
+        a = jnp.min(jnp.where(sc == m, col, bs))            # first argmax
+        vals_ref[0, 0, t] = m
+        idx_ref[0, 0, t] = i * bs + a
+        return jnp.where(col == a, NEG_INF, sc)
+
+    jax.lax.fori_loop(0, kb, extract, scores)
+
+
+def _topk_kernel_plain(pos_ref, q_ref, k_ref, vals_ref, idx_ref, **kw):
+    _topk_body(pos_ref, q_ref, k_ref, None, vals_ref, idx_ref, **kw)
+
+
+def _topk_kernel_scaled(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
+                        **kw):
+    _topk_body(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_critical", "n_sink",
+                                             "n_recent", "block_s"))
+def latent_topk_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                       k_scale: Optional[jnp.ndarray], pos, *,
+                       n_critical: int, n_sink: int, n_recent: int,
+                       block_s: int = DEFAULT_BLOCK_S
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused §4.3 scoring + selection over the raw latent cache.
+
+    q_lat: (B, r*); k_lat: (B, S, r); k_scale: (B, S) or None; pos: traced
+    decode position (scalar).  Returns (idx (B, N_c) int32, valid (B, N_c)
+    bool) — identical (incl. tie-breaks) to masking + full-seq lax.top_k.
+    """
+    b, r_star = q_lat.shape
+    s = k_lat.shape[1]
+    bs = min(block_s, s)
+    nb, kb = topk_candidate_shape(s, n_critical, block_s)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    in_specs = [
+        pl.BlockSpec((1, r_star), lambda b_, i, p: (b_, 0)),
+        pl.BlockSpec((1, bs, r_star), lambda b_, i, p: (b_, i, 0)),
+    ]
+    args = [q_lat, k_lat]
+    kw = dict(bs=bs, s=s, kb=kb, n_sink=n_sink, n_recent=n_recent)
+    if k_scale is not None:
+        in_specs.append(pl.BlockSpec((1, bs), lambda b_, i, p: (b_, i)))
+        args.append(k_scale)
+        kernel = functools.partial(_topk_kernel_scaled, **kw)
+    else:
+        kernel = functools.partial(_topk_kernel_plain, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, kb), lambda b_, i, p: (b_, i, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b_, i, p: (b_, i, 0)),
+        ],
+    )
+    cand_v, cand_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, kb), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, kb), jnp.int32),
+        ],
+        interpret=_interpret(),
+    )(pos_arr, *args)
+
+    cand_v = cand_v.reshape(b, nb * kb)
+    cand_i = cand_i.reshape(b, nb * kb)
+    if nb * kb < n_critical:                 # tiny caches: pad the candidates
+        pad = n_critical - nb * kb
+        cand_v = jnp.concatenate(
+            [cand_v, jnp.full((b, pad), NEG_INF, jnp.float32)], axis=1)
+        cand_i = jnp.concatenate(
+            [cand_i, jnp.zeros((b, pad), jnp.int32)], axis=1)
+    vals, top = jax.lax.top_k(cand_v, n_critical)
+    idx = jnp.take_along_axis(cand_i, top, axis=1)
+    return idx, vals > NEG_INF / 2

@@ -244,31 +244,63 @@ def _largest_divisor_block(s: int, target: int) -> int:
 # Latent scoring (SALS stage 2)
 # ---------------------------------------------------------------------------
 
-def latent_score(q_lat: jnp.ndarray, k_lat: jnp.ndarray, *,
+def latent_score(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                 k_scale: Optional[jnp.ndarray] = None, *,
                  backend: Optional[str] = None) -> jnp.ndarray:
-    """q_lat (B, r*), k_lat (B, S, r) -> (B, S) f32."""
+    """q_lat (B, r*), k_lat (B, S, r) raw latents (+ optional int8 per-token
+    ``k_scale`` (B, S)) -> (B, S) f32.  The Pallas path streams the leading
+    r* columns via BlockSpec — no dense slice/pad/dequant copy."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import latent_score as ls
-        return ls.latent_score_pallas(q_lat, k_lat)
-    return _ref.latent_score_ref(q_lat, k_lat)
+        return ls.latent_score_pallas(q_lat, k_lat, k_scale)
+    return _ref.latent_score_ref(q_lat, k_lat, k_scale)
+
+
+def latent_topk(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                k_scale: Optional[jnp.ndarray], pos, *, n_critical: int,
+                n_sink: int, n_recent: int, backend: Optional[str] = None):
+    """Fused scoring + global top-N_c selection over the raw latent cache.
+
+    Returns (idx (B, N_c) int32, valid (B, N_c) bool).  The Pallas path
+    emits per-seq-block candidates so the final ``lax.top_k`` runs over
+    (B, nb·k) instead of (B, S); indices match the oracle exactly
+    (including tie-breaks)."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend == "pallas":
+        from repro.kernels import latent_score as ls
+        return ls.latent_topk_pallas(q_lat, k_lat, k_scale, pos,
+                                     n_critical=n_critical, n_sink=n_sink,
+                                     n_recent=n_recent)
+    return _ref.latent_topk_ref(q_lat, k_lat, k_scale, pos,
+                                n_critical=n_critical, n_sink=n_sink,
+                                n_recent=n_recent)
 
 
 # ---------------------------------------------------------------------------
-# Fused reconstruct→RoPE→sparse-attention (SALS stages 3-4)
+# Fused gather→dequant→reconstruct→RoPE→sparse-attention (SALS stages 3-4)
 # ---------------------------------------------------------------------------
 
-def sparse_recon_attention(q, lat_sel, v_sel, u, sel_pos, valid, q_pos, *,
-                           n_kv: int, theta: float = 10_000.0,
+def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                           idx, valid, q_pos, *, n_kv: int, v_bits: int = 8,
+                           v_group: int = 64, theta: float = 10_000.0,
                            softcap: float = 0.0, use_rope: bool = True,
                            backend: Optional[str] = None):
-    """See kernels/ref.py:sparse_recon_attention_ref for the contract."""
+    """Selected-token decode attention over the RAW cache arrays.
+
+    The top-k ``idx`` (B, N_c) is the only selection artifact passed in; the
+    Pallas path gathers + dequantizes in-kernel via scalar-prefetch indexing
+    (zero HBM intermediates), the "xla"/"naive" oracle gathers with
+    ``take_along_axis``.  See ref.sparse_recon_attention_fused_ref for the
+    full contract."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import sparse_recon_attention as sra
         return sra.sparse_recon_attention_pallas(
-            q, lat_sel, v_sel, u, sel_pos, valid, q_pos,
-            n_kv=n_kv, theta=theta, softcap=softcap, use_rope=use_rope)
-    return _ref.sparse_recon_attention_ref(
-        q, lat_sel, v_sel, u, sel_pos, valid, q_pos,
-        n_kv=n_kv, theta=theta, softcap=softcap, use_rope=use_rope)
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+            n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
+            softcap=softcap, use_rope=use_rope)
+    return _ref.sparse_recon_attention_fused_ref(
+        q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+        n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
+        softcap=softcap, use_rope=use_rope)

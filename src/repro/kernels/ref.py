@@ -44,11 +44,98 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
 
 
-def latent_score_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray) -> jnp.ndarray:
-    """q_lat: (B, r*), k_lat: (B, S, r>=r*) -> (B, S) f32 scores."""
+def latent_score_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                     k_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q_lat: (B, r*), k_lat: (B, S, r>=r*) -> (B, S) f32 scores.
+
+    ``k_scale`` (B, S): per-token dequant scale for int8 latents."""
     r_star = q_lat.shape[-1]
-    return jnp.einsum("br,bsr->bs", q_lat.astype(jnp.float32),
-                      k_lat[..., :r_star].astype(jnp.float32))
+    scores = jnp.einsum("br,bsr->bs", q_lat.astype(jnp.float32),
+                        k_lat[..., :r_star].astype(jnp.float32))
+    if k_scale is not None:
+        scores = scores * k_scale.astype(jnp.float32)
+    return scores
+
+
+def latent_topk_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                    k_scale: Optional[jnp.ndarray], pos, *, n_critical: int,
+                    n_sink: int, n_recent: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused §4.3 scoring + selection oracle over the raw latent cache.
+
+    Scores every cached latent, masks the sink / recent / future ranges,
+    takes the global top-N_c.  Returns (idx (B, N_c) int32, valid (B, N_c)
+    bool); ``valid`` is False for slots that fell on masked entries.
+    """
+    scores = latent_score_ref(q_lat, k_lat, k_scale)
+    positions = jnp.arange(scores.shape[1])
+    mask = (positions >= n_sink) & (positions <= pos - n_recent)
+    masked = jnp.where(mask[None, :], scores, NEG_INF)
+    vals, idx = jax.lax.top_k(masked, n_critical)
+    return idx.astype(jnp.int32), vals > NEG_INF / 2
+
+
+def dequantize_values_ref(code: jnp.ndarray, scale: jnp.ndarray,
+                          zero: jnp.ndarray, v_bits: int, v_group: int
+                          ) -> jnp.ndarray:
+    """KIVI-style group dequant oracle (mirrors core.quantization.dequantize,
+    duplicated here so the kernel layer stays import-free of core).
+
+    code: (..., code_w) int8/uint8; scale/zero: (..., G).  Returns f32."""
+    if v_bits == 4:
+        lo = (code & 0x0F).astype(jnp.float32)
+        hi = ((code >> 4) & 0x0F).astype(jnp.float32)
+        vals = jnp.stack([lo, hi], axis=-1).reshape(
+            *code.shape[:-1], code.shape[-1] * 2)
+    else:
+        vals = code.astype(jnp.float32) + 128.0
+    vg = vals.reshape(*vals.shape[:-1], -1, v_group)
+    out = vg * scale[..., None].astype(jnp.float32) \
+        + zero[..., None].astype(jnp.float32)
+    return out.reshape(vals.shape)
+
+
+def gather_dequant_ref(k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+                       v_q: jnp.ndarray, v_scale: jnp.ndarray,
+                       v_zero: jnp.ndarray, idx: jnp.ndarray, *, v_bits: int,
+                       v_group: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """XLA gather + dequant oracle for the fused kernel's in-kernel gather.
+
+    idx: (B, N_c) cache rows.  Returns (lat (B, N_c, r) f32,
+    v (B, N_c, kvd) f32) — the dense intermediates the Pallas path never
+    materializes.
+    """
+    lat = jnp.take_along_axis(k_lat, idx[..., None], axis=-2) \
+        .astype(jnp.float32)
+    if k_scale is not None:
+        sc = jnp.take_along_axis(k_scale.astype(jnp.float32), idx, axis=-1)
+        lat = lat * sc[..., None]
+    v = dequantize_values_ref(
+        jnp.take_along_axis(v_q, idx[..., None], axis=-2),
+        jnp.take_along_axis(v_scale, idx[..., None], axis=-2),
+        jnp.take_along_axis(v_zero, idx[..., None], axis=-2),
+        v_bits, v_group)
+    return lat, v
+
+
+def sparse_recon_attention_fused_ref(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        n_kv: int, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Index-taking oracle: gather-then-attend in plain jnp.
+
+    Same contract as the fused Pallas kernel — the selected rows' positions
+    are the indices themselves.  This is what the "xla" backend dispatches
+    (CPU + multi-pod dry-run), and the allclose target for interpret tests.
+    """
+    lat, v = gather_dequant_ref(k_lat, k_scale, v_q, v_scale, v_zero, idx,
+                                v_bits=v_bits, v_group=v_group)
+    return sparse_recon_attention_ref(q, lat, v, u, idx, valid, q_pos,
+                                      n_kv=n_kv, theta=theta, softcap=softcap,
+                                      use_rope=use_rope)
 
 
 def sparse_recon_attention_ref(q: jnp.ndarray, lat_sel: jnp.ndarray,

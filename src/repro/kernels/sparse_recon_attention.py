@@ -1,30 +1,42 @@
-"""Pallas TPU kernel — fused reconstruct→RoPE→sparse-attention (SALS
-stages 3-4, the paper's fused Triton kernel adapted to TPU; DESIGN §3).
+"""Pallas TPU kernel — zero-materialization selected-token decode attention
+(SALS stages 3-4: gather → dequant → reconstruct → RoPE → online-softmax).
 
-After XLA gathers the selected latents K̃_C (B, N, r) and dequantized values
-V_C (B, N, kvd), this kernel runs one VMEM-resident pass per (batch, N-tile):
+The top-k indices are the ONLY thing that travels from selection to this
+kernel.  The (B, N_c) index array arrives as a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``); every cache operand's ``index_map``
+dereferences it, so the pipeline DMAs each selected token's row straight
+from the raw cache arrays in HBM into VMEM — the TPU analogue of the
+paper's fused Triton gather (and of paged attention with page size 1):
 
-    1. reconstruct   K_C = K̃_C · U_rᵀ        — (bn×r)·(r×kvd) on the MXU,
-    2. rotate        RoPE(K_C) at the tokens' *original* positions
-                     (cos/sin computed in-register on the VPU),
-    3. score         Q·K_Cᵀ (GQA via a batched head-group matmul),
-    4. accumulate    online-softmax partials (m, l, acc) in VMEM scratch.
+    k_lat   (B, S, r)       bf16 / f32 / int8 latents   -> (1, 1, r) block
+    k_scale (B, S)          int8 latent scale, optional -> (1, 1)
+    v_q     (B, S, code_w)  int8 / packed-int4 codes    -> (1, 1, code_w)
+    v_scale (B, S, G)       per-group quant scale       -> (1, 1, G)
+    v_zero  (B, S, G)       per-group quant zero        -> (1, 1, G)
 
-The reconstructed keys NEVER touch HBM — that is the paper's fusion insight
-restated for the HBM→VMEM→VREG hierarchy (a GPU Triton kernel instead keeps
-them in shared memory).  Returns flash-style partials so the caller can
-LSE-merge with the sink/recent window partials (and, under a sequence-
-sharded cache, across shards with one tiny all-reduce).
+Per selected token, entirely in registers/VMEM:
 
-Working set per grid cell ≈ bn·r + bn·kvd + r·kvd + H·dh floats; with
-bn=128..512, r≤512, kvd≤1280 this stays well under VMEM.
+    1. dequantize the latent (int8 × scale) and the value codes,
+    2. reconstruct  k = k̃ · U_rᵀ  (one (1,r)·(r,kvd) matvec on the MXU),
+    3. RoPE at the token's *original* position (= its cache index, read
+       from the prefetched SMEM array),
+    4. GQA score vs the once-RoPE'd query (cached in VMEM scratch),
+    5. online-softmax accumulate (m, l, acc) across the N_c grid steps.
 
-Validated on CPU via ``interpret=True`` vs ``ref.sparse_recon_attention_ref``.
+No gathered, dequantized, or reconstructed buffer ever touches HBM: the
+selected-token HBM traffic is exactly the §4.5 model's
+N_c·(r·b_lat + v_bytes), vs. the gather-then-attend path's additional
+read+write of dense (B, N_c, r) + (B, N_c, kvd) f32/bf16 intermediates.
+
+Returns flash-style partials (m, l, o) for LSE-merging with the
+sink/recent-window partials (and across shards under a sequence-sharded
+cache).  Validated on CPU via ``interpret=True`` against
+``ref.sparse_recon_attention_fused_ref``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,157 +45,188 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.ref import NEG_INF
 
-DEFAULT_BLOCK_N = 256
-
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _rope_rotate(x32: jnp.ndarray, pos: jnp.ndarray, theta: float
-                 ) -> jnp.ndarray:
-    """Half-rotation RoPE. x32: (..., n, heads, dh) f32; pos: (..., n)."""
+def _rope_one(x32: jnp.ndarray, pos, theta: float) -> jnp.ndarray:
+    """Half-rotation RoPE for one token. x32: (heads, dh) f32; pos scalar."""
     dh = x32.shape[-1]
     half = dh // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
-    ang = pos[..., :, None].astype(jnp.float32) * freqs    # (..., n, half)
-    cos = jnp.cos(ang)[..., :, None, :]
-    sin = jnp.sin(ang)[..., :, None, :]
-    x1, x2 = x32[..., :half], x32[..., half:]
+    ang = pos.astype(jnp.float32) * freqs                   # (half,)
+    cos, sin = jnp.cos(ang)[None, :], jnp.sin(ang)[None, :]
+    x1, x2 = x32[:, :half], x32[:, half:]
     return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
 
 
-def _sra_kernel(q_ref, lat_ref, v_ref, u_ref, pos_ref, valid_ref, qpos_ref,
-                m_ref, l_ref, o_ref, m_s, l_s, acc_s, *,
-                n_kv: int, group: int, theta: float, softcap: float,
-                use_rope: bool, nb: int, bn: int):
-    j = pl.program_id(1)
+def _dequant_token(code: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                   v_bits: int, v_group: int) -> jnp.ndarray:
+    """In-register value dequant for one token.  code: (code_w,);
+    scale/zero: (G,).  Returns (kvd,) f32 (matches quantization.dequantize)."""
+    if v_bits == 4:
+        lo = (code & 0x0F).astype(jnp.float32)
+        hi = ((code >> 4) & 0x0F).astype(jnp.float32)
+        vals = jnp.stack([lo, hi], axis=-1).reshape(code.shape[0] * 2)
+    else:
+        vals = code.astype(jnp.float32) + 128.0
+    vg = vals.reshape(-1, v_group)
+    out = vg * scale[:, None].astype(jnp.float32) \
+        + zero[:, None].astype(jnp.float32)
+    return out.reshape(vals.shape)
 
-    @pl.when(j == 0)
+
+def _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
+                vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
+                m_s, l_s, acc_s, q_s, *, n_kv: int, group: int, theta: float,
+                softcap: float, use_rope: bool, nc: int, v_bits: int,
+                v_group: int):
+    b_, n_ = pl.program_id(0), pl.program_id(1)
+    h, dh = q_ref.shape[1], q_ref.shape[2]
+
+    @pl.when(n_ == 0)
     def _init():
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
+        q32 = q_ref[0].astype(jnp.float32)                  # (H, dh)
+        q_s[...] = _rope_one(q32, qpos_ref[b_], theta) if use_rope else q32
 
-    h, dh = q_ref.shape[1], q_ref.shape[2]
-    # ---- 1. reconstruct: K = lat · Uᵀ  (bn, r)·(r, kvd) -------------------
-    lat = lat_ref[0].astype(jnp.float32)                    # (bn, r)
-    u = u_ref[...].astype(jnp.float32)                      # (kvd, r)
+    # ---- 1. dequantize latent (this block IS cache row idx[b, n]) ---------
+    lat = lat_ref[0].astype(jnp.float32)                    # (1, r)
+    if kscale_ref is not None:
+        lat = lat * kscale_ref[0, 0].astype(jnp.float32)
+
+    # ---- 2. reconstruct: k = lat · Uᵀ  (1, r)·(kvd, r)ᵀ --------------------
     k_flat = jax.lax.dot_general(
-        lat, u, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)                 # (bn, kvd)
-    k_pre = k_flat.reshape(bn, n_kv, dh)
+        lat, u_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, kvd)
+    k_pre = k_flat.reshape(n_kv, dh)
 
-    # ---- 2. RoPE at original positions ------------------------------------
-    pos = pos_ref[0]                                        # (bn,) int32
-    if use_rope:
-        k_r = _rope_rotate(k_pre, pos, theta)
-        q_r = _rope_rotate(q_ref[0].astype(jnp.float32)[None],
-                           qpos_ref[0][None].astype(jnp.float32),
-                           theta)[0]                        # (H, dh)
-    else:
-        k_r = k_pre
-        q_r = q_ref[0].astype(jnp.float32)
+    # ---- 3. RoPE at the original position (= the cache index) -------------
+    pos = idx_ref[b_, n_]
+    k_r = _rope_one(k_pre, pos, theta) if use_rope else k_pre
 
-    # ---- 3. GQA scores: (n_kv, G, dh) · (n_kv, dh, bn) ---------------------
-    q_g = q_r.reshape(n_kv, group, dh)
-    k_t = jnp.swapaxes(k_r, 0, 1)                           # (n_kv, bn, dh)
-    logits = jax.lax.dot_general(
-        q_g, k_t, (((2,), (2,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)                 # (n_kv, G, bn)
-    logits = logits.reshape(h, bn) * (dh ** -0.5)
+    # ---- 4. GQA score vs the cached RoPE'd query ---------------------------
+    q_g = q_s[...].reshape(n_kv, group, dh)
+    logits = jnp.sum(q_g * k_r[:, None, :], axis=-1)        # (n_kv, group)
+    logits = logits.reshape(h) * (dh ** -0.5)
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
-    valid = valid_ref[0] != 0                               # (bn,)
-    logits = jnp.where(valid[None, :], logits, NEG_INF)
+    logits = jnp.where(valid_ref[b_, n_] != 0, logits, NEG_INF)
 
-    # ---- 4. online-softmax accumulate --------------------------------------
-    v = v_ref[0].astype(jnp.float32)                        # (bn, kvd)
+    # ---- 5. dequant value + online-softmax accumulate ----------------------
+    v_tok = _dequant_token(vq_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
+                           v_bits, v_group).reshape(n_kv, dh)
     m_prev = m_s[:, 0]
-    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))   # (H,)
-    p = jnp.exp(logits - m_new[:, None])
-    p = jnp.where(logits <= NEG_INF / 2, 0.0, p)            # (H, bn)
+    m_new = jnp.maximum(m_prev, logits)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, jnp.exp(logits - m_new))
     alpha = jnp.exp(m_prev - m_new)
-    l_s[:, 0] = l_s[:, 0] * alpha + jnp.sum(p, axis=-1)
-    # GQA value contraction: (n_kv, G, bn) · (n_kv, bn, dh)
-    p_g = p.reshape(n_kv, group, bn)
-    v_g = jnp.swapaxes(v.reshape(bn, n_kv, dh), 0, 1)       # (n_kv, bn, dh)
-    pv = jax.lax.dot_general(
-        p_g, v_g, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)                 # (n_kv, G, dh)
-    acc_s[...] = acc_s[...] * alpha[:, None] + pv.reshape(h, dh)
+    l_s[:, 0] = l_s[:, 0] * alpha + p
+    p_g = p.reshape(n_kv, group)
+    acc_s[...] = acc_s[...] * alpha[:, None] \
+        + (p_g[:, :, None] * v_tok[:, None, :]).reshape(h, dh)
     m_s[:, 0] = m_new
 
-    @pl.when(j == nb - 1)
+    @pl.when(n_ == nc - 1)
     def _finish():
         m_ref[0] = m_s[:, 0]
         l_ref[0] = l_s[:, 0]
         o_ref[0] = acc_s[...]
 
 
-@functools.partial(jax.jit, static_argnames=("n_kv", "theta", "softcap",
-                                             "use_rope", "block_n"))
-def sparse_recon_attention_pallas(
-        q: jnp.ndarray, lat_sel: jnp.ndarray, v_sel: jnp.ndarray,
-        u: jnp.ndarray, sel_pos: jnp.ndarray, valid: jnp.ndarray,
-        q_pos: jnp.ndarray, *, n_kv: int, theta: float = 10_000.0,
-        softcap: float = 0.0, use_rope: bool = True,
-        block_n: int = DEFAULT_BLOCK_N
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused decode partial-attention over the selected token block.
+def _fused_kernel_plain(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref,
+                        vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
+                        m_s, l_s, acc_s, q_s, **kw):
+    _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, None,
+                vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
+                m_s, l_s, acc_s, q_s, **kw)
 
-    q: (B, H, dh) pre-RoPE query; lat_sel: (B, N, r); v_sel: (B, N, kvd);
-    u: (kvd, r); sel_pos/valid: (B, N); q_pos: scalar or (B,).
+
+def _fused_kernel_scaled(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref,
+                         kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                         m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
+                vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
+                m_s, l_s, acc_s, q_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "v_bits", "v_group",
+                                             "theta", "softcap", "use_rope"))
+def sparse_recon_attention_pallas(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        n_kv: int, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused decode partial-attention, gathered in-kernel from the raw cache.
+
+    q: (B, H, dh) pre-RoPE query; k_lat: (B, S, r); k_scale: (B, S) or None;
+    v_q: (B, S, code_w); v_scale/v_zero: (B, S, G); u: (kvd, r);
+    idx/valid: (B, N_c) selected cache rows; q_pos: scalar or (B,).
     Returns (m (B,H), l (B,H), o (B,H,dh)) flash partials, f32.
     """
     b, h, dh = q.shape
-    n = lat_sel.shape[1]
-    r = lat_sel.shape[2]
+    r = k_lat.shape[2]
+    code_w = v_q.shape[2]
+    g = v_scale.shape[2]
     kvd = u.shape[0]
+    nc = idx.shape[1]
     group = h // n_kv
-    bn = min(block_n, n)
-    n_p = ((n + bn - 1) // bn) * bn
-    if n_p != n:
-        pad = ((0, 0), (0, n_p - n))
-        lat_sel = jnp.pad(lat_sel, (*pad, (0, 0)))
-        v_sel = jnp.pad(v_sel, (*pad, (0, 0)))
-        sel_pos = jnp.pad(sel_pos, pad)
-        valid = jnp.pad(valid, pad)
-    nb = n_p // bn
-    q_pos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+
+    idx_i = idx.astype(jnp.int32)
     valid_i = valid.astype(jnp.int32)
+    qpos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
 
-    kernel = functools.partial(
-        _sra_kernel, n_kv=n_kv, group=group, theta=theta, softcap=softcap,
-        use_rope=use_rope, nb=nb, bn=bn)
+    in_specs = [
+        pl.BlockSpec((1, h, dh), lambda b_, n_, i_, v_, p_: (b_, 0, 0)),
+        pl.BlockSpec((1, 1, r), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
+    ]
+    args = [q, k_lat]
+    kw = dict(n_kv=n_kv, group=group, theta=theta, softcap=softcap,
+              use_rope=use_rope, nc=nc, v_bits=v_bits, v_group=v_group)
+    if k_scale is not None:
+        in_specs.append(
+            pl.BlockSpec((1, 1), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_])))
+        args.append(k_scale)
+        kernel = functools.partial(_fused_kernel_scaled, **kw)
+    else:
+        kernel = functools.partial(_fused_kernel_plain, **kw)
+    in_specs += [
+        pl.BlockSpec((1, 1, code_w),
+                     lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((kvd, r), lambda b_, n_, i_, v_, p_: (0, 0)),
+    ]
+    args += [v_q, v_scale, v_zero, u]
 
-    m, l, o = pl.pallas_call(
-        kernel,
-        grid=(b, nb),
-        in_specs=[
-            pl.BlockSpec((1, h, dh), lambda b_, j: (b_, 0, 0)),     # q
-            pl.BlockSpec((1, bn, r), lambda b_, j: (b_, j, 0)),     # latents
-            pl.BlockSpec((1, bn, kvd), lambda b_, j: (b_, j, 0)),   # values
-            pl.BlockSpec((kvd, r), lambda b_, j: (0, 0)),           # U (resident)
-            pl.BlockSpec((1, bn), lambda b_, j: (b_, j)),           # positions
-            pl.BlockSpec((1, bn), lambda b_, j: (b_, j)),           # valid
-            pl.BlockSpec((1,), lambda b_, j: (b_,)),                # q_pos
-        ],
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, nc),
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
-            pl.BlockSpec((1, h), lambda b_, j: (b_, 0)),
-            pl.BlockSpec((1, h, dh), lambda b_, j: (b_, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h), jnp.float32),
-            jax.ShapeDtypeStruct((b, h), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_: (b_, 0)),
+            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_: (b_, 0)),
+            pl.BlockSpec((1, h, dh), lambda b_, n_, i_, v_, p_: (b_, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, 1), jnp.float32),
             pltpu.VMEM((h, dh), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
         ],
         interpret=_interpret(),
-    )(q, lat_sel, v_sel, u, sel_pos, valid_i, q_pos_b)
+    )(idx_i, valid_i, qpos_b, *args)
     return m, l, o

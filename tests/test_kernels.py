@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quantization as qz
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.latent_score import latent_score_pallas
+from repro.kernels.latent_score import latent_score_pallas, latent_topk_pallas
 from repro.kernels.sparse_recon_attention import sparse_recon_attention_pallas
 
 KEY = jax.random.PRNGKey(0)
@@ -93,7 +94,7 @@ def test_flash_xla_long_matches_naive():
 
 
 # ---------------------------------------------------------------------------
-# latent score
+# latent score + fused top-k selection
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("b,s,r,r_star", [
@@ -108,76 +109,206 @@ def test_latent_score_matches_ref(b, s, r, r_star, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
 
 
+def test_latent_score_int8_scale():
+    b, s, r, r_star = 2, 300, 64, 32
+    lat = jax.random.normal(KEY, (b, s, r))
+    k_q, k_scale = qz.quantize_latent_int8(lat)
+    q_lat = jax.random.normal(jax.random.fold_in(KEY, 7), (b, r_star))
+    got = latent_score_pallas(q_lat, k_q, k_scale, block_s=128)
+    want = ref.latent_score_ref(q_lat, k_q, k_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("s,block_s,n_critical", [
+    (256, 64, 32),       # multi-block
+    (1000, 256, 48),     # ragged tail block
+    (100, 256, 64),      # single padded block
+    (300, 64, 200),      # n_critical > block -> candidate padding
+])
+@pytest.mark.parametrize("int8", [False, True])
+def test_latent_topk_matches_ref_exactly(s, block_s, n_critical, int8):
+    """Per-block partial top-k + merge must equal full-seq lax.top_k
+    bit-for-bit (indices AND valid), including tie-break order."""
+    b, r, r_star = 2, 32, 16
+    pos = jnp.int32(s - 1)
+    lat = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, r))
+    if int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    q_lat = jax.random.normal(jax.random.fold_in(KEY, 3), (b, r_star))
+    i_p, v_p = latent_topk_pallas(q_lat, k_lat, k_scale, pos,
+                                  n_critical=n_critical, n_sink=4,
+                                  n_recent=16, block_s=block_s)
+    i_r, v_r = ref.latent_topk_ref(q_lat, k_lat, k_scale, pos,
+                                   n_critical=n_critical, n_sink=4,
+                                   n_recent=16)
+    assert np.array_equal(np.asarray(i_p), np.asarray(i_r))
+    assert np.array_equal(np.asarray(v_p), np.asarray(v_r))
+
+
+def test_latent_topk_short_sequence_invalid_slots():
+    """pos early in the sequence -> fewer selectable than N_c -> the extra
+    slots must come back invalid, never NaN."""
+    b, s, r = 1, 128, 16
+    k_lat = jax.random.normal(KEY, (b, s, r), jnp.float32)
+    q_lat = jax.random.normal(jax.random.fold_in(KEY, 4), (b, r))
+    idx, valid = latent_topk_pallas(q_lat, k_lat, None, jnp.int32(20),
+                                    n_critical=32, n_sink=4, n_recent=8,
+                                    block_s=64)
+    n_selectable = (20 - 8) - 4 + 1          # [n_sink, pos - n_recent]
+    assert int(valid.sum()) == n_selectable
+    sel = np.asarray(idx)[np.asarray(valid)]
+    assert sel.min() >= 4 and sel.max() <= 12
+
+
 # ---------------------------------------------------------------------------
-# fused reconstruct-RoPE-attention
+# fused gather→dequant→reconstruct→RoPE→attention
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("b,h,n_kv,dh,n,r", [
-    (1, 4, 2, 64, 64, 32),
-    (2, 8, 2, 64, 100, 96),      # n not a block multiple -> padding
-    (2, 8, 1, 128, 256, 64),     # MQA, gemma-style head_dim
-    (1, 6, 6, 32, 50, 48),       # MHA
-])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_sparse_recon_attention_matches_ref(b, h, n_kv, dh, n, r, dtype):
+def _fused_inputs(b, h, n_kv, dh, s, r, nc, *, k_int8, v_bits, v_group,
+                  valid_frac=0.85, seed=0):
     kvd = n_kv * dh
-    ks = jax.random.split(KEY, 6)
-    q = jax.random.normal(ks[0], (b, h, dh), dtype)
-    lat = jax.random.normal(ks[1], (b, n, r), dtype)
-    vs = jax.random.normal(ks[2], (b, n, kvd), dtype)
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 7)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd)) * 2.0
+    vq = qz.quantize(v, v_bits, v_group)
     u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
-    pos = jax.random.randint(ks[4], (b, n), 0, 500)
-    valid = jax.random.bernoulli(ks[5], 0.85, (b, n))
-    qp = jnp.full((b,), 600, jnp.int32)
-    m1, l1, o1 = sparse_recon_attention_pallas(
-        q, lat, vs, u, pos, valid, qp, n_kv=n_kv, block_n=32)
-    m2, l2, o2 = ref.sparse_recon_attention_ref(
-        q, lat, vs, u, pos, valid, qp, n_kv=n_kv)
-    t = tol(dtype)
-    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), **t)
-    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
-                               rtol=10 * t["rtol"], atol=10 * t["atol"])
+    idx = jax.random.randint(ks[4], (b, nc), 0, s)
+    valid = jax.random.bernoulli(ks[5], valid_frac, (b, nc))
+    qp = jnp.full((b,), s + 7, jnp.int32)
+    return (q, k_lat, k_scale, vq["q"], vq["scale"], vq["zero"], u, idx,
+            valid, qp)
+
+
+def _assert_fused_close(args, kw, rtol=1e-3, atol=1e-3):
+    m1, l1, o1 = sparse_recon_attention_pallas(*args, **kw)
+    m2, l2, o2 = ref.sparse_recon_attention_fused_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=rtol,
+                               atol=atol)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=rtol,
+                               atol=atol)
     y1 = np.asarray(o1) / np.maximum(np.asarray(l1), 1e-30)[..., None]
     y2 = np.asarray(o2) / np.maximum(np.asarray(l2), 1e-30)[..., None]
-    np.testing.assert_allclose(y1, y2, rtol=10 * t["rtol"],
-                               atol=10 * t["atol"])
+    np.testing.assert_allclose(y1, y2, rtol=rtol, atol=atol)
 
 
-def test_sparse_recon_attention_no_rope():
-    """NoPE path (hubert-style)."""
-    b, h, n_kv, dh, n, r = 1, 4, 2, 64, 64, 32
-    kvd = n_kv * dh
-    ks = jax.random.split(KEY, 6)
-    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
-    lat = jax.random.normal(ks[1], (b, n, r), jnp.float32)
-    vs = jax.random.normal(ks[2], (b, n, kvd), jnp.float32)
-    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
-    pos = jax.random.randint(ks[4], (b, n), 0, 500)
-    valid = jnp.ones((b, n), bool)
-    qp = jnp.full((b,), 600, jnp.int32)
-    outs_p = sparse_recon_attention_pallas(q, lat, vs, u, pos, valid, qp,
-                                           n_kv=n_kv, use_rope=False,
-                                           block_n=32)
-    outs_r = ref.sparse_recon_attention_ref(q, lat, vs, u, pos, valid, qp,
-                                            n_kv=n_kv, use_rope=False)
-    for a, b_ in zip(outs_p, outs_r):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
-                                   rtol=2e-4, atol=2e-4)
+@pytest.mark.parametrize("h,n_kv,dh", [
+    (4, 2, 64),      # GQA group 2
+    (8, 2, 64),      # GQA group 4
+    (8, 1, 128),     # MQA, gemma-style head_dim
+    (6, 6, 32),      # MHA
+])
+@pytest.mark.parametrize("k_int8", [False, True])
+def test_fused_sra_matches_oracle_gqa_dtypes(h, n_kv, dh, k_int8):
+    args = _fused_inputs(2, h, n_kv, dh, 200, 32, 48, k_int8=k_int8,
+                         v_bits=8, v_group=32)
+    _assert_fused_close(args, dict(n_kv=n_kv, v_bits=8, v_group=32))
 
 
-def test_all_invalid_rows_are_safe():
-    """A row with zero valid tokens must produce l=0, o=0 (no NaNs)."""
-    b, h, n_kv, dh, n, r = 1, 2, 1, 32, 32, 16
-    kvd = n_kv * dh
-    q = jax.random.normal(KEY, (b, h, dh), jnp.float32)
-    lat = jax.random.normal(KEY, (b, n, r), jnp.float32)
-    vs = jax.random.normal(KEY, (b, n, kvd), jnp.float32)
-    u = jax.random.normal(KEY, (kvd, r), jnp.float32)
-    pos = jnp.zeros((b, n), jnp.int32)
-    valid = jnp.zeros((b, n), bool)
-    qp = jnp.zeros((b,), jnp.int32)
-    m, l, o = sparse_recon_attention_pallas(q, lat, vs, u, pos, valid, qp,
-                                            n_kv=n_kv, block_n=16)
+@pytest.mark.parametrize("v_bits", [8, 4])
+@pytest.mark.parametrize("use_rope", [True, False])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_fused_sra_rope_softcap_vbits(v_bits, use_rope, softcap):
+    args = _fused_inputs(1, 4, 2, 64, 160, 32, 40, k_int8=False,
+                         v_bits=v_bits, v_group=32, seed=3)
+    _assert_fused_close(args, dict(n_kv=2, v_bits=v_bits, v_group=32,
+                                   use_rope=use_rope, softcap=softcap))
+
+
+def test_fused_sra_ragged_validity():
+    """Mostly-invalid selection (short sequences): padding slots must not
+    contribute, and fully-invalid rows must give l=0, o=0, no NaN."""
+    args = _fused_inputs(2, 4, 2, 32, 96, 16, 24, k_int8=False, v_bits=8,
+                         v_group=16, valid_frac=0.3, seed=5)
+    _assert_fused_close(args, dict(n_kv=2, v_bits=8, v_group=16))
+    # all-invalid row
+    args = list(args)
+    args[8] = jnp.zeros_like(args[8])        # valid
+    m, l, o = sparse_recon_attention_pallas(*args, n_kv=2, v_bits=8,
+                                            v_group=16)
     assert np.all(np.asarray(l) == 0.0)
     assert np.all(np.asarray(o) == 0.0)
     assert not np.any(np.isnan(np.asarray(m)))
+
+
+def test_fused_sra_positions_are_indices():
+    """RoPE must be applied at each selected token's ORIGINAL position,
+    i.e. its cache row index: permuting idx permutes (m, per-token p)
+    consistently -> merged output is permutation-invariant."""
+    args = _fused_inputs(1, 4, 2, 64, 128, 32, 32, k_int8=False, v_bits=8,
+                         v_group=32, valid_frac=1.0, seed=9)
+    kw = dict(n_kv=2, v_bits=8, v_group=32)
+    m1, l1, o1 = sparse_recon_attention_pallas(*args, **kw)
+    perm = jax.random.permutation(KEY, args[7].shape[1])
+    args2 = list(args)
+    args2[7] = args[7][:, perm]
+    args2[8] = args[8][:, perm]
+    m2, l2, o2 = sparse_recon_attention_pallas(*args2, **kw)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-5,
+                               atol=1e-5)
+    y1 = np.asarray(o1) / np.asarray(l1)[..., None]
+    y2 = np.asarray(o2) / np.asarray(l2)[..., None]
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# no dense-copy guarantee (the §4.5 traffic model, enforced on the jaxpr)
+# ---------------------------------------------------------------------------
+
+def _walk_eqns(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        out.append(eqn)
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                _walk_eqns(v.jaxpr, out)
+            elif hasattr(v, "eqns"):         # Jaxpr
+                _walk_eqns(v, out)
+            elif isinstance(v, (list, tuple)):
+                for x in v:
+                    if hasattr(x, "jaxpr"):
+                        _walk_eqns(x.jaxpr, out)
+                    elif hasattr(x, "eqns"):
+                        _walk_eqns(x, out)
+    return out
+
+
+def test_fused_path_materializes_no_cache_scale_buffers():
+    """The decode hot path must not create any intermediate on the order of
+    the old dense copies: the (B,S,r*) score-slice/pad, the (B,S,r) dequant
+    pass, or the gathered (B,N_c,kvd) value buffer.  Every eqn output in the
+    traced pipeline must stay below the smallest of those."""
+    b, s, r, r_star, n_kv, dh, h, nc, vg = 2, 512, 32, 16, 2, 64, 4, 64, 32
+    kvd = n_kv * dh
+    args = _fused_inputs(b, h, n_kv, dh, s, r, nc, k_int8=True, v_bits=8,
+                         v_group=vg, seed=11)
+    q, k_lat, k_scale, v_q, v_scale, v_zero, u = args[:7]
+    q_lat = jax.random.normal(KEY, (b, r_star))
+    pos = jnp.int32(s - 1)
+
+    def fused_pipeline(q, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u):
+        idx, valid = ops.latent_topk(q_lat, k_lat, k_scale, pos,
+                                     n_critical=nc, n_sink=4, n_recent=16,
+                                     backend="pallas")
+        return ops.sparse_recon_attention(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+            n_kv=n_kv, v_bits=8, v_group=vg, backend="pallas")
+
+    jaxpr = jax.make_jaxpr(fused_pipeline)(q, q_lat, k_lat, k_scale, v_q,
+                                           v_scale, v_zero, u)
+    limit = min(b * s * r_star,              # old score slice/pad copy
+                b * s * r,                   # old dense dequant pass
+                b * nc * kvd)                # old gathered value buffer
+    offenders = []
+    for eqn in _walk_eqns(jaxpr.jaxpr, []):
+        for ov in eqn.outvars:
+            size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if size >= limit:
+                offenders.append((eqn.primitive.name, ov.aval.shape))
+    assert not offenders, offenders

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:                       # optional dev extra (pip install .[dev]) — guarded
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # property tests skip; everything else still runs
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.config import TrainConfig
 from repro.data import SyntheticCorpus, byte_decode, byte_encode, make_batches
