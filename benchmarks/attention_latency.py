@@ -55,8 +55,8 @@ def measured_rows():
                           n_sink=16, n_recent=64, v_group=32)
         proj = cal.random_layer_projectors(key, cfg, sals, 1)
         u = proj["u"][0]
-        cache = lc.init_latent_cache(cfg, sals, 1, bs, s, jnp.float32)
-        layer = jax.tree.map(lambda a: a[0], cache)
+        cache = lc.LatentKVCache.init(cfg, sals, 1, bs, s, jnp.float32)
+        layer = cache.layer_view(0)
 
         @jax.jit
         def sparse(x, layer):

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.config import SALSConfig
 from repro.configs import get_config
+from repro.core import calibration as _cal
 from repro.core import latent_cache as lc
 from benchmarks import common
 
@@ -90,9 +91,10 @@ def decode_stage_bytes(cfg, sals: SALSConfig, s: int, fused: bool) -> dict:
         kernel_pad = 2 * nc_p * (r + kvd) * 2 if nc_p != nc else 0
         selected = gather_read + gather_write + kernel_pad \
             + nc_p * (r + kvd) * 2
-    # identical on both paths: U_r (resident f32), sink+recent window K/V
+    # identical on both paths: U_r (resident, stored bf16 with f32
+    # in-kernel accumulate — see calibration.U_DTYPE), sink+recent window
     window = (sals.n_sink + sals.n_recent) * 2 * kvd * 2
-    u_bytes = kvd * r * 4
+    u_bytes = kvd * r * jnp.dtype(_cal.U_DTYPE).itemsize
     return {
         "score_bytes": score,
         "selected_bytes": selected,

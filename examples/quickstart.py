@@ -4,8 +4,11 @@
 
 1. build a reduced llama-family model (yi-9b geometry, tiny dims)
 2. calibrate the latent projector on synthetic pre-RoPE keys (paper §4.2)
-3. prefill a prompt into the compressed latent cache
-4. decode with sparse attention in latent space (paper Algorithm 1)
+3. prefill a prompt into the typed ``LatentKVCache`` (a registered-pytree
+   dataclass — compression bookkeeping derives from its field dtypes)
+4. decode with sparse attention in latent space (paper Algorithm 1) — both
+   the paper-faithful global top-k and the grouped (sequence-sharded)
+   layout, which run through the SAME fused decode path
 5. compare against the uncompressed full-attention decode
 """
 import time
@@ -16,7 +19,7 @@ import numpy as np
 
 from repro.config import SALSConfig, ServeConfig
 from repro.configs import get_config
-from repro.core import latent_cache as lc
+from repro.core.latent_cache import LatentKVCache, cache_bytes_per_token
 from repro.data import SyntheticCorpus
 from repro.launch.serve import calibrate
 from repro.models import transformer as tf
@@ -39,11 +42,16 @@ def main():
     projectors = calibrate(params, cfg, sals, corpus, n_sequences=8,
                            seq_len=64)
     r = sals.rank(cfg.kv_dim)
-    print(f"calibrated U_r: rank {r}/{cfg.kv_dim} per layer "
-          f"({time.time() - t0:.1f}s)")
-    print(f"cache: {lc.cache_bytes_per_token(cfg, sals):.0f} B/token/layer "
-          f"vs {4 * cfg.kv_dim} B full  "
-          f"(={4 * cfg.kv_dim / lc.cache_bytes_per_token(cfg, sals):.1f}x)")
+    print(f"calibrated U_r: rank {r}/{cfg.kv_dim} per layer, "
+          f"stored {projectors['u'].dtype} ({time.time() - t0:.1f}s)")
+    # bookkeeping derives from the typed cache's field shapes/dtypes
+    bpt = cache_bytes_per_token(cfg, sals)
+    print(f"cache: {bpt:.0f} B/token/layer vs {4 * cfg.kv_dim} B full  "
+          f"(={4 * cfg.kv_dim / bpt:.1f}x)")
+    shapes = jax.eval_shape(lambda: LatentKVCache.init(cfg, sals, 1, 1, 128))
+    print(f"LatentKVCache fields: k_lat{shapes.k_lat.shape[1:]} "
+          f"{shapes.k_lat.dtype}, v_q{shapes.v_q.shape[1:]} "
+          f"{shapes.v_q.dtype} (+ scales, sink/recent rings)")
 
     prompts = [corpus.batch(100 + i, 1, 48)["tokens"][0] for i in range(2)]
     engines = {
@@ -51,6 +59,10 @@ def main():
             max_seq_len=128, sals=SALSConfig(enabled=False))),
         "sals": ServeEngine(params, projectors, cfg, ServeConfig(
             max_seq_len=128, sals=sals)),
+        # grouped layout (n_groups rides as cache metadata): what a
+        # kv_seq-sharded deployment runs, same fused kernels per slab
+        "sals-g2": ServeEngine(params, projectors, cfg, ServeConfig(
+            max_seq_len=128, sals=sals), n_groups=2),
     }
     outs = {}
     for name, eng in engines.items():
@@ -58,11 +70,12 @@ def main():
         outs[name] = eng.generate(prompts, max_new_tokens=12)
         print(f"{name}: {[r.tokens.tolist() for r in outs[name]]} "
               f"({time.time() - t0:.1f}s)")
-    agree = np.mean([np.mean(a.tokens == b.tokens)
-                     for a, b in zip(outs["full"], outs["sals"])])
-    print(f"token agreement full vs SALS-25%: {agree:.0%} "
-          f"(random weights -> diffuse attention; see "
-          f"examples/train_then_serve.py for the trained-model comparison)")
+    for name in ("sals", "sals-g2"):
+        agree = np.mean([np.mean(a.tokens == b.tokens)
+                         for a, b in zip(outs["full"], outs[name])])
+        print(f"token agreement full vs {name}: {agree:.0%} "
+              f"(random weights -> diffuse attention; see "
+              f"examples/train_then_serve.py for the trained-model run)")
 
 
 if __name__ == "__main__":

@@ -75,15 +75,23 @@ def main():
                       skip_layers_front=1, skip_layers_back=1)
     projectors = calibrate(state["params"], cfg, sals, corpus,
                            n_sequences=16, seq_len=args.seq_len)
-    print(f"SALS calibrated: rank {sals.rank(cfg.kv_dim)}/{cfg.kv_dim}")
+    from repro.core.latent_cache import cache_bytes_per_token
+    print(f"SALS calibrated: rank {sals.rank(cfg.kv_dim)}/{cfg.kv_dim}, "
+          f"U_r stored {projectors['u'].dtype}; LatentKVCache stores "
+          f"{cache_bytes_per_token(cfg, sals):.0f} B/token/layer "
+          f"vs {4 * cfg.kv_dim} full")
 
     # ---- serve through the batched scheduler -------------------------------
+    # "sals25-g2" runs the grouped decode layout (per-slab top-k + LSE
+    # merge — what a sequence-sharded mesh runs), via the same fused path
     results = {}
-    for name, proj, s in (("full", None, SALSConfig(enabled=False)),
-                          ("sals25", projectors, sals)):
+    for name, proj, s, groups in (
+            ("full", None, SALSConfig(enabled=False), 1),
+            ("sals25", projectors, sals, 1),
+            ("sals25-g2", projectors, sals, 2)):
         eng = ServeEngine(state["params"], proj, cfg,
                           ServeConfig(max_seq_len=2 * args.seq_len,
-                                      max_batch=4, sals=s))
+                                      max_batch=4, sals=s), n_groups=groups)
         sched = RequestScheduler(eng)
         for i in range(8):
             sched.submit(Request(corpus.batch(70_000 + i, 1, 64)["tokens"][0],
@@ -95,9 +103,10 @@ def main():
         results[name] = done
         print(f"{name}: {toks} tokens in {dt:.1f}s -> {toks / dt:.1f} tok/s")
 
-    agree = np.mean([np.mean(a.result.tokens == b.result.tokens)
-                     for a, b in zip(results["full"], results["sals25"])])
-    print(f"greedy token agreement (SALS-25% vs full): {agree:.1%}")
+    for name in ("sals25", "sals25-g2"):
+        agree = np.mean([np.mean(a.result.tokens == b.result.tokens)
+                         for a, b in zip(results["full"], results[name])])
+        print(f"greedy token agreement ({name} vs full): {agree:.1%}")
 
 
 if __name__ == "__main__":

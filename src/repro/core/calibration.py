@@ -40,14 +40,24 @@ def collect_keys(key_fn: Callable[[jnp.ndarray], jnp.ndarray],
     return out[:, :max_tokens]
 
 
+U_DTYPE = jnp.bfloat16   # stored projector dtype: the fused decode kernels
+#                          read U_r as a resident operand (kvd·r·2 bytes in
+#                          the §4.5 ledger) and accumulate in f32 in-kernel
+
+
 def fit_layer_projectors(keys: np.ndarray, rank: int) -> dict:
-    """keys: (L, n, kvd) -> {"u": (L, kvd, r) f32, "eigvals": (L, kvd)}."""
+    """keys: (L, n, kvd) -> {"u": (L, kvd, r) bf16, "eigvals": (L, kvd) f32}.
+
+    U_r is STORED in bf16 (halves the kernel-resident bytes vs f32); every
+    consumer — latent projection, truncated scoring, in-kernel reconstruct —
+    upcasts to f32 for the contraction, so only the storage precision drops.
+    """
     us, evs = [], []
     for l in range(keys.shape[0]):
         p = fit_projector(keys[l], rank)
         us.append(p["u"])
         evs.append(p["eigvals"])
-    return {"u": jnp.stack(us), "eigvals": jnp.stack(evs)}
+    return {"u": jnp.stack(us).astype(U_DTYPE), "eigvals": jnp.stack(evs)}
 
 
 def adaptive_ranks(eigvals, target_energy: float = 0.90,
@@ -85,7 +95,7 @@ def random_layer_projectors(key, cfg: ModelConfig, sals: SALSConfig,
         g = jax.random.normal(k, (kvd, kvd), jnp.float32)
         q, _ = jnp.linalg.qr(g)
         qs.append(q[:, :r])
-    return {"u": jnp.stack(qs),
+    return {"u": jnp.stack(qs).astype(U_DTYPE),
             "eigvals": jnp.ones((n_layers, kvd), jnp.float32)}
 
 

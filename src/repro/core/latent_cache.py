@@ -1,8 +1,11 @@
-"""Latent KV cache (paper §4.2 + §5.1 mixed-precision scheme).
+"""Typed latent KV cache (paper §4.2 + §5.1 mixed-precision scheme).
 
-Per SALS layer the cache stores, for every position:
+:class:`LatentKVCache` is a registered-pytree dataclass — the decode cache is
+a first-class object rather than a bag of arrays.  Per SALS layer it stores,
+for every position:
   * ``k_lat``   — pre-RoPE keys projected to the r-dim latent space
-                  (bf16, or int8+scale under the beyond-paper latent quant),
+                  (bf16, or int8 + per-token ``k_scale`` under the
+                  beyond-paper latent quant),
   * ``v_q``     — channel-group-quantized values (+ per-group scale/zero),
 and two small full-precision regions that are *always* attended:
   * ``sink_k/v``   — the first ``n_sink`` tokens (pre-RoPE K),
@@ -13,12 +16,26 @@ Sink/recent tokens also exist in the latent arrays (written once, never
 selected — the scoring mask excludes their ranges) so a token sliding out of
 the recent ring becomes selectable without any copying.
 
-All arrays carry a leading layer axis L so the decode loop can
-``lax.scan`` over layers; batch is axis 1, sequence axis 2.
+Layout metadata rides with the arrays as static pytree aux data:
+
+  ``n_groups``   — decode selection layout.  1 = paper-faithful global
+                   top-k; >1 = per-group top-(N_c/G) + LSE merge, with the
+                   group axis matching the ``shard_axis`` sharding.
+  ``shard_axis`` — the logical axis name the sequence dimension is sharded
+                   over (see distributed/sharding.py).
+
+All arrays carry a leading layer axis L when built by :meth:`init` so the
+decode loop can ``lax.scan`` over layers (batch axis 1, sequence axis 2);
+:meth:`layer_view` / the scan slice drop L for single-layer use.  ``ssm``
+optionally carries the hybrid family's recurrent state alongside (it scans
+with the same leading axis).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+import functools
+import math
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,219 +44,279 @@ from repro.config import ModelConfig, SALSConfig
 from repro.core import quantization as qz
 from repro.core.projection import to_latent
 
+_PER_TOKEN_FIELDS = ("k_lat", "k_scale", "v_q", "v_scale", "v_zero")
 
-def init_latent_cache(cfg: ModelConfig, sals: SALSConfig, n_layers: int,
-                      batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
-    kvd = cfg.kv_dim
-    r = sals.rank(kvd)
-    w = sals.n_recent
-    groups = kvd // sals.v_group
-    code_w = qz.quant_channels(kvd, sals.v_bits)
-    code_dtype = jnp.int8 if sals.v_bits == 8 else jnp.uint8
-    cache = {
-        "v_q": jnp.zeros((n_layers, batch, max_seq, code_w), code_dtype),
-        "v_scale": jnp.zeros((n_layers, batch, max_seq, groups), qz.SCALE_DTYPE),
-        "v_zero": jnp.zeros((n_layers, batch, max_seq, groups), qz.SCALE_DTYPE),
-        "sink_k": jnp.zeros((n_layers, batch, sals.n_sink, cfg.n_kv_heads,
-                             cfg.head_dim), dtype),
-        "sink_v": jnp.zeros((n_layers, batch, sals.n_sink, cfg.n_kv_heads,
-                             cfg.head_dim), dtype),
-        "recent_k": jnp.zeros((n_layers, batch, w, cfg.n_kv_heads,
-                               cfg.head_dim), dtype),
-        "recent_v": jnp.zeros((n_layers, batch, w, cfg.n_kv_heads,
-                               cfg.head_dim), dtype),
-    }
-    if sals.k_latent_dtype == "int8":
-        cache["k_lat"] = jnp.zeros((n_layers, batch, max_seq, r), jnp.int8)
-        cache["k_scale"] = jnp.zeros((n_layers, batch, max_seq), qz.SCALE_DTYPE)
-    else:
-        cache["k_lat"] = jnp.zeros((n_layers, batch, max_seq, r), dtype)
-    return cache
+
+@dataclasses.dataclass
+class LatentKVCache:
+    """One SALS cache (a layer stack, one layer, or a grouped view)."""
+
+    k_lat: jnp.ndarray                    # ([L,] B, S, r) bf16 | int8
+    v_q: jnp.ndarray                      # ([L,] B, S, code_w)
+    v_scale: jnp.ndarray                  # ([L,] B, S, G)
+    v_zero: jnp.ndarray                   # ([L,] B, S, G)
+    sink_k: jnp.ndarray                   # ([L,] B, n_sink, Hkv, dh)
+    sink_v: jnp.ndarray
+    recent_k: jnp.ndarray                 # ([L,] B, n_recent, Hkv, dh)
+    recent_v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray] = None  # ([L,] B, S) int8-latent scale
+    ssm: Any = None                        # hybrid-family recurrent state
+    # --- static layout metadata (pytree aux data) --------------------------
+    n_groups: int = 1
+    shard_axis: str = "kv_seq"
+
+    # ------------------------------------------------------------------ init
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, sals: SALSConfig, n_layers: int,
+             batch: int, max_seq: int, dtype=jnp.bfloat16,
+             n_groups: int = 1) -> "LatentKVCache":
+        """Zero-initialized cache with a leading layer axis."""
+        if n_groups > 1 and max_seq % n_groups:
+            raise ValueError(f"max_seq {max_seq} must be divisible by "
+                             f"n_groups {n_groups}")
+        kvd = cfg.kv_dim
+        r = sals.rank(kvd)
+        w = sals.n_recent
+        groups = kvd // sals.v_group
+        code_w = qz.quant_channels(kvd, sals.v_bits)
+        code_dtype = jnp.int8 if sals.v_bits == 8 else jnp.uint8
+        win = (n_layers, batch, sals.n_sink, cfg.n_kv_heads, cfg.head_dim)
+        ring = (n_layers, batch, w, cfg.n_kv_heads, cfg.head_dim)
+        if sals.k_latent_dtype == "int8":
+            k_lat = jnp.zeros((n_layers, batch, max_seq, r), jnp.int8)
+            k_scale = jnp.zeros((n_layers, batch, max_seq), qz.SCALE_DTYPE)
+        else:
+            k_lat = jnp.zeros((n_layers, batch, max_seq, r), dtype)
+            k_scale = None
+        return cls(
+            k_lat=k_lat, k_scale=k_scale,
+            v_q=jnp.zeros((n_layers, batch, max_seq, code_w), code_dtype),
+            v_scale=jnp.zeros((n_layers, batch, max_seq, groups),
+                              qz.SCALE_DTYPE),
+            v_zero=jnp.zeros((n_layers, batch, max_seq, groups),
+                             qz.SCALE_DTYPE),
+            sink_k=jnp.zeros(win, dtype), sink_v=jnp.zeros(win, dtype),
+            recent_k=jnp.zeros(ring, dtype), recent_v=jnp.zeros(ring, dtype),
+            n_groups=n_groups,
+        )
+
+    @classmethod
+    def prefill_layer(cls, cfg: ModelConfig, sals: SALSConfig,
+                      u: jnp.ndarray, k_pre: jnp.ndarray, v: jnp.ndarray,
+                      max_seq: int, dtype=jnp.bfloat16,
+                      n_groups: int = 1) -> "LatentKVCache":
+        """Build ONE layer's cache (no leading L axis) from prefill tensors.
+
+        k_pre/v: (B, S, n_kv, dh) pre-RoPE keys / values, S <= max_seq.
+        """
+        if n_groups > 1 and max_seq % n_groups:
+            raise ValueError(f"max_seq {max_seq} must be divisible by "
+                             f"n_groups {n_groups}")
+        b, s = k_pre.shape[:2]
+        kvd = cfg.kv_dim
+        k_flat = k_pre.reshape(b, s, kvd)
+        v_flat = v.reshape(b, s, kvd)
+        lat = to_latent(u.astype(jnp.float32), k_flat)           # (B,S,r)
+        vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
+
+        def pad(x):
+            if s == max_seq:
+                return x
+            cfgp = [(0, 0), (0, max_seq - s)] + [(0, 0)] * (x.ndim - 2)
+            return jnp.pad(x, cfgp)
+
+        w = sals.n_recent
+        # ring layout: slot = position % w for the last min(s, w) positions
+        n_tail = min(s, w)
+        tail_pos = jnp.arange(s - n_tail, s)
+        slots = tail_pos % w
+        rk = jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim), dtype)
+        rv = jnp.zeros_like(rk)
+        rk = rk.at[:, slots].set(k_pre[:, s - n_tail:].astype(dtype))
+        rv = rv.at[:, slots].set(v[:, s - n_tail:].astype(dtype))
+
+        ns = sals.n_sink
+        sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
+        sv = jnp.zeros_like(sk)
+        n_head = min(s, ns)
+        sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
+        sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
+
+        if sals.k_latent_dtype == "int8":
+            q, scale = qz.quantize_latent_int8(lat)
+            k_lat = pad(q)
+            k_scale = pad(scale.astype(qz.SCALE_DTYPE))
+        else:
+            k_lat, k_scale = pad(lat.astype(dtype)), None
+        return cls(
+            k_lat=k_lat, k_scale=k_scale,
+            v_q=pad(vq["q"]), v_scale=pad(vq["scale"]),
+            v_zero=pad(vq["zero"]),
+            sink_k=sk, sink_v=sv, recent_k=rk, recent_v=rv,
+            n_groups=n_groups,
+        )
+
+    # ----------------------------------------------------------------- views
+
+    def replace(self, **kw) -> "LatentKVCache":
+        return dataclasses.replace(self, **kw)
+
+    def layer_view(self, l) -> "LatentKVCache":
+        """Drop the leading layer axis: cache for layer ``l``."""
+        return jax.tree.map(lambda a: a[l], self)
+
+    def group_view(self, g: Optional[int] = None) -> "LatentKVCache":
+        """Seq axis of the per-token arrays reshaped to (B, G, S/G, ...).
+
+        ORACLE/TEST view — the fused decode path never materializes it; the
+        grouped kernels index group slabs of the flat arrays directly.
+        Only valid on a single-layer view (use :meth:`layer_view` first).
+        """
+        if self.k_lat.ndim != 3:
+            raise ValueError("group_view needs a single-layer cache "
+                             f"(B, S, r); got k_lat {self.k_lat.shape} — "
+                             "take layer_view(l) first")
+        g = g or self.n_groups
+        out = {}
+        for name in _PER_TOKEN_FIELDS:
+            a = getattr(self, name)
+            if a is None:
+                continue
+            b, s = a.shape[:2]
+            out[name] = a.reshape(b, g, s // g, *a.shape[2:])
+        return self.replace(**out)
+
+    def latent_views(self) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """Raw quantized latent views for the fused decode kernels.
+
+        Returns (k_lat (B, S, r) — bf16 or int8, exactly as stored — and
+        k_scale (B, S) or None).  The hot path hands these straight to
+        ops.latent_topk / ops.sparse_recon_attention, which index them
+        in-kernel; no dequantized or gathered copy is materialized.
+        """
+        return self.k_lat, self.k_scale
+
+    # ---------------------------------------------------------------- writes
+
+    def write(self, sals: SALSConfig, pos, k_lat: jnp.ndarray,
+              v_flat: jnp.ndarray, k_pre: jnp.ndarray, v: jnp.ndarray
+              ) -> "LatentKVCache":
+        """Append one token everywhere: latent K + quantized V at ``pos``,
+        plus the full-precision recent ring / sink insert.
+
+        k_lat: (B, r) pre-RoPE latent keys; v_flat: (B, kv_dim);
+        k_pre/v: (B, n_kv, dh).  ``pos`` is a traced scalar.
+        """
+        return self.write_latents(sals, pos, k_lat, v_flat) \
+                   .write_ring(sals, pos, k_pre, v)
+
+    def write_latents(self, sals: SALSConfig, pos, k_lat: jnp.ndarray,
+                      v_flat: jnp.ndarray) -> "LatentKVCache":
+        """Write one token's latent K + quantized V at ``pos`` (no ring
+        update — see :meth:`write_ring`)."""
+        out = {}
+        if sals.k_latent_dtype == "int8":
+            q, scale = qz.quantize_latent_int8(k_lat)
+            out["k_lat"] = _upd(self.k_lat, q[:, None, :], pos)
+            out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                self.k_scale, scale[:, None].astype(self.k_scale.dtype),
+                pos, axis=1)
+        else:
+            out["k_lat"] = _upd(self.k_lat, k_lat[:, None, :], pos)
+        vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
+        out["v_q"] = _upd(self.v_q, vq["q"][:, None, :], pos)
+        out["v_scale"] = _upd(self.v_scale, vq["scale"][:, None, :], pos)
+        out["v_zero"] = _upd(self.v_zero, vq["zero"][:, None, :], pos)
+        return self.replace(**out)
+
+    def write_ring(self, sals: SALSConfig, pos, k_pre: jnp.ndarray,
+                   v: jnp.ndarray) -> "LatentKVCache":
+        """Insert one token into the full-precision recent ring (and the
+        sink region while pos < n_sink).  k_pre/v: (B, n_kv, dh)."""
+        w = sals.n_recent
+        slot = jax.lax.rem(pos, w)
+        out = {
+            "recent_k": _upd(self.recent_k, k_pre[:, None], slot),
+            "recent_v": _upd(self.recent_v, v[:, None], slot),
+        }
+        in_sink = pos < sals.n_sink
+        sink_pos = jnp.where(in_sink, pos, 0)
+        new_sk = _upd(self.sink_k, k_pre[:, None], sink_pos)
+        new_sv = _upd(self.sink_v, v[:, None], sink_pos)
+        out["sink_k"] = jnp.where(in_sink, new_sk, self.sink_k)
+        out["sink_v"] = jnp.where(in_sink, new_sv, self.sink_v)
+        return self.replace(**out)
+
+    # --------------------------------------------------------------- oracles
+
+    def gather_reconstruct(self, u: jnp.ndarray, sals: SALSConfig,
+                           idx: jnp.ndarray, cfg: ModelConfig,
+                           dtype=jnp.bfloat16
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """ORACLE-ONLY dense gather + reconstruct (tests / analysis).
+
+        Gathers ``idx`` (..., Nc) token latents + quant values as explicit
+        buffers and reconstructs K̃_C·U_rᵀ.  The serving hot path instead
+        passes raw cache views (:meth:`latent_views`) to the fused Pallas
+        kernel, which gathers via scalar-prefetch indexing and never
+        materializes these arrays.
+
+        Returns (k_pre (..., Nc, n_kv, dh), v (..., Nc, n_kv, dh)).
+        """
+        lat = jnp.take_along_axis(self.k_lat, idx[..., None], axis=-2)
+        if sals.k_latent_dtype == "int8":
+            scale = jnp.take_along_axis(self.k_scale, idx, axis=-1)
+            lat = qz.dequantize_latent_int8(lat, scale, dtype)
+        else:
+            lat = lat.astype(dtype)
+        k_flat = (lat.astype(jnp.float32)
+                  @ u.astype(jnp.float32).T).astype(dtype)   # (..., Nc, kvd)
+        vq = {
+            "q": jnp.take_along_axis(self.v_q, idx[..., None], axis=-2),
+            "scale": jnp.take_along_axis(self.v_scale, idx[..., None],
+                                         axis=-2),
+            "zero": jnp.take_along_axis(self.v_zero, idx[..., None],
+                                        axis=-2),
+        }
+        v_flat = qz.dequantize(vq, sals.v_bits, sals.v_group, dtype)
+        shape = (*idx.shape, cfg.n_kv_heads, cfg.head_dim)
+        return k_flat.reshape(shape), v_flat.reshape(shape)
+
+    # ------------------------------------------------------------ bookkeeping
+
+    @property
+    def bytes_per_token(self) -> float:
+        """Stored bytes/token/layer, derived from the ACTUAL per-token field
+        shapes and dtypes — the single source of truth for the compression
+        bookkeeping (paper Table 1).  Works on concrete arrays and on
+        ``jax.eval_shape`` stand-ins alike."""
+        n_slots = math.prod(self.k_lat.shape[:-1])   # [L·]B·S token slots
+        total = 0
+        for name in _PER_TOKEN_FIELDS:
+            a = getattr(self, name)
+            if a is not None:
+                total += math.prod(a.shape) * jnp.dtype(a.dtype).itemsize
+        return total / n_slots
+
+
+jax.tree_util.register_dataclass(
+    LatentKVCache,
+    data_fields=["k_lat", "v_q", "v_scale", "v_zero", "sink_k", "sink_v",
+                 "recent_k", "recent_v", "k_scale", "ssm"],
+    meta_fields=["n_groups", "shard_axis"])
 
 
 def cache_bytes_per_token(cfg: ModelConfig, sals: SALSConfig) -> float:
-    """Stored bytes/token/layer — the compression bookkeeping (paper Table 1)."""
-    kvd = cfg.kv_dim
-    r = sals.rank(kvd)
-    k_bytes = r * (1 if sals.k_latent_dtype == "int8" else 2)
-    if sals.k_latent_dtype == "int8":
-        k_bytes += 2  # scale
-    v_bytes = qz.bytes_per_token(kvd, sals.v_bits, sals.v_group)
-    return k_bytes + v_bytes
+    """Stored bytes/token/layer for a (cfg, sals) setting.
 
-
-def write_latents(layer_cache: dict, sals: SALSConfig, pos,
-                  k_lat: jnp.ndarray, v_flat: jnp.ndarray) -> dict:
-    """Write one token's latent K + quantized V at ``pos``.
-
-    k_lat: (B, r) pre-RoPE latent keys; v_flat: (B, kv_dim).
-    ``pos`` is a traced scalar.  Returns the updated layer cache (no ring
-    update — see :func:`write_ring`).
+    Derived from the abstract :class:`LatentKVCache` field shapes/dtypes
+    (``jax.eval_shape`` — no allocation), so the bookkeeping can never
+    drift from what the cache actually stores.
     """
-    out = dict(layer_cache)
-    if sals.k_latent_dtype == "int8":
-        q, scale = qz.quantize_latent_int8(k_lat)
-        out["k_lat"] = _upd(layer_cache["k_lat"], q[:, None, :], pos)
-        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-            layer_cache["k_scale"], scale[:, None].astype(layer_cache["k_scale"].dtype),
-            pos, axis=1)
-    else:
-        out["k_lat"] = _upd(layer_cache["k_lat"],
-                            k_lat[:, None, :].astype(layer_cache["k_lat"].dtype), pos)
-    vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
-    out["v_q"] = _upd(layer_cache["v_q"], vq["q"][:, None, :], pos)
-    out["v_scale"] = _upd(layer_cache["v_scale"], vq["scale"][:, None, :], pos)
-    out["v_zero"] = _upd(layer_cache["v_zero"], vq["zero"][:, None, :], pos)
-    return out
-
-
-def write_ring(layer_cache: dict, sals: SALSConfig, pos,
-               k_pre: jnp.ndarray, v: jnp.ndarray) -> dict:
-    """Insert one token into the full-precision recent ring (and the sink
-    region while pos < n_sink).  k_pre/v: (B, n_kv, dh)."""
-    out = dict(layer_cache)
-    w = sals.n_recent
-    slot = jax.lax.rem(pos, w)
-    out["recent_k"] = _upd(layer_cache["recent_k"],
-                           k_pre[:, None].astype(layer_cache["recent_k"].dtype), slot)
-    out["recent_v"] = _upd(layer_cache["recent_v"],
-                           v[:, None].astype(layer_cache["recent_v"].dtype), slot)
-    in_sink = pos < sals.n_sink
-    sink_pos = jnp.where(in_sink, pos, 0)
-    new_sk = _upd(layer_cache["sink_k"],
-                  k_pre[:, None].astype(layer_cache["sink_k"].dtype), sink_pos)
-    new_sv = _upd(layer_cache["sink_v"],
-                  v[:, None].astype(layer_cache["sink_v"].dtype), sink_pos)
-    out["sink_k"] = jnp.where(in_sink, new_sk, layer_cache["sink_k"])
-    out["sink_v"] = jnp.where(in_sink, new_sv, layer_cache["sink_v"])
-    return out
-
-
-def read_latents(layer_cache: dict, sals: SALSConfig,
-                 dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Full latent key array (B, S, r) in compute dtype."""
-    if sals.k_latent_dtype == "int8":
-        return qz.dequantize_latent_int8(layer_cache["k_lat"],
-                                         layer_cache["k_scale"], dtype)
-    return layer_cache["k_lat"].astype(dtype)
-
-
-def latent_views(layer_cache: dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Raw quantized cache views for the fused decode kernels.
-
-    Returns (k_lat (B, S, r) — bf16 or int8, exactly as stored — and
-    k_scale (B, S) or None).  The hot path hands these straight to
-    ops.latent_topk / ops.sparse_recon_attention, which index them
-    in-kernel; no dequantized or gathered copy is materialized.
-    """
-    return layer_cache["k_lat"], layer_cache.get("k_scale")
-
-
-def gather_latents(layer_cache: dict, sals: SALSConfig, idx: jnp.ndarray,
-                   dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """ORACLE-ONLY dense gather (tests / analysis — not the decode path).
-
-    Gathers ``idx`` (B, Nc) latents + dequantized values as explicit HBM
-    buffers.  The serving hot path instead passes raw cache views (see
-    :func:`latent_views`) to the fused Pallas kernel, which gathers via
-    scalar-prefetch indexing and never materializes these arrays.
-
-    Returns (lat (B, Nc, r), v_flat (B, Nc, kv_dim)).
-    """
-    lat = jnp.take_along_axis(layer_cache["k_lat"], idx[..., None], axis=-2)
-    if sals.k_latent_dtype == "int8":
-        scale = jnp.take_along_axis(layer_cache["k_scale"], idx, axis=-1)
-        lat = qz.dequantize_latent_int8(lat, scale, dtype)
-    else:
-        lat = lat.astype(dtype)
-    vq = {
-        "q": jnp.take_along_axis(layer_cache["v_q"], idx[..., None], axis=-2),
-        "scale": jnp.take_along_axis(layer_cache["v_scale"], idx[..., None], axis=-2),
-        "zero": jnp.take_along_axis(layer_cache["v_zero"], idx[..., None], axis=-2),
-    }
-    v_flat = qz.dequantize(vq, sals.v_bits, sals.v_group, dtype)
-    return lat, v_flat
-
-
-def gather_reconstruct(layer_cache: dict, u: jnp.ndarray, sals: SALSConfig,
-                       idx: jnp.ndarray, cfg: ModelConfig, dtype=jnp.bfloat16
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Gather ``idx`` (..., Nc) token latents + quant values, reconstruct.
-
-    Returns (k_pre (..., Nc, n_kv, dh), v (..., Nc, n_kv, dh)).
-    The gather stays in XLA (dynamic-gather); reconstruction is one matmul —
-    on TPU the fused Pallas kernel (kernels/sparse_recon_attention.py)
-    replaces reconstruct+RoPE+attend for the selected block.
-    """
-    lat = jnp.take_along_axis(layer_cache["k_lat"], idx[..., None], axis=-2)
-    if sals.k_latent_dtype == "int8":
-        scale = jnp.take_along_axis(layer_cache["k_scale"], idx, axis=-1)
-        lat = qz.dequantize_latent_int8(lat, scale, dtype)
-    else:
-        lat = lat.astype(dtype)
-    k_flat = (lat.astype(jnp.float32) @ u.astype(jnp.float32)
-              .T).astype(dtype)                                  # (..., Nc, kvd)
-    vq = {
-        "q": jnp.take_along_axis(layer_cache["v_q"], idx[..., None], axis=-2),
-        "scale": jnp.take_along_axis(layer_cache["v_scale"], idx[..., None], axis=-2),
-        "zero": jnp.take_along_axis(layer_cache["v_zero"], idx[..., None], axis=-2),
-    }
-    v_flat = qz.dequantize(vq, sals.v_bits, sals.v_group, dtype)
-    shape = (*idx.shape, cfg.n_kv_heads, cfg.head_dim)
-    return k_flat.reshape(shape), v_flat.reshape(shape)
-
-
-def prefill_latent_layer(cfg: ModelConfig, sals: SALSConfig, u: jnp.ndarray,
-                         k_pre: jnp.ndarray, v: jnp.ndarray, max_seq: int,
-                         dtype=jnp.bfloat16) -> dict:
-    """Build one layer's latent cache from prefill tensors.
-
-    k_pre/v: (B, S, n_kv, dh) pre-RoPE keys / values, S <= max_seq.
-    """
-    b, s = k_pre.shape[:2]
-    kvd = cfg.kv_dim
-    k_flat = k_pre.reshape(b, s, kvd)
-    v_flat = v.reshape(b, s, kvd)
-    lat = to_latent(u.astype(jnp.float32), k_flat)               # (B,S,r)
-    vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
-
-    def pad(x):
-        if s == max_seq:
-            return x
-        cfgp = [(0, 0), (0, max_seq - s)] + [(0, 0)] * (x.ndim - 2)
-        return jnp.pad(x, cfgp)
-
-    w = sals.n_recent
-    # ring layout: slot = position % w for the last min(s, w) positions
-    n_tail = min(s, w)
-    tail_pos = jnp.arange(s - n_tail, s)
-    slots = tail_pos % w
-    rk = jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim), dtype)
-    rv = jnp.zeros_like(rk)
-    rk = rk.at[:, slots].set(k_pre[:, s - n_tail:].astype(dtype))
-    rv = rv.at[:, slots].set(v[:, s - n_tail:].astype(dtype))
-
-    ns = sals.n_sink
-    sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
-    sv = jnp.zeros_like(sk)
-    n_head = min(s, ns)
-    sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
-    sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
-
-    out = {
-        "v_q": pad(vq["q"]),
-        "v_scale": pad(vq["scale"]),
-        "v_zero": pad(vq["zero"]),
-        "sink_k": sk, "sink_v": sv,
-        "recent_k": rk, "recent_v": rv,
-    }
-    if sals.k_latent_dtype == "int8":
-        q, scale = qz.quantize_latent_int8(lat)
-        out["k_lat"] = pad(q)
-        out["k_scale"] = pad(scale.astype(qz.SCALE_DTYPE))
-    else:
-        out["k_lat"] = pad(lat.astype(dtype))
-    return out
+    shapes = jax.eval_shape(functools.partial(
+        LatentKVCache.init, cfg, sals, 1, 1, max(sals.n_recent, 8)))
+    return shapes.bytes_per_token
 
 
 def _upd(arr, val, pos):

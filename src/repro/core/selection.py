@@ -50,22 +50,32 @@ def latent_scores(q_bar: jnp.ndarray, u: jnp.ndarray, k_lat: jnp.ndarray,
     return ops.latent_score(q_lat, k_lat)
 
 
+def latent_query(q_bar: jnp.ndarray, u: jnp.ndarray, r_star: int
+                 ) -> jnp.ndarray:
+    """Truncated latent query q̃[:r*]: (B, kv_dim) -> (B, r*) f32."""
+    return q_bar.astype(jnp.float32) @ u.astype(jnp.float32)[:, :r_star]
+
+
 def topk_latent(q_bar: jnp.ndarray, u: jnp.ndarray, k_lat: jnp.ndarray,
                 k_scale, pos, sals: SALSConfig, r_star: int, *,
-                backend=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                n_critical=None, pos_base=None, backend=None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused score→top-N_c over the RAW latent cache (decode hot path).
 
     q_bar: (B, kv_dim) head-group-summed query; k_lat: (B, S, r) raw
     (possibly int8) latents; k_scale: (B, S) or None.  The selectability
     mask (sink / recent / future exclusion) is applied inside the kernel
     dispatch — no dense (B, S, r) dequant, slice, or pad copy is made.
-    Returns (idx (B, N_c) int32, valid (B, N_c) bool).
+    ``n_critical`` overrides the per-call budget (grouped layout uses the
+    per-group quota); ``pos_base`` (B,) offsets each row's global
+    positions.  Returns (idx (B, N_c) int32, valid (B, N_c) bool).
     """
     from repro.kernels import ops
-    q_lat = q_bar.astype(jnp.float32) @ u.astype(jnp.float32)[:, :r_star]
+    q_lat = latent_query(q_bar, u, r_star)
     return ops.latent_topk(q_lat, k_lat, k_scale, pos,
-                           n_critical=sals.n_critical, n_sink=sals.n_sink,
-                           n_recent=sals.n_recent, backend=backend)
+                           n_critical=n_critical or sals.n_critical,
+                           n_sink=sals.n_sink, n_recent=sals.n_recent,
+                           pos_base=pos_base, backend=backend)
 
 
 def selectable_mask(seq_positions: jnp.ndarray, pos, sals: SALSConfig

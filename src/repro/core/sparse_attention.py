@@ -1,54 +1,105 @@
 """SALS decode attention: selective reconstruction + exact sparse attention
-(paper §4.4, Algorithm 1).
+(paper §4.4, Algorithm 1), over a typed :class:`LatentKVCache`.
 
 One decode step per SALS layer:
 
   1. project the new token's pre-RoPE key to the latent space and append;
      quantize + append its value; insert (k_pre, v) into the recent ring;
-  2. score all cached latents with the truncated latent query (§4.3);
-  3. top-N_c select (global = paper-faithful, grouped = distributed-local);
+  2. score cached latents with the truncated latent query (§4.3);
+  3. top-N_c select (global = paper-faithful; grouped = per-slab local);
   4. gather + reconstruct ONLY the selected latents (K̃_C·U_rᵀ), apply RoPE
      at their original positions, dequantize their values;
-  5. exact attention over [sink ∪ selected ∪ recent] — grouped mode merges
-     per-group partial attention with flash-style LSE rescaling, which under
-     a sequence-sharded cache lowers to one small all-reduce of
-     (B,H,dh)+(B,H) instead of an all-gather of scores or selected K/V.
+  5. exact attention over [sink ∪ selected ∪ recent], LSE-merged
+     flash-style.
 
-The grouped formulation is written in plain jnp over a leading group axis
-that matches the kv_seq sharding, so the SAME code runs unsharded in unit
-tests and SPMD-partitioned under pjit on the production mesh.
+Stages 2-4 are ONE fused code path for both layouts, dispatched through a
+small :class:`DecodePlan` (backend + layout) instead of a global/grouped
+``if`` fork: scoring + selection stream the quantized latents once
+(ops.latent_topk), then the top-k indices are the ONLY artifact handed to
+the attention kernel, which gathers / dequantizes / reconstructs in-kernel
+via scalar-prefetch indexing — no dense score buffer, no gathered or
+dequantized (B, N_c, ·) intermediate ever reaches HBM.
+
+Grouped layout (``cache.n_groups > 1``, kv_seq-sharded): the group axis
+matches the cache's sequence sharding, each group slab runs the SAME fused
+kernels with a per-row ``pos_base`` offset (slab-local indices, global
+positions), and the per-group flash partials LSE-merge with the sink/recent
+window — under a sequence-sharded cache that merge lowers to one small
+all-reduce of (B,G,H)(+dh) instead of an all-gather of scores or selected
+K/V.  Inside a sharding context whose kv_seq axes multiply to n_groups the
+slabs run shard-LOCALLY via ``shard_map``; otherwise the group axis is
+folded into the kernel batch axis (unit tests, single device).  The old
+dense-score + XLA-gather branch survives only as jnp oracles in
+kernels/ref.py.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, SALSConfig
-from repro.core import latent_cache as lc
 from repro.core import selection as sel
-from repro.distributed.sharding import constrain
+from repro.core.latent_cache import LatentKVCache
+from repro.distributed.sharding import constrain, current_ctx, mesh_axes_for
 from repro.kernels import ops
-from repro.models.attention import out_proj, qkv_proj, repeat_kv
+from repro.models.attention import out_proj, qkv_proj
 from repro.models.layers import apply_rope
 
 NEG = sel.NEG
 
+
+# ---------------------------------------------------------------------------
+# Decode plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """How one decode step executes: kernel backend + selection layout.
+
+    ``n_groups``   1 = global top-N_c; >1 = per-slab top-(N_c/G) + LSE merge.
+    ``backend``    kernel dispatch override (None = ops default backend).
+    ``shard_axes`` mesh axes backing the group axis — non-empty means the
+                   grouped kernels run shard-locally under shard_map;
+                   empty means the group axis folds into the kernel batch.
+    """
+
+    n_groups: int = 1
+    backend: Optional[str] = None
+    shard_axes: Tuple[str, ...] = ()
+
+
+def plan_decode(cache: LatentKVCache, backend: Optional[str] = None
+                ) -> DecodePlan:
+    """Derive the decode plan from the cache's layout metadata + the
+    ambient sharding context."""
+    g = cache.n_groups
+    if g <= 1:
+        return DecodePlan(1, backend)
+    axes, total = mesh_axes_for(cache.shard_axis)
+    if total == g:
+        return DecodePlan(g, backend, axes)
+    return DecodePlan(g, backend)
+
+
+# ---------------------------------------------------------------------------
+# Region partials (sink/recent window — dense jnp, small, always attended)
+# ---------------------------------------------------------------------------
 
 def _region_logits(q_r: jnp.ndarray, k_pre: jnp.ndarray,
                    positions: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     """RoPE + GQA QK^T for one region of pre-RoPE keys.
 
     q_r: (B, H, dh) already-RoPE'd f32 query.
-    k_pre: (B, [G,] N, Hkv, dh); positions broadcastable to (B, [G,] N).
-    Returns logits (B, [G,] H, N) in f32 (scaled, softcapped).
+    k_pre: (B, N, Hkv, dh); positions broadcastable to (B, N).
+    Returns logits (B, H, N) in f32 (scaled, softcapped).
 
     GQA is contracted with an explicit (Hkv, group) split of the query —
-    no repeat_kv materialization, and under a sequence-sharded cache the
-    grouped einsum keeps the G axis intact so GSPMD computes each group's
-    logits on its own shard (reshape-merging a sharded G axis made the
-    partitioner all-gather the selected keys — §Perf iteration A3).
+    no repeat_kv materialization.
     """
     if cfg.use_rope:
         k = apply_rope(k_pre, jnp.broadcast_to(positions, k_pre.shape[:-2]),
@@ -58,13 +109,8 @@ def _region_logits(q_r: jnp.ndarray, k_pre: jnp.ndarray,
     b = q_r.shape[0]
     q_g = q_r.reshape(b, cfg.n_kv_heads, cfg.group_size, cfg.head_dim) \
         .astype(jnp.float32)
-    if k.ndim == 5:                                        # (B,G,N,Hkv,dh)
-        logits = jnp.einsum("bkrd,bgnkd->bgkrn", q_g, k.astype(jnp.float32))
-        g, n = k.shape[1], k.shape[2]
-        logits = logits.reshape(b, g, cfg.n_heads, n)
-    else:                                                  # (B,N,Hkv,dh)
-        logits = jnp.einsum("bkrd,bnkd->bkrn", q_g, k.astype(jnp.float32))
-        logits = logits.reshape(b, cfg.n_heads, k.shape[1])
+    logits = jnp.einsum("bkrd,bnkd->bkrn", q_g, k.astype(jnp.float32))
+    logits = logits.reshape(b, cfg.n_heads, k.shape[1])
     logits = logits * (cfg.head_dim ** -0.5)
     if cfg.attn_logit_softcap:
         logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
@@ -91,32 +137,157 @@ def _partial_attend(logits: jnp.ndarray, v: jnp.ndarray, cfg: ModelConfig
     return m, l, o.reshape(*lead, cfg.n_heads, cfg.head_dim)
 
 
-def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
+# ---------------------------------------------------------------------------
+# Selected-token partials (stages 2-4, fused kernels) per layout
+# ---------------------------------------------------------------------------
+
+def _global_partials(q0, q_bar, u, cache: LatentKVCache, pos,
+                     cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan):
+    """Paper-faithful global top-N_c.  Returns (m, l, o) with a G=1 axis."""
+    r_star = sals.score_rank(cfg.kv_dim)
+    k_lat, k_scale = cache.latent_views()
+    k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+    if k_scale is not None:
+        k_scale = constrain(k_scale, ("batch", "kv_seq"))
+    idx, valid = sel.topk_latent(q_bar, u, k_lat, k_scale, pos, sals, r_star,
+                                 backend=plan.backend)
+    m, l, o = ops.sparse_recon_attention(
+        q0, k_lat, k_scale, cache.v_q, cache.v_scale, cache.v_zero, u, idx,
+        valid, pos, n_kv=cfg.n_kv_heads, v_bits=sals.v_bits,
+        v_group=sals.v_group, theta=cfg.rope_theta,
+        softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope,
+        backend=plan.backend)
+    return m[:, None], l[:, None], o[:, None]
+
+
+def _slab_partials(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos,
+                   base, cfg: ModelConfig, sals: SALSConfig, k_loc: int,
+                   backend):
+    """Fused top-k + recon-attend over sequence slabs (rows = slabs).
+
+    All per-token arrays are (N, S_loc, ...); ``base`` (N,) holds each
+    row's global position offset.  Returns flash partials (N, H[, dh]).
+    """
+    idx, valid = ops.latent_topk(
+        q_lat, k_lat, k_scale, pos, n_critical=k_loc, n_sink=sals.n_sink,
+        n_recent=sals.n_recent, pos_base=base, backend=backend)
+    return ops.sparse_recon_attention(
+        q0, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+        n_kv=cfg.n_kv_heads, v_bits=sals.v_bits, v_group=sals.v_group,
+        theta=cfg.rope_theta, softcap=cfg.attn_logit_softcap,
+        use_rope=cfg.use_rope, pos_base=base, backend=backend)
+
+
+def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
+                      cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan):
+    """Per-group top-(N_c/G) through the SAME fused kernels.
+
+    Group g covers slab [g·S/G, (g+1)·S/G); kernels see slab-local indices
+    and a per-row ``pos_base`` offset.  Returns (m, l, o) with a G axis.
+    """
+    g = plan.n_groups
+    r_star = sals.score_rank(cfg.kv_dim)
+    k_lat, k_scale = cache.latent_views()
+    b, s, r = k_lat.shape
+    s_loc = s // g
+    k_loc = -(-sals.n_critical // g)
+    q_lat = sel.latent_query(q_bar, u, r_star)                  # (B, r*)
+    h = q0.shape[1]
+
+    if plan.shard_axes:
+        # shard-LOCAL slabs: each kv_seq shard scores + gathers its own slab
+        # (shard_map), so no latent, score, or selected-K/V collective —
+        # only the (B,G,H)(+dh) partial merge leaves the shard (§Perf A3).
+        return _grouped_shardmap(q0, q_lat, k_lat, k_scale, cache.v_q,
+                                 cache.v_scale, cache.v_zero, u, pos, cfg,
+                                 sals, plan, s_loc, k_loc)
+
+    # no matching mesh: fold the group axis into the kernel batch axis
+    # (metadata-only reshapes of the raw cache — no copy, no dequant)
+    kg = k_lat.reshape(b * g, s_loc, r)
+    ksg = None if k_scale is None else k_scale.reshape(b * g, s_loc)
+    vqg = cache.v_q.reshape(b * g, s_loc, -1)
+    vsg = cache.v_scale.reshape(b * g, s_loc, -1)
+    vzg = cache.v_zero.reshape(b * g, s_loc, -1)
+    base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)  # row = b·G+g
+    qg = jnp.repeat(q0, g, axis=0)                              # (B·G, H, dh)
+    qlg = jnp.repeat(q_lat, g, axis=0)
+    m, l, o = _slab_partials(qg, qlg, kg, ksg, vqg, vsg, vzg, u, pos, base,
+                             cfg, sals, k_loc, plan.backend)
+    return (m.reshape(b, g, h), l.reshape(b, g, h),
+            o.reshape(b, g, h, cfg.head_dim))
+
+
+def _grouped_shardmap(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                      pos, cfg: ModelConfig, sals: SALSConfig,
+                      plan: DecodePlan, s_loc: int, k_loc: int):
+    ctx = current_ctx()
+    axes = plan.shard_axes
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    ba = ctx.rules.get("batch")
+    pos_arr = jnp.asarray(pos, jnp.int32)
+
+    def local_fn(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos):
+        gi = jnp.int32(0)
+        for a in axes:
+            gi = gi * sizes[a] + jax.lax.axis_index(a)
+        base = jnp.full((q0.shape[0],), gi * s_loc, jnp.int32)
+        m, l, o = _slab_partials(q0, q_lat, k_lat, k_scale, v_q, v_scale,
+                                 v_zero, u, pos, base, cfg, sals, k_loc,
+                                 plan.backend)
+        return m[:, None], l[:, None], o[:, None]   # local G axis of 1
+
+    seq = axes if len(axes) > 1 else axes[0]
+    tok_specs = [P(ba, seq, None), P(ba, seq, None), P(ba, seq, None),
+                 P(ba, seq, None)]                  # k_lat, v_q, v_scale, v_zero
+    scale_spec = P(ba, seq)
+    in_specs = (P(ba, None, None), P(ba, None), tok_specs[0],
+                scale_spec if k_scale is not None else P(),
+                tok_specs[1], tok_specs[2], tok_specs[3],
+                P(None, None), P())
+    out_specs = (P(ba, seq), P(ba, seq), P(ba, seq, None))
+    k_scale_arg = k_scale if k_scale is not None \
+        else jnp.zeros((), jnp.int32)               # unused placeholder
+
+    def wrapper(q0, q_lat, k_lat, k_scale_a, v_q, v_scale, v_zero, u, pos):
+        ks = k_scale_a if k_scale is not None else None
+        return local_fn(q0, q_lat, k_lat, ks, v_q, v_scale, v_zero, u, pos)
+
+    return shard_map(wrapper, mesh=ctx.mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)(
+        q0, q_lat, k_lat, k_scale_arg, v_q, v_scale, v_zero, u, pos_arr)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
                        x: jnp.ndarray, pos, cfg: ModelConfig,
-                       sals: SALSConfig, n_groups: int = 1
-                       ) -> Tuple[jnp.ndarray, dict]:
+                       sals: SALSConfig, plan: Optional[DecodePlan] = None
+                       ) -> Tuple[jnp.ndarray, LatentKVCache]:
     """One-token SALS attention for one layer.
 
-    x: (B, 1, d); pos: traced scalar position of this token.
-    n_groups=1 -> paper-faithful global top-k; >1 -> grouped/hierarchical.
-    Returns (y (B,1,d), updated layer cache).
+    x: (B, 1, d); pos: traced scalar position of this token.  The selection
+    layout comes from ``cache.n_groups`` (via :func:`plan_decode`) unless an
+    explicit ``plan`` is given.  Returns (y (B,1,d), updated cache).
     """
+    if plan is None:
+        plan = plan_decode(cache)
     b = x.shape[0]
     kvd = cfg.kv_dim
-    r_star = sals.score_rank(kvd)
     w = sals.n_recent
 
-    q, k_new, v_new = qkv_proj(params, x, cfg)             # (B,1,H,dh)/(B,1,Hkv,dh)
+    q, k_new, v_new = qkv_proj(params, x, cfg)        # (B,1,H,dh)/(B,1,Hkv,dh)
     k_flat = k_new.reshape(b, kvd)
     v_flat = v_new.reshape(b, kvd)
 
     # ---- stage 1: append to caches ---------------------------------------
     k_lat_new = (k_flat.astype(jnp.float32) @ u.astype(jnp.float32))
-    layer_cache = lc.write_latents(layer_cache, sals, pos, k_lat_new, v_flat)
-    layer_cache = lc.write_ring(layer_cache, sals, pos, k_new[:, 0], v_new[:, 0])
+    cache = cache.write(sals, pos, k_lat_new, v_flat, k_new[:, 0], v_new[:, 0])
 
     # ---- stage 2 input: head-group-summed query ---------------------------
-    q_bar = sel.group_query(q[:, 0], cfg)                  # (B, kvd)
+    q_bar = sel.group_query(q[:, 0], cfg)             # (B, kvd)
 
     # RoPE'd query for the exact attention
     pos_b = jnp.full((b, 1), pos, jnp.int32)
@@ -126,85 +297,25 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, layer_cache: dict,
     ns = sals.n_sink
     sink_pos = jnp.arange(ns)
     rec_pos = sel.ring_positions(pos, w)
-    sr_k = jnp.concatenate([layer_cache["sink_k"], layer_cache["recent_k"]],
-                           axis=1)                         # (B, ns+W, Hkv, dh)
-    sr_v = jnp.concatenate([layer_cache["sink_v"], layer_cache["recent_v"]],
-                           axis=1)
+    sr_k = jnp.concatenate([cache.sink_k, cache.recent_k], axis=1)
+    sr_v = jnp.concatenate([cache.sink_v, cache.recent_v], axis=1)
     sr_positions = jnp.concatenate([sink_pos, rec_pos])
     sr_valid = (sr_positions >= 0) & (sr_positions <= pos)
     sr_logits = _region_logits(q_r, sr_k, sr_positions[None, :], cfg)
     sr_logits = jnp.where(sr_valid[None, None, :], sr_logits, NEG)
+    m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
 
-    if n_groups <= 1:
-        # ---- paper-faithful: one global top-k -----------------------------
-        # Stages 2-4 fused over the RAW cache: scoring + selection stream
-        # the quantized latents once (ops.latent_topk), then the top-k
-        # indices are the ONLY artifact handed to the attention kernel,
-        # which gathers / dequantizes / reconstructs in-kernel via
-        # scalar-prefetch indexing — no dense score buffer, no gathered or
-        # dequantized (B, N_c, ·) intermediate ever reaches HBM.  Its flash
-        # partials LSE-merge with the sink/recent window partials.
-        k_lat_raw, k_scale = lc.latent_views(layer_cache)
-        k_lat_raw = constrain(k_lat_raw, ("batch", "kv_seq", None))
-        if k_scale is not None:
-            k_scale = constrain(k_scale, ("batch", "kv_seq"))
-        idx, valid = sel.topk_latent(q_bar, u, k_lat_raw, k_scale, pos,
-                                     sals, r_star)
-        m_c, l_c, o_c = ops.sparse_recon_attention(
-            q[:, 0], k_lat_raw, k_scale, layer_cache["v_q"],
-            layer_cache["v_scale"], layer_cache["v_zero"], u, idx, valid,
-            pos, n_kv=cfg.n_kv_heads, v_bits=sals.v_bits,
-            v_group=sals.v_group, theta=cfg.rope_theta,
-            softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope)
-        m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
-        m_all = jnp.maximum(m_c, m_sr)                      # (B,H)
-        wc = jnp.exp(m_c - m_all)
-        wsr = jnp.exp(m_sr - m_all)
-        denom = wc * l_c + wsr * l_sr
-        numer = wc[..., None] * o_c + wsr[..., None] * o_sr
-        o = numer / jnp.maximum(denom, 1e-30)[..., None]
-    else:
-        # ---- grouped: per-shard top-k + LSE merge -------------------------
-        # Dense scoring path: the G axis matches the kv_seq sharding, so the
-        # per-group score/top-k stays shard-local under pjit (§Perf A3);
-        # the fused global kernel above has no grouped formulation yet.
-        k_lat = lc.read_latents(layer_cache, sals, x.dtype)    # (B, S, r)
-        k_lat = constrain(k_lat, ("batch", "kv_seq", None))
-        scores = sel.latent_scores(q_bar, u, k_lat, r_star)    # (B, S) f32
-        s_max = scores.shape[1]
-        mask = sel.selectable_mask(jnp.arange(s_max), pos, sals)[None, :]
-        mask = jnp.broadcast_to(mask, scores.shape)
-        g = n_groups
-        s_loc = s_max // g
-        idx, valid = sel.topk_grouped(scores, mask, sals.n_critical, g)
-        grouped_cache = _group_view(layer_cache, g, sals)
-        k_sel, v_sel = lc.gather_reconstruct(grouped_cache, u, sals, idx, cfg,
-                                             x.dtype)      # (B,G,k,Hkv,dh)
-        gpos = idx + (jnp.arange(g) * s_loc)[None, :, None]
-        sel_logits = _region_logits(q_r, k_sel, gpos, cfg)  # (B,G,H,k)
-        sel_logits = jnp.where(valid[:, :, None, :], sel_logits, NEG)
-        m_g, l_g, o_g = _partial_attend(sel_logits, v_sel, cfg)  # (B,G,H[,dh])
-        m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
-        m_all = jnp.maximum(jnp.max(m_g, axis=1), m_sr)     # (B,H)
-        wg = jnp.exp(m_g - m_all[:, None, :])               # (B,G,H)
-        wsr = jnp.exp(m_sr - m_all)
-        denom = jnp.sum(wg * l_g, axis=1) + wsr * l_sr
-        numer = jnp.sum(wg[..., None] * o_g, axis=1) + wsr[..., None] * o_sr
-        o = numer / jnp.maximum(denom, 1e-30)[..., None]
+    # ---- stages 2-4: fused selected-token partials, (B, G, H[, dh]) -------
+    attend = _global_partials if plan.n_groups <= 1 else _grouped_partials
+    m_c, l_c, o_c = attend(q[:, 0], q_bar, u, cache, pos, cfg, sals, plan)
+
+    # ---- stage 5: flash-style LSE merge across groups + window ------------
+    m_all = jnp.maximum(jnp.max(m_c, axis=1), m_sr)   # (B,H)
+    wc = jnp.exp(m_c - m_all[:, None, :])             # (B,G,H)
+    wsr = jnp.exp(m_sr - m_all)
+    denom = jnp.sum(wc * l_c, axis=1) + wsr * l_sr
+    numer = jnp.sum(wc[..., None] * o_c, axis=1) + wsr[..., None] * o_sr
+    o = numer / jnp.maximum(denom, 1e-30)[..., None]
 
     y = out_proj(params, o[:, None].astype(x.dtype), cfg)
-    return y, layer_cache
-
-
-def _group_view(layer_cache: dict, g: int, sals: SALSConfig) -> dict:
-    """Reshape the seq axis of the latent arrays to (G, S/G)."""
-    out = {}
-    for name in ("k_lat", "v_q", "v_scale", "v_zero"):
-        a = layer_cache[name]
-        b, s = a.shape[:2]
-        out[name] = a.reshape(b, g, s // g, *a.shape[2:])
-    if "k_scale" in layer_cache:
-        a = layer_cache["k_scale"]
-        b, s = a.shape
-        out["k_scale"] = a.reshape(b, g, s // g)
-    return out
+    return y, cache

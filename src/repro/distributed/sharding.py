@@ -84,6 +84,24 @@ def logical_spec(logical) -> P:
     return ctx.spec(logical)
 
 
+def mesh_axes_for(logical: str) -> Tuple[Tuple[str, ...], int]:
+    """Physical mesh axes a logical axis maps to, and their combined size.
+
+    Returns ((), 1) outside a sharding context or for an unsharded axis.
+    Used by the grouped decode plan to decide whether the per-group kernels
+    can run shard-locally (shard_map over these axes)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return (), 1
+    rule = ctx.rules.get(logical)
+    axes = (rule,) if isinstance(rule, str) else tuple(rule or ())
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    return axes, total
+
+
 # ---------------------------------------------------------------------------
 # Default rule sets per run kind
 # ---------------------------------------------------------------------------

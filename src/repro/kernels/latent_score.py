@@ -24,6 +24,13 @@ the §4.5 traffic model's ``s·r*`` term is paid exactly once, streaming):
     makes the final merge tie-break identically to a full-sequence
     ``lax.top_k`` — indices match the oracle bit-for-bit.
 
+    ``pos_base`` (optional, (B,) int32, second scalar-prefetch operand)
+    offsets the in-kernel selectability mask: row b's token j sits at
+    global position ``pos_base[b] + j``.  This is what lets the SAME kernel
+    score one group slab of a sequence-sharded cache (the grouped decode
+    layout folds the group axis into the batch axis, or runs per shard
+    under shard_map) — emitted indices stay slab-LOCAL.
+
 Validated on CPU via ``interpret=True`` against ``ref.latent_score_ref`` /
 ``ref.latent_topk_ref``.
 """
@@ -130,13 +137,14 @@ def latent_score_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
 # fused scoring -> per-block partial top-k (the decode hot path)
 # ---------------------------------------------------------------------------
 
-def _topk_body(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref, *,
-               bs: int, s: int, kb: int, n_sink: int, n_recent: int):
-    i = pl.program_id(1)
+def _topk_body(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
+               *, bs: int, s: int, kb: int, n_sink: int, n_recent: int):
+    b_, i = pl.program_id(0), pl.program_id(1)
     scores, col = _block_scores(q_ref, k_ref, scale_ref, i, bs, s)
     pos = pos_ref[0]
-    posn = i * bs + col                                     # (1, bs)
-    ok = (posn >= n_sink) & (posn <= pos - n_recent) & (posn < s)
+    posn = i * bs + col                                     # (1, bs) local
+    pglob = posn + base_ref[b_]                             # global position
+    ok = (pglob >= n_sink) & (pglob <= pos - n_recent) & (posn < s)
     scores = jnp.where(ok, scores, NEG_INF)
 
     def extract(t, sc):
@@ -144,18 +152,24 @@ def _topk_body(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref, *,
         a = jnp.min(jnp.where(sc == m, col, bs))            # first argmax
         vals_ref[0, 0, t] = m
         idx_ref[0, 0, t] = i * bs + a
-        return jnp.where(col == a, NEG_INF, sc)
+        # retire the column with -inf (strictly below the NEG_INF mask
+        # value) so fully-masked blocks emit ascending indices — the same
+        # tie-break lax.top_k uses, keeping even invalid slots bit-exact
+        # with the oracle
+        return jnp.where(col == a, -jnp.inf, sc)
 
     jax.lax.fori_loop(0, kb, extract, scores)
 
 
-def _topk_kernel_plain(pos_ref, q_ref, k_ref, vals_ref, idx_ref, **kw):
-    _topk_body(pos_ref, q_ref, k_ref, None, vals_ref, idx_ref, **kw)
+def _topk_kernel_plain(pos_ref, base_ref, q_ref, k_ref, vals_ref, idx_ref,
+                       **kw):
+    _topk_body(pos_ref, base_ref, q_ref, k_ref, None, vals_ref, idx_ref, **kw)
 
 
-def _topk_kernel_scaled(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
-                        **kw):
-    _topk_body(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref, **kw)
+def _topk_kernel_scaled(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref,
+                        idx_ref, **kw):
+    _topk_body(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
+               **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("n_critical", "n_sink",
@@ -163,40 +177,45 @@ def _topk_kernel_scaled(pos_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
 def latent_topk_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
                        k_scale: Optional[jnp.ndarray], pos, *,
                        n_critical: int, n_sink: int, n_recent: int,
-                       block_s: int = DEFAULT_BLOCK_S
+                       block_s: int = DEFAULT_BLOCK_S,
+                       pos_base: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused §4.3 scoring + selection over the raw latent cache.
 
     q_lat: (B, r*); k_lat: (B, S, r); k_scale: (B, S) or None; pos: traced
-    decode position (scalar).  Returns (idx (B, N_c) int32, valid (B, N_c)
-    bool) — identical (incl. tie-breaks) to masking + full-seq lax.top_k.
+    decode position (scalar); pos_base: (B,) per-row global offset of
+    column 0 (grouped layout), or None for 0.  Returns (idx (B, N_c) int32
+    row-LOCAL, valid (B, N_c) bool) — identical (incl. tie-breaks) to
+    masking + full-seq lax.top_k.
     """
     b, r_star = q_lat.shape
     s = k_lat.shape[1]
     bs = min(block_s, s)
     nb, kb = topk_candidate_shape(s, n_critical, block_s)
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    base_arr = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
 
     in_specs = [
-        pl.BlockSpec((1, r_star), lambda b_, i, p: (b_, 0)),
-        pl.BlockSpec((1, bs, r_star), lambda b_, i, p: (b_, i, 0)),
+        pl.BlockSpec((1, r_star), lambda b_, i, p, bb: (b_, 0)),
+        pl.BlockSpec((1, bs, r_star), lambda b_, i, p, bb: (b_, i, 0)),
     ]
     args = [q_lat, k_lat]
     kw = dict(bs=bs, s=s, kb=kb, n_sink=n_sink, n_recent=n_recent)
     if k_scale is not None:
-        in_specs.append(pl.BlockSpec((1, bs), lambda b_, i, p: (b_, i)))
+        in_specs.append(pl.BlockSpec((1, bs), lambda b_, i, p, bb: (b_, i)))
         args.append(k_scale)
         kernel = functools.partial(_topk_kernel_scaled, **kw)
     else:
         kernel = functools.partial(_topk_kernel_plain, **kw)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, nb),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, 1, kb), lambda b_, i, p: (b_, i, 0)),
-            pl.BlockSpec((1, 1, kb), lambda b_, i, p: (b_, i, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b_, i, p, bb: (b_, i, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b_, i, p, bb: (b_, i, 0)),
         ],
     )
     cand_v, cand_i = pl.pallas_call(
@@ -207,7 +226,7 @@ def latent_topk_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
             jax.ShapeDtypeStruct((b, nb, kb), jnp.int32),
         ],
         interpret=_interpret(),
-    )(pos_arr, *args)
+    )(pos_arr, base_arr, *args)
 
     cand_v = cand_v.reshape(b, nb * kb)
     cand_i = cand_i.reshape(b, nb * kb)

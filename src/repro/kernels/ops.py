@@ -259,22 +259,26 @@ def latent_score(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
 
 def latent_topk(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
                 k_scale: Optional[jnp.ndarray], pos, *, n_critical: int,
-                n_sink: int, n_recent: int, backend: Optional[str] = None):
-    """Fused scoring + global top-N_c selection over the raw latent cache.
+                n_sink: int, n_recent: int,
+                pos_base: Optional[jnp.ndarray] = None,
+                backend: Optional[str] = None):
+    """Fused scoring + top-N_c selection over the raw latent cache.
 
-    Returns (idx (B, N_c) int32, valid (B, N_c) bool).  The Pallas path
-    emits per-seq-block candidates so the final ``lax.top_k`` runs over
-    (B, nb·k) instead of (B, S); indices match the oracle exactly
+    Returns (idx (B, N_c) int32, valid (B, N_c) bool).  ``pos_base`` (B,)
+    offsets row b's global positions — the grouped layout scores each
+    sequence slab with the same kernel (indices stay slab-local).  The
+    Pallas path emits per-seq-block candidates so the final ``lax.top_k``
+    runs over (B, nb·k) instead of (B, S); indices match the oracle exactly
     (including tie-breaks)."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import latent_score as ls
         return ls.latent_topk_pallas(q_lat, k_lat, k_scale, pos,
                                      n_critical=n_critical, n_sink=n_sink,
-                                     n_recent=n_recent)
+                                     n_recent=n_recent, pos_base=pos_base)
     return _ref.latent_topk_ref(q_lat, k_lat, k_scale, pos,
                                 n_critical=n_critical, n_sink=n_sink,
-                                n_recent=n_recent)
+                                n_recent=n_recent, pos_base=pos_base)
 
 
 # ---------------------------------------------------------------------------
@@ -285,22 +289,25 @@ def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
                            idx, valid, q_pos, *, n_kv: int, v_bits: int = 8,
                            v_group: int = 64, theta: float = 10_000.0,
                            softcap: float = 0.0, use_rope: bool = True,
+                           pos_base: Optional[jnp.ndarray] = None,
                            backend: Optional[str] = None):
     """Selected-token decode attention over the RAW cache arrays.
 
     The top-k ``idx`` (B, N_c) is the only selection artifact passed in; the
     Pallas path gathers + dequantizes in-kernel via scalar-prefetch indexing
     (zero HBM intermediates), the "xla"/"naive" oracle gathers with
-    ``take_along_axis``.  See ref.sparse_recon_attention_fused_ref for the
-    full contract."""
+    ``take_along_axis``.  ``pos_base`` (B,) offsets each row's RoPE
+    positions (grouped layout: idx is slab-local, position is
+    ``pos_base[b] + idx[b, n]``).  See ref.sparse_recon_attention_fused_ref
+    for the full contract."""
     backend = backend or _DEFAULT_BACKEND
     if backend == "pallas":
         from repro.kernels import sparse_recon_attention as sra
         return sra.sparse_recon_attention_pallas(
             q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
             n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
-            softcap=softcap, use_rope=use_rope)
+            softcap=softcap, use_rope=use_rope, pos_base=pos_base)
     return _ref.sparse_recon_attention_fused_ref(
         q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
         n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
-        softcap=softcap, use_rope=use_rope)
+        softcap=softcap, use_rope=use_rope, pos_base=pos_base)

@@ -59,18 +59,24 @@ def latent_score_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
 
 def latent_topk_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
                     k_scale: Optional[jnp.ndarray], pos, *, n_critical: int,
-                    n_sink: int, n_recent: int
+                    n_sink: int, n_recent: int,
+                    pos_base: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused §4.3 scoring + selection oracle over the raw latent cache.
 
     Scores every cached latent, masks the sink / recent / future ranges,
-    takes the global top-N_c.  Returns (idx (B, N_c) int32, valid (B, N_c)
-    bool); ``valid`` is False for slots that fell on masked entries.
+    takes the global top-N_c.  ``pos_base`` (B,) offsets row b's global
+    positions (grouped layout; returned indices stay row-local).  Returns
+    (idx (B, N_c) int32, valid (B, N_c) bool); ``valid`` is False for slots
+    that fell on masked entries.
     """
     scores = latent_score_ref(q_lat, k_lat, k_scale)
-    positions = jnp.arange(scores.shape[1])
+    b, s = scores.shape
+    base = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+    positions = jnp.arange(s)[None, :] + base[:, None]          # (B, S)
     mask = (positions >= n_sink) & (positions <= pos - n_recent)
-    masked = jnp.where(mask[None, :], scores, NEG_INF)
+    masked = jnp.where(mask, scores, NEG_INF)
     vals, idx = jax.lax.top_k(masked, n_critical)
     return idx.astype(jnp.int32), vals > NEG_INF / 2
 
@@ -123,17 +129,22 @@ def sparse_recon_attention_fused_ref(
         v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
         u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
         n_kv: int, v_bits: int = 8, v_group: int = 64,
-        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Index-taking oracle: gather-then-attend in plain jnp.
 
     Same contract as the fused Pallas kernel — the selected rows' positions
-    are the indices themselves.  This is what the "xla" backend dispatches
-    (CPU + multi-pod dry-run), and the allclose target for interpret tests.
+    are ``pos_base[b] + idx[b, n]`` (pos_base None -> the indices
+    themselves).  This is what the "xla" backend dispatches (CPU +
+    multi-pod dry-run), and the allclose target for interpret tests.
     """
     lat, v = gather_dequant_ref(k_lat, k_scale, v_q, v_scale, v_zero, idx,
                                 v_bits=v_bits, v_group=v_group)
-    return sparse_recon_attention_ref(q, lat, v, u, idx, valid, q_pos,
+    sel_pos = idx if pos_base is None else \
+        idx + jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32),
+                               (idx.shape[0],))[:, None]
+    return sparse_recon_attention_ref(q, lat, v, u, sel_pos, valid, q_pos,
                                       n_kv=n_kv, theta=theta, softcap=softcap,
                                       use_rope=use_rope)
 

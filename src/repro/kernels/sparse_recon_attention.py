@@ -77,11 +77,11 @@ def _dequant_token(code: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
     return out.reshape(vals.shape)
 
 
-def _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
-                vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
-                m_s, l_s, acc_s, q_s, *, n_kv: int, group: int, theta: float,
-                softcap: float, use_rope: bool, nc: int, v_bits: int,
-                v_group: int):
+def _fused_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
+                kscale_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                o_ref, m_s, l_s, acc_s, q_s, *, n_kv: int, group: int,
+                theta: float, softcap: float, use_rope: bool, nc: int,
+                v_bits: int, v_group: int):
     b_, n_ = pl.program_id(0), pl.program_id(1)
     h, dh = q_ref.shape[1], q_ref.shape[2]
 
@@ -104,8 +104,8 @@ def _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
         preferred_element_type=jnp.float32)                 # (1, kvd)
     k_pre = k_flat.reshape(n_kv, dh)
 
-    # ---- 3. RoPE at the original position (= the cache index) -------------
-    pos = idx_ref[b_, n_]
+    # ---- 3. RoPE at the original position (= base + the cache index) ------
+    pos = idx_ref[b_, n_] + base_ref[b_]
     k_r = _rope_one(k_pre, pos, theta) if use_rope else k_pre
 
     # ---- 4. GQA score vs the cached RoPE'd query ---------------------------
@@ -136,20 +136,20 @@ def _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
         o_ref[0] = acc_s[...]
 
 
-def _fused_kernel_plain(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref,
-                        vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
-                        m_s, l_s, acc_s, q_s, **kw):
-    _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, None,
+def _fused_kernel_plain(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
+                        lat_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                        o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref, None,
                 vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
                 m_s, l_s, acc_s, q_s, **kw)
 
 
-def _fused_kernel_scaled(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref,
-                         kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+def _fused_kernel_scaled(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
+                         lat_ref, kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
                          m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw):
-    _fused_step(idx_ref, valid_ref, qpos_ref, q_ref, lat_ref, kscale_ref,
-                vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref, o_ref,
-                m_s, l_s, acc_s, q_s, **kw)
+    _fused_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
+                kscale_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                o_ref, m_s, l_s, acc_s, q_s, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("n_kv", "v_bits", "v_group",
@@ -159,13 +159,16 @@ def sparse_recon_attention_pallas(
         v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
         u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
         n_kv: int, v_bits: int = 8, v_group: int = 64,
-        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused decode partial-attention, gathered in-kernel from the raw cache.
 
     q: (B, H, dh) pre-RoPE query; k_lat: (B, S, r); k_scale: (B, S) or None;
     v_q: (B, S, code_w); v_scale/v_zero: (B, S, G); u: (kvd, r);
-    idx/valid: (B, N_c) selected cache rows; q_pos: scalar or (B,).
+    idx/valid: (B, N_c) selected cache rows; q_pos: scalar or (B,);
+    pos_base: (B,) per-row global offset of cache row 0 (grouped layout —
+    RoPE is applied at ``pos_base[b] + idx[b, n]``), or None for 0.
     Returns (m (B,H), l (B,H), o (B,H,dh)) flash partials, f32.
     """
     b, h, dh = q.shape
@@ -179,38 +182,45 @@ def sparse_recon_attention_pallas(
     idx_i = idx.astype(jnp.int32)
     valid_i = valid.astype(jnp.int32)
     qpos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    base_b = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
 
     in_specs = [
-        pl.BlockSpec((1, h, dh), lambda b_, n_, i_, v_, p_: (b_, 0, 0)),
-        pl.BlockSpec((1, 1, r), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, h, dh), lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0)),
+        pl.BlockSpec((1, 1, r),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
     ]
     args = [q, k_lat]
     kw = dict(n_kv=n_kv, group=group, theta=theta, softcap=softcap,
               use_rope=use_rope, nc=nc, v_bits=v_bits, v_group=v_group)
     if k_scale is not None:
         in_specs.append(
-            pl.BlockSpec((1, 1), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_])))
+            pl.BlockSpec((1, 1),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_])))
         args.append(k_scale)
         kernel = functools.partial(_fused_kernel_scaled, **kw)
     else:
         kernel = functools.partial(_fused_kernel_plain, **kw)
     in_specs += [
         pl.BlockSpec((1, 1, code_w),
-                     lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
-        pl.BlockSpec((1, 1, g), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
-        pl.BlockSpec((1, 1, g), lambda b_, n_, i_, v_, p_: (b_, i_[b_, n_], 0)),
-        pl.BlockSpec((kvd, r), lambda b_, n_, i_, v_, p_: (0, 0)),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((kvd, r), lambda b_, n_, i_, v_, p_, bb_: (0, 0)),
     ]
     args += [v_q, v_scale, v_zero, u]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(b, nc),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_: (b_, 0)),
-            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_: (b_, 0)),
-            pl.BlockSpec((1, h, dh), lambda b_, n_, i_, v_, p_: (b_, 0, 0)),
+            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_, bb_: (b_, 0)),
+            pl.BlockSpec((1, h), lambda b_, n_, i_, v_, p_, bb_: (b_, 0)),
+            pl.BlockSpec((1, h, dh),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((h, 1), jnp.float32),
@@ -228,5 +238,5 @@ def sparse_recon_attention_pallas(
             jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
         ],
         interpret=_interpret(),
-    )(idx_i, valid_i, qpos_b, *args)
+    )(idx_i, valid_i, qpos_b, base_b, *args)
     return m, l, o

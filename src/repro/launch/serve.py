@@ -74,6 +74,11 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=512)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--groups", type=int, default=1,
+                    help="SALS decode selection layout: 1 = paper-faithful "
+                         "global top-k, >1 = per-group top-(N_c/G) + LSE "
+                         "merge (the sequence-sharded serving layout; rides "
+                         "as LatentKVCache metadata)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -112,7 +117,8 @@ def main() -> None:
                        max_new_tokens=args.max_new_tokens,
                        temperature=args.temperature,
                        sals=sals or SALSConfig(enabled=False))
-    engine = ServeEngine(params, projectors, cfg, scfg)
+    engine = ServeEngine(params, projectors, cfg, scfg,
+                         n_groups=args.groups)  # validates divisibility
     sched = RequestScheduler(engine)
 
     rng = np.random.default_rng(args.seed)

@@ -110,8 +110,11 @@ def cache_pspecs(cache_shapes, rules: dict) -> Any:
     def by_name(path, leaf) -> P:
         name = None
         for p in reversed(path):
-            if hasattr(p, "key"):
+            if hasattr(p, "key"):          # dict entry
                 name = str(p.key)
+                break
+            if hasattr(p, "name"):         # LatentKVCache dataclass field
+                name = str(p.name)
                 break
         nd = len(leaf.shape)
         if name in ("k_lat", "v_q", "v_scale", "v_zero"):
@@ -293,19 +296,42 @@ def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
             (_shardings(mesh, state_sp), _shardings(mesh, metrics_sp)))
 
 
-def _eval_cache_shapes(cfg, sals, batch, max_seq):
+def _eval_cache_shapes(cfg, sals, batch, max_seq, n_groups: int = 1):
     dtype = jnp.dtype(cfg.dtype)
     return jax.eval_shape(
-        functools.partial(tf.init_cache, cfg, sals, batch, max_seq, dtype))
+        functools.partial(tf.init_cache, cfg, sals, batch, max_seq, dtype,
+                          n_groups))
+
+
+def decode_n_groups(mesh: Mesh, rules: dict, s: int,
+                    dist_mode: Optional[str], sals) -> int:
+    """Grouped-selection fan-out for ``dist_mode="local"``: one group per
+    kv_seq shard (1 when the seq len doesn't divide, or for "global").
+
+    Shared by build_prefill and build_decode so the cache's ``n_groups``
+    metadata — pytree aux data — matches across the prefill->decode
+    pipeline."""
+    if dist_mode != "local" or sals is None:
+        return 1
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sa = rules["kv_seq"]
+    sa_axes = (sa,) if isinstance(sa, str) else tuple(sa or ())
+    n = 1
+    for a in sa_axes:
+        n *= axis_sizes[a]
+    if n > 1 and s % n:
+        n = 1
+    return n
 
 
 def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                   mesh_cfg: MeshConfig, *, rank_ratio: float = 0.25,
-                  sals_enabled: bool = True,
+                  sals_enabled: bool = True, dist_mode: Optional[str] = None,
                   k_latent_dtype: str = "bfloat16"):
     rules = default_rules(mesh_cfg, shape)
     sals = sals_for_shape(cfg, shape, rank_ratio, k_latent_dtype) \
         if sals_enabled else None
+    dist_mode = dist_mode or mesh_cfg.dist_mode
     key = jax.random.PRNGKey(0)
     param_shapes = jax.eval_shape(
         lambda k: tf.init_params(k, cfg, jnp.dtype(cfg.dtype)), key)
@@ -327,7 +353,10 @@ def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     b, s = shape.global_batch, shape.seq_len
     if cfg.family == "vlm":
         s += cfg.vision_patches          # patch prefix occupies cache slots
-    cache_shapes = _eval_cache_shapes(cfg, sals, b, s)
+    # the produced cache must be treedef-compatible with the decode step's
+    # (n_groups is pytree aux data), so stamp the same grouped layout
+    n_groups = decode_n_groups(mesh, rules, s, dist_mode, sals)
+    cache_shapes = _eval_cache_shapes(cfg, sals, b, s, n_groups)
     cache_sp = sanitize_pspecs(cache_pspecs(cache_shapes, rules),
                                cache_shapes, mesh)
     logits_sp = sanitize_pspecs(
@@ -336,7 +365,8 @@ def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     def fn(params, projectors, batch):
         with use_sharding(mesh, rules):
-            return tf.prefill(params, projectors, cfg, sals, batch, s)
+            return tf.prefill(params, projectors, cfg, sals, batch, s,
+                              n_groups=n_groups)
 
     return (fn, (param_shapes, proj_shapes, batch_shapes),
             (_shardings(mesh, param_sp), _shardings(mesh, proj_sp),
@@ -370,7 +400,11 @@ def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     b, s = shape.global_batch, shape.seq_len
     if cfg.family == "vlm":
         s += cfg.vision_patches          # patch prefix occupies cache slots
-    cache_shapes = _eval_cache_shapes(cfg, sals, b, s)
+    # local top-k groups = number of kv_seq shards; rides as static
+    # metadata on the cache's LatentKVCache segments
+    n_groups = decode_n_groups(mesh, rules, s, dist_mode, sals)
+
+    cache_shapes = _eval_cache_shapes(cfg, sals, b, s, n_groups)
     cache_sp = sanitize_pspecs(cache_pspecs(cache_shapes, rules),
                                cache_shapes, mesh)
     tok_shapes = jax.ShapeDtypeStruct((b,), jnp.int32)
@@ -379,21 +413,10 @@ def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
         P(rules["batch"], rules["vocab"]),
         jax.ShapeDtypeStruct((b, cfg.vocab_size), jnp.float32), mesh)
 
-    # local top-k groups = number of kv_seq shards
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    sa = rules["kv_seq"]
-    sa_axes = (sa,) if isinstance(sa, str) else tuple(sa or ())
-    n_groups = 1
-    if dist_mode == "local" and sals is not None:
-        for a in sa_axes:
-            n_groups *= axis_sizes[a]
-        if n_groups > 1 and s % n_groups:
-            n_groups = 1
-
     def fn(params, projectors, cache, tokens, pos):
         with use_sharding(mesh, rules):
             return tf.decode_step(params, projectors, cache, tokens, pos,
-                                  cfg, sals, n_groups)
+                                  cfg, sals)
 
     pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
     return (fn,
@@ -410,7 +433,7 @@ def _projector_stand_ins(cfg: ModelConfig, sals: Optional[SALSConfig]):
     kvd = cfg.kv_dim
     r = sals.rank(kvd)
     shapes = {
-        "u": jax.ShapeDtypeStruct((cfg.n_layers, kvd, r), jnp.float32),
+        "u": jax.ShapeDtypeStruct((cfg.n_layers, kvd, r), cal.U_DTYPE),
         "eigvals": jax.ShapeDtypeStruct((cfg.n_layers, kvd), jnp.float32),
     }
     return shapes, cal.projector_specs()

@@ -12,8 +12,9 @@ Three execution paths share one parameter set:
                          for the SALS skip-layers (0, 1, last) and for the
                          ``sals.enabled=False`` baseline.
 
-The SALS decode path (latent cache) lives in ``repro/core/sparse_attention``;
-it reuses ``qkv_proj`` / ``out_proj`` from here.
+The SALS decode path lives in ``repro/core/sparse_attention`` and operates
+on the typed ``repro/core/latent_cache.LatentKVCache``; it reuses
+``qkv_proj`` / ``out_proj`` from here.
 """
 from __future__ import annotations
 

@@ -293,7 +293,9 @@ def forward_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
-               max_seq: int, dtype=None) -> dict:
+               max_seq: int, dtype=None, n_groups: int = 1) -> dict:
+    """``n_groups`` is the SALS decode selection layout (see LatentKVCache):
+    it rides as static metadata on the latent segments."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     if not cfg.is_decoder:
         raise ValueError("encoder family has no decode cache")
@@ -309,11 +311,16 @@ def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
             seg = {k: jnp.zeros((ls, *v.shape), v.dtype)
                    for k, v in kv.items()}
         else:
-            seg = lc.init_latent_cache(cfg, sals, ls, batch, max_seq, dtype)
+            seg = lc.LatentKVCache.init(cfg, sals, ls, batch, max_seq, dtype,
+                                        n_groups=n_groups)
         if cfg.family == "hybrid":
             st = ssm_mod.mamba_state_init(cfg, batch)
-            seg["ssm"] = jax.tree.map(
+            ssm = jax.tree.map(
                 lambda a: jnp.zeros((ls, *a.shape), a.dtype), st)
+            if mode == "sals":
+                seg = seg.replace(ssm=ssm)
+            else:
+                seg["ssm"] = ssm
         cache[f"seg{si}"] = seg
     return cache
 
@@ -324,9 +331,10 @@ def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
 
 def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
             sals: Optional[SALSConfig], batch: Dict[str, jnp.ndarray],
-            max_seq: int) -> Tuple[jnp.ndarray, dict]:
+            max_seq: int, n_groups: int = 1) -> Tuple[jnp.ndarray, dict]:
     """Process the prompt, build the decode cache.
 
+    ``n_groups`` stamps the SALS segments' decode selection layout.
     Returns (last-position logits (B, V) f32, cache).
     """
     dtype = jnp.dtype(cfg.dtype)
@@ -344,10 +352,11 @@ def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
             def body_s(x, bp_u):
                 bp, u_l = bp_u
                 x, _, ex = _block_fwd(bp, x, cfg, positions, prefix_len, True)
-                layer = lc.prefill_latent_layer(cfg, sals, u_l, ex["k_pre"],
-                                                ex["v"], max_seq, dtype)
+                layer = lc.LatentKVCache.prefill_layer(
+                    cfg, sals, u_l, ex["k_pre"], ex["v"], max_seq, dtype,
+                    n_groups=n_groups)
                 if cfg.family == "hybrid":
-                    layer["ssm"] = ex["ssm"]
+                    layer = layer.replace(ssm=ex["ssm"])
                 return x, layer
 
             x, seg = jax.lax.scan(body_s, x, (bp_seg, u_seg))
@@ -388,10 +397,11 @@ def _pad_seq(a: jnp.ndarray, max_seq: int) -> jnp.ndarray:
 
 def decode_step(params: dict, projectors: Optional[dict], cache: dict,
                 tokens: jnp.ndarray, pos, cfg: ModelConfig,
-                sals: Optional[SALSConfig], n_groups: int = 1
-                ) -> Tuple[jnp.ndarray, dict]:
+                sals: Optional[SALSConfig]) -> Tuple[jnp.ndarray, dict]:
     """One decode step. tokens: (B,) int32; pos: traced scalar.
 
+    The SALS selection layout (global vs grouped) is read from the latent
+    segments' ``n_groups`` metadata — set at init_cache/prefill time.
     Returns (logits (B, V) f32, updated cache).
     """
     if not cfg.is_decoder:
@@ -419,11 +429,10 @@ def decode_step(params: dict, projectors: Optional[dict], cache: dict,
 
             def body_sals(x, bp_u_cl):
                 bp, u_l, cl = bp_u_cl
-                cl = dict(cl)
                 h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
-                ssm_cl = cl.pop("ssm") if cfg.family == "hybrid" else None
+                ssm_cl = cl.ssm if cfg.family == "hybrid" else None
                 a, cl = sals_decode_attend(bp["attn"], u_l, cl, h, pos, cfg,
-                                           sals, n_groups)
+                                           sals)
                 x, cl = _finish_block(bp, x, h, a, cl, ssm_cl, cfg)
                 return x, cl
 
@@ -453,8 +462,11 @@ def _finish_block(bp, x, h, a, cl, ssm_cl, cfg: ModelConfig):
     if cfg.family == "hybrid":
         s_out, new_ssm = ssm_mod.mamba_decode(bp["mamba"], h, cfg, ssm_cl)
         a = (a + s_out) * 0.5
-        cl = dict(cl)
-        cl["ssm"] = new_ssm
+        if isinstance(cl, lc.LatentKVCache):
+            cl = cl.replace(ssm=new_ssm)
+        else:
+            cl = dict(cl)
+            cl["ssm"] = new_ssm
     x = x + a
     h2 = rmsnorm_apply(bp["mlp_norm"], x, cfg.norm_eps)
     if cfg.family == "moe":

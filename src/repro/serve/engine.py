@@ -50,6 +50,11 @@ class ServeEngine:
         self.scfg = scfg
         self.sals: Optional[SALSConfig] = scfg.sals if (
             scfg.sals and scfg.sals.enabled and cfg.has_attention) else None
+        # decode selection layout — stamped on the LatentKVCache segments at
+        # prefill time; decode_step reads it back from the cache metadata
+        if n_groups > 1 and scfg.max_seq_len % n_groups:
+            raise ValueError(f"max_seq_len {scfg.max_seq_len} must be "
+                             f"divisible by n_groups {n_groups}")
         self.n_groups = n_groups
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
@@ -58,11 +63,12 @@ class ServeEngine:
 
     def _prefill_impl(self, batch):
         return tf.prefill(self.params, self.projectors, self.cfg, self.sals,
-                          batch, self.scfg.max_seq_len)
+                          batch, self.scfg.max_seq_len,
+                          n_groups=self.n_groups)
 
     def _decode_impl(self, tokens, cache, pos):
         return tf.decode_step(self.params, self.projectors, cache, tokens,
-                              pos, self.cfg, self.sals, self.n_groups)
+                              pos, self.cfg, self.sals)
 
     # -- sampling ------------------------------------------------------------
 

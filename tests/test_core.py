@@ -197,17 +197,16 @@ def test_latent_cache_write_then_gather_roundtrip():
                       v_bits=8, v_group=32)
     kvd = cfg.kv_dim
     r = sals.rank(kvd)
-    cache = lc.init_latent_cache(cfg, sals, 1, batch=2, max_seq=32,
-                                 dtype=jnp.float32)
-    layer = jax.tree.map(lambda a: a[0], cache)
+    cache = lc.LatentKVCache.init(cfg, sals, 1, batch=2, max_seq=32,
+                                  dtype=jnp.float32)
+    layer = cache.layer_view(0)
     u = pj.random_projector(KEY, kvd, r)["u"]
     k_pre = jax.random.normal(KEY, (2, kvd), jnp.float32)
     v = jax.random.normal(jax.random.fold_in(KEY, 1), (2, kvd), jnp.float32)
     lat = k_pre @ u
-    layer = lc.write_latents(layer, sals, jnp.int32(5), lat, v)
+    layer = layer.write_latents(sals, jnp.int32(5), lat, v)
     idx = jnp.full((2, 1), 5, jnp.int32)
-    k_rec, v_rec = lc.gather_reconstruct(layer, u, sals, idx, cfg,
-                                         jnp.float32)
+    k_rec, v_rec = layer.gather_reconstruct(u, sals, idx, cfg, jnp.float32)
     np.testing.assert_allclose(np.asarray(k_rec.reshape(2, kvd)),
                                np.asarray(k_pre), atol=1e-4)
     np.testing.assert_allclose(np.asarray(v_rec.reshape(2, kvd)),
@@ -215,8 +214,8 @@ def test_latent_cache_write_then_gather_roundtrip():
 
 
 def test_prefill_cache_matches_decode_writes():
-    """prefill_latent_layer must produce the same cache as step-by-step
-    decode writes (latents, quant values, ring, sink)."""
+    """LatentKVCache.prefill_layer must produce the same cache as
+    step-by-step decode writes (latents, quant values, ring, sink)."""
     cfg = get_config("qwen2-1.5b").reduced()
     sals = SALSConfig(rank_ratio=0.5, n_sink=2, n_recent=4, n_critical=8,
                       v_bits=8, v_group=32)
@@ -228,22 +227,61 @@ def test_prefill_cache_matches_decode_writes():
                               jnp.float32)
     v = jax.random.normal(jax.random.fold_in(KEY, 7),
                           (b, s, cfg.n_kv_heads, cfg.head_dim), jnp.float32)
-    pf = lc.prefill_latent_layer(cfg, sals, u, k_pre, v, max_seq,
-                                 jnp.float32)
+    pf = lc.LatentKVCache.prefill_layer(cfg, sals, u, k_pre, v, max_seq,
+                                        jnp.float32)
 
-    cache = lc.init_latent_cache(cfg, sals, 1, b, max_seq, jnp.float32)
-    step = jax.tree.map(lambda a: a[0], cache)
+    step = lc.LatentKVCache.init(cfg, sals, 1, b, max_seq, jnp.float32) \
+        .layer_view(0)
     for t in range(s):
         kf = k_pre[:, t].reshape(b, kvd)
         vf = v[:, t].reshape(b, kvd)
-        step = lc.write_latents(step, sals, jnp.int32(t), kf @ u, vf)
-        step = lc.write_ring(step, sals, jnp.int32(t), k_pre[:, t], v[:, t])
+        step = step.write(sals, jnp.int32(t), kf @ u, vf,
+                          k_pre[:, t], v[:, t])
 
-    for name in pf:
+    flat_pf = jax.tree_util.tree_flatten_with_path(pf)[0]
+    flat_step = jax.tree.leaves(step)
+    for (path, a), b_ in zip(flat_pf, flat_step):
         np.testing.assert_allclose(
-            np.asarray(pf[name], np.float32),
-            np.asarray(step[name], np.float32),
-            atol=2e-2, err_msg=name)
+            np.asarray(a, np.float32), np.asarray(b_, np.float32),
+            atol=2e-2, err_msg=jax.tree_util.keystr(path))
+
+
+def test_group_view_reshapes_layer_view_only():
+    cfg = get_config("yi-9b").reduced()
+    sals = SALSConfig(rank_ratio=0.5, v_bits=8, v_group=32, n_recent=8,
+                      n_sink=2, k_latent_dtype="int8")
+    cache = lc.LatentKVCache.init(cfg, sals, 2, batch=3, max_seq=32,
+                                  n_groups=4)
+    gv = cache.layer_view(0).group_view()
+    r = sals.rank(cfg.kv_dim)
+    assert gv.k_lat.shape == (3, 4, 8, r)
+    assert gv.k_scale.shape == (3, 4, 8)
+    assert gv.v_q.shape[:3] == (3, 4, 8)
+    assert gv.n_groups == 4
+    with pytest.raises(ValueError):      # layer-stacked cache: ambiguous
+        cache.group_view()
+    with pytest.raises(ValueError):      # seq must divide into groups
+        lc.LatentKVCache.init(cfg, sals, 1, batch=1, max_seq=30, n_groups=4)
+
+
+def test_cache_bytes_per_token_matches_nbytes_growth():
+    """cache_bytes_per_token derives from the LatentKVCache field
+    shapes/dtypes — it must equal the actual sum(arr.nbytes) growth when
+    one more token slot is allocated (and agree on concrete arrays)."""
+    cfg = get_config("yi-9b").reduced()
+    for sals in (SALSConfig(rank_ratio=0.25, v_bits=8, v_group=32),
+                 SALSConfig(rank_ratio=0.125, v_bits=4, v_group=32),
+                 SALSConfig(rank_ratio=0.25, v_bits=8, v_group=32,
+                            k_latent_dtype="int8")):
+        def total_nbytes(s):
+            shapes = jax.eval_shape(
+                lambda s=s: lc.LatentKVCache.init(cfg, sals, 1, 1, s))
+            return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                       for x in jax.tree.leaves(shapes))
+        growth = total_nbytes(129) - total_nbytes(128)
+        assert lc.cache_bytes_per_token(cfg, sals) == growth, sals
+        concrete = lc.LatentKVCache.init(cfg, sals, 2, 3, 64)
+        assert concrete.bytes_per_token == growth
 
 
 # ---------------------------------------------------------------------------

@@ -63,3 +63,52 @@ def test_fused_dispatch_backends_agree(seed, group, k_int8, use_rope, v_bits):
     # ... merged attention output to 1e-3 (f32 accumulate)
     np.testing.assert_allclose(_merged(*out["pallas"]), _merged(*out["xla"]),
                                rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4]),
+       st.booleans(), st.integers(8, 158))
+@settings(max_examples=15, deadline=None)
+def test_grouped_dispatch_backends_agree(seed, g, k_int8, pos_v):
+    """Grouped layout (ISSUE 2): slab-folded fused kernels with pos_base vs
+    the per-slab jnp oracle, arbitrary decode positions — selection
+    bit-for-bit, merged partials to 1e-3."""
+    n_kv, dh, group = 2, 32, 2
+    h = n_kv * group
+    b, s, r, r_star, nc, vg = 2, 160, 16, 8, 24, 16
+    kvd = n_kv * dh
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    q_lat = jax.random.normal(ks[4], (b, r_star))
+    pos = jnp.int32(pos_v)
+    s_loc = s // g
+    k_loc = -(-nc // g)
+
+    def fold(a):
+        return None if a is None else a.reshape(b * g, s_loc, *a.shape[2:])
+
+    base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+    sel_out, out = {}, {}
+    for backend in ("pallas", "xla"):
+        idx, valid = ops.latent_topk(
+            jnp.repeat(q_lat, g, axis=0), fold(k_lat), fold(k_scale), pos,
+            n_critical=k_loc, n_sink=2, n_recent=8, pos_base=base,
+            backend=backend)
+        sel_out[backend] = (np.asarray(idx), np.asarray(valid))
+        out[backend] = ops.sparse_recon_attention(
+            jnp.repeat(q, g, axis=0), fold(k_lat), fold(k_scale),
+            fold(vq["q"]), fold(vq["scale"]), fold(vq["zero"]), u, idx,
+            valid, pos, n_kv=n_kv, v_bits=8, v_group=vg, pos_base=base,
+            backend=backend)
+
+    assert np.array_equal(sel_out["pallas"][0], sel_out["xla"][0])
+    assert np.array_equal(sel_out["pallas"][1], sel_out["xla"][1])
+    np.testing.assert_allclose(_merged(*out["pallas"]), _merged(*out["xla"]),
+                               rtol=1e-3, atol=1e-3)

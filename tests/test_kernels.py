@@ -259,6 +259,88 @@ def test_fused_sra_positions_are_indices():
 
 
 # ---------------------------------------------------------------------------
+# grouped (sequence-sharded) layout: same fused kernels over group slabs
+# ---------------------------------------------------------------------------
+
+def _grouped_fold(arrs, g):
+    """(B, S, ...) -> (B*G, S/G, ...) group slabs (metadata-only reshape)."""
+    out = []
+    for a in arrs:
+        if a is None:
+            out.append(None)
+            continue
+        b, s = a.shape[:2]
+        out.append(a.reshape(b * g, s // g, *a.shape[2:]))
+    return out
+
+
+@pytest.mark.parametrize("h,n_kv,dh", [
+    (4, 2, 64),      # GQA group 2
+    (8, 2, 32),      # GQA group 4
+    (4, 1, 64),      # MQA
+])
+@pytest.mark.parametrize("k_int8", [False, True])
+@pytest.mark.parametrize("g,s,pos_v", [
+    (2, 160, 159),   # full cache
+    (4, 256, 100),   # later groups partially / fully in the future
+    (2, 96, 30),     # ragged early-decode position
+    (4, 128, 7),     # almost nothing selectable
+])
+def test_grouped_fused_matches_grouped_oracle_exactly(h, n_kv, dh, k_int8,
+                                                      g, s, pos_v):
+    """Per-slab fused top-k (pallas) must equal the per-slab jnp oracle
+    BIT-FOR-BIT (indices AND valid, incl. top-k ties and fully-masked
+    slabs), and the slab partials must agree on the merged output."""
+    b, r, r_star, nc, vg = 2, 16, 8, 24, 16
+    kvd = n_kv * dh
+    ks = jax.random.split(jax.random.fold_in(KEY, 17 * g + s), 5)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    q_lat = jax.random.normal(ks[4], (b, r_star))
+    pos = jnp.int32(pos_v)
+    s_loc = s // g
+    k_loc = -(-nc // g)
+    kg, ksg, vqg, vsg, vzg = _grouped_fold(
+        [k_lat, k_scale, vq["q"], vq["scale"], vq["zero"]], g)
+    base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+    qg = jnp.repeat(q, g, axis=0)
+    qlg = jnp.repeat(q_lat, g, axis=0)
+
+    out = {}
+    for backend in ("pallas", "xla"):
+        idx, valid = ops.latent_topk(qlg, kg, ksg, pos, n_critical=k_loc,
+                                     n_sink=2, n_recent=8, pos_base=base,
+                                     backend=backend)
+        m, l, o = ops.sparse_recon_attention(
+            qg, kg, ksg, vqg, vsg, vzg, u, idx, valid, pos, n_kv=n_kv,
+            v_bits=8, v_group=vg, pos_base=base, backend=backend)
+        out[backend] = (np.asarray(idx), np.asarray(valid), np.asarray(m),
+                        np.asarray(l), np.asarray(o))
+    # selection agrees bit-for-bit (incl. ties + fully-masked slabs) ...
+    assert np.array_equal(out["pallas"][0], out["xla"][0])
+    assert np.array_equal(out["pallas"][1], out["xla"][1])
+    # ... merged slab partials to 1e-3 (f32 accumulate)
+    for i in (2, 3):
+        np.testing.assert_allclose(out["pallas"][i], out["xla"][i],
+                                   rtol=1e-3, atol=1e-3)
+    y_p = out["pallas"][4] / np.maximum(out["pallas"][3], 1e-30)[..., None]
+    y_x = out["xla"][4] / np.maximum(out["xla"][3], 1e-30)[..., None]
+    np.testing.assert_allclose(y_p, y_x, rtol=1e-3, atol=1e-3)
+    # a slab entirely in the future must come back all-invalid, not NaN
+    if pos_v < s - s_loc:
+        last_slab_valid = out["pallas"][1].reshape(b, g, k_loc)[:, -1]
+        assert not last_slab_valid.any()
+    assert not np.any(np.isnan(out["pallas"][2]))
+
+
+# ---------------------------------------------------------------------------
 # no dense-copy guarantee (the §4.5 traffic model, enforced on the jaxpr)
 # ---------------------------------------------------------------------------
 
@@ -311,4 +393,64 @@ def test_fused_path_materializes_no_cache_scale_buffers():
             size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
             if size >= limit:
                 offenders.append((eqn.primitive.name, ov.aval.shape))
+    assert not offenders, offenders
+
+
+def test_grouped_fused_path_materializes_no_dense_buffers():
+    """ISSUE 2: the GROUPED (n_groups > 1) hot path must uphold the same
+    invariant — no dense (B,S,r) dequant pass, no slice/pad copy, no XLA
+    gather of latents.  Traces the production helper
+    (core.sparse_attention._grouped_partials, fold-into-batch layout) and
+    walks every eqn.  Size-preserving ``reshape`` eqns are exempt: the
+    group fold is a metadata-only view of the raw cache (XLA bitcast), not
+    a copy — every other primitive at cache scale is an offender."""
+    from repro.config import SALSConfig
+    from repro.configs import get_config
+    from repro.core.latent_cache import LatentKVCache
+    from repro.core.sparse_attention import DecodePlan, _grouped_partials
+
+    cfg = get_config("yi-9b").reduced()          # H=4, Hkv=2, dh=32
+    b, s, g, nc, vg = 2, 512, 4, 64, 32
+    kvd = cfg.kv_dim
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=nc,
+                      n_sink=4, n_recent=16, v_bits=8, v_group=vg,
+                      k_latent_dtype="int8")
+    r = sals.rank(kvd)
+    r_star = sals.score_rank(kvd)
+    ks = jax.random.split(KEY, 4)
+    lat = jax.random.normal(ks[0], (b, s, r))
+    k_lat, k_scale = qz.quantize_latent_int8(lat)
+    v = jax.random.normal(ks[1], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    cache = LatentKVCache(
+        k_lat=k_lat, k_scale=k_scale, v_q=vq["q"], v_scale=vq["scale"],
+        v_zero=vq["zero"],
+        sink_k=jnp.zeros((b, sals.n_sink, cfg.n_kv_heads, cfg.head_dim)),
+        sink_v=jnp.zeros((b, sals.n_sink, cfg.n_kv_heads, cfg.head_dim)),
+        recent_k=jnp.zeros((b, sals.n_recent, cfg.n_kv_heads, cfg.head_dim)),
+        recent_v=jnp.zeros((b, sals.n_recent, cfg.n_kv_heads, cfg.head_dim)),
+        n_groups=g)
+    q0 = jax.random.normal(ks[2], (b, cfg.n_heads, cfg.head_dim))
+    q_bar = jax.random.normal(ks[3], (b, kvd))
+    u = jax.random.normal(KEY, (kvd, r), jnp.bfloat16)
+    pos = jnp.int32(s - 1)
+    plan = DecodePlan(n_groups=g, backend="pallas")
+
+    jaxpr = jax.make_jaxpr(
+        lambda q0, q_bar, u, cache: _grouped_partials(
+            q0, q_bar, u, cache, pos, cfg, sals, plan))(q0, q_bar, u, cache)
+    limit = min(b * s * r_star,              # old score slice/pad copy
+                b * s * r,                   # old dense dequant pass
+                b * nc * kvd)                # old gathered value buffer
+    offenders = []
+    for eqn in _walk_eqns(jaxpr.jaxpr, []):
+        in_sizes = {int(np.prod(iv.aval.shape)) if iv.aval.shape else 1
+                    for iv in eqn.invars if hasattr(iv, "aval")}
+        for ov in eqn.outvars:
+            size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if size < limit:
+                continue
+            if eqn.primitive.name == "reshape" and size in in_sizes:
+                continue                     # metadata-only group fold
+            offenders.append((eqn.primitive.name, ov.aval.shape))
     assert not offenders, offenders

@@ -79,11 +79,30 @@ def test_cache_pspecs_by_leaf_name():
     flat = jax.tree_util.tree_flatten_with_path(specs)[0]
     by_name = {}
     for path, spec in flat:
-        name = [str(p.key) for p in path if hasattr(p, "key")][-1]
+        # dict entries carry .key; LatentKVCache dataclass fields carry .name
+        name = [str(p.key) if hasattr(p, "key") else str(p.name)
+                for p in path if hasattr(p, "key") or hasattr(p, "name")][-1]
         by_name[name] = spec
     assert by_name["k_lat"] == P(None, "data", "model", None)
     assert by_name["sink_k"] == P(None, "data", None, None, None)
     assert by_name["k"][2] == "model"     # skip-layer cache seq-sharded
+
+
+def test_prefill_and_decode_cache_treedefs_match(mesh):
+    """The prefill step's output cache must be structurally identical
+    (incl. the LatentKVCache n_groups aux data) to the decode step's cache
+    argument, or the lowered prefill->decode pipeline can't chain."""
+    cfg = get_config("yi-9b").reduced(n_layers=6)   # keeps a sals segment
+    mc = MeshConfig(shape=(2, 4), axis_names=("data", "model"),
+                    dist_mode="local")
+    pf = sp.build_prefill(cfg, ShapeConfig("p", "prefill", 64, 8), mesh, mc)
+    dc = sp.build_decode(cfg, ShapeConfig("d", "decode", 64, 8), mesh, mc)
+    pf_cache_shardings = pf[3][1]        # out_shardings = (logits, cache)
+    dc_cache_shapes = dc[1][2]           # arg shapes = (params, proj, cache, ...)
+    assert jax.tree_util.tree_structure(pf_cache_shardings) \
+        == jax.tree_util.tree_structure(dc_cache_shapes)
+    # grouped layout actually engaged (4 kv_seq shards on this mesh)
+    assert dc_cache_shapes["seg1"].n_groups == 4
 
 
 def test_sals_for_shape_scaling():
