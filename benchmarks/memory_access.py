@@ -2,7 +2,11 @@
 
 Memory-access ratio per decode step (paper §4.5): full attention moves
 2·s·d_kv bf16 elements; SALS moves s·r* (scores) + N_sel·(r + v_bytes)
-(+ the full-precision sink/recent windows).  We reproduce the paper's
+(+ the full-precision sink/recent windows).  Under ragged continuous
+batching every per-byte term is unchanged — row i simply pays its own
+``s_i`` (its slot length) in place of the batch-wide ``s``, since the
+kernels stream the same cache columns and only the per-row selectability
+mask moves.  We reproduce the paper's
 reported ratios analytically from the SAME formula it uses, for the
 paper's models (llama2-7b / mistral-7b geometry), and measure the accuracy
 PROXY (next-token agreement + output MSE vs the uncompressed model) on a

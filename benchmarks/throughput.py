@@ -5,10 +5,12 @@ from __future__ import annotations
 
 import numpy as np
 
+import time
+
 from repro.analysis.roofline import HBM_BW
 from repro.config import SALSConfig, ServeConfig
 from repro.configs import get_config
-from repro.serve import ServeEngine
+from repro.serve import Request, RequestScheduler, ServeEngine
 from benchmarks import common
 from benchmarks.memory_access import traffic_ratio
 
@@ -55,12 +57,54 @@ def projected_rows():
     return rows
 
 
+def scheduler_rows():
+    """Continuous vs static batching (ISSUE 3): wall-clock to drain a
+    mixed-length request stream through the SAME SALS engine.  Continuous
+    admits into freed slots between ragged decode steps; static drains
+    whole batches.  The win grows with max_new_tokens variance (static pads
+    every batch to its slowest member)."""
+    cfg, params, corpus = common.trained_model()
+    sals = common.sals_settings(cfg, "25")
+    proj = common.projectors_for(cfg, params, corpus, sals)
+    eng = ServeEngine(params, proj, cfg,
+                      ServeConfig(max_seq_len=256, max_batch=4, sals=sals))
+    rows = []
+    for n_req, mnt_spread in [(8, (4, 24)), (12, (2, 12))]:
+        def workload():
+            # fresh rng per call: both modes drain the IDENTICAL stream
+            rng = np.random.default_rng(n_req)
+            return [Request(corpus.batch(70_000 + i, 1,
+                                         int(rng.integers(16, 48)))
+                            ["tokens"][0],
+                            max_new_tokens=max(1, int(rng.integers(
+                                *mnt_spread))))
+                    for i in range(n_req)]
+        out = {}
+        for mode in ("static", "continuous"):
+            sched = RequestScheduler(eng, mode=mode)
+            reqs = workload()
+            for r in reqs:
+                sched.submit(r)
+            t0 = time.perf_counter()
+            done = sched.run()
+            dt = time.perf_counter() - t0
+            toks = sum(r.result.steps for r in done)
+            out[mode] = toks / dt
+        rows.append(("scheduler-cpu", n_req, f"mnt{mnt_spread}",
+                     round(out["static"], 1), round(out["continuous"], 1),
+                     round(out["continuous"] / out["static"], 2)))
+    return rows
+
+
 def run() -> list:
     rows = measured_rows() + projected_rows()
     common.emit(rows, ["table", "batch", "seq", "full_tok_s", "sals_tok_s",
                        "speedup"])
     print("# paper Table 7 reference: 1.4x @ 4k, 4.5x @ 32k vs GPT-fast")
-    return rows
+    sched = scheduler_rows()
+    common.emit(sched, ["table", "requests", "budget", "static_tok_s",
+                        "continuous_tok_s", "speedup"])
+    return rows + sched
 
 
 if __name__ == "__main__":

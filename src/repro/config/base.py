@@ -301,12 +301,23 @@ class TrainConfig:
 
 @dataclass(frozen=True)
 class ServeConfig:
+    """``scheduler`` picks the batching discipline:
+      "continuous" — slot-arena continuous batching: requests join a running
+                     batch in empty slots between decode steps (per-slot
+                     lengths, ragged per-row decode positions)
+      "static"     — GPT-fast-style: fixed batches run prefill→drain
+    ``pad_id`` right-pads ragged prompts (masked via per-slot lengths —
+    pad tokens are never selectable nor attended)."""
+
     max_seq_len: int = 4096
     max_batch: int = 8
     max_new_tokens: int = 64
     temperature: float = 0.0
     sals: SALSConfig = field(default_factory=SALSConfig)
     seed: int = 0
+    pad_id: int = 0
+    scheduler: str = "continuous"     # continuous | static
+    prompt_bucket: int = 32           # single-request prefill pad granularity
 
 
 def asdict(cfg) -> dict:

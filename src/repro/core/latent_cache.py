@@ -16,6 +16,13 @@ Sink/recent tokens also exist in the latent arrays (written once, never
 selected — the scoring mask excludes their ranges) so a token sliding out of
 the recent ring becomes selectable without any copying.
 
+The batch axis is a SLOT ARENA for continuous batching: ``lengths`` ([L,] B)
+counts the tokens written per slot, writes take per-row (B,) positions
+(ragged decode — every kernel masks per row), and
+:meth:`prefill_into_slot` / :meth:`free_slot` replace one slot's row in
+place so a finished sequence's slot is reusable by a joining request
+without recompiling (same array shapes, same HLO).
+
 Layout metadata rides with the arrays as static pytree aux data:
 
   ``n_groups``   — decode selection layout.  1 = paper-faithful global
@@ -61,6 +68,7 @@ class LatentKVCache:
     recent_v: jnp.ndarray
     k_scale: Optional[jnp.ndarray] = None  # ([L,] B, S) int8-latent scale
     ssm: Any = None                        # hybrid-family recurrent state
+    lengths: Optional[jnp.ndarray] = None  # ([L,] B) int32 tokens per slot
     # --- static layout metadata (pytree aux data) --------------------------
     n_groups: int = 1
     shard_axis: str = "kv_seq"
@@ -98,6 +106,7 @@ class LatentKVCache:
                              qz.SCALE_DTYPE),
             sink_k=jnp.zeros(win, dtype), sink_v=jnp.zeros(win, dtype),
             recent_k=jnp.zeros(ring, dtype), recent_v=jnp.zeros(ring, dtype),
+            lengths=jnp.zeros((n_layers, batch), jnp.int32),
             n_groups=n_groups,
         )
 
@@ -105,10 +114,17 @@ class LatentKVCache:
     def prefill_layer(cls, cfg: ModelConfig, sals: SALSConfig,
                       u: jnp.ndarray, k_pre: jnp.ndarray, v: jnp.ndarray,
                       max_seq: int, dtype=jnp.bfloat16,
-                      n_groups: int = 1) -> "LatentKVCache":
+                      n_groups: int = 1,
+                      lengths: Optional[jnp.ndarray] = None
+                      ) -> "LatentKVCache":
         """Build ONE layer's cache (no leading L axis) from prefill tensors.
 
         k_pre/v: (B, S, n_kv, dh) pre-RoPE keys / values, S <= max_seq.
+        ``lengths`` (B,) int32: per-row true prompt lengths for RIGHT-padded
+        ragged batches — the sink/recent windows are filled from each row's
+        own real positions (pad-position latents land in the arrays but the
+        per-row decode position keeps them forever unselectable).  None
+        means every row is exactly ``s`` tokens.
         """
         if n_groups > 1 and max_seq % n_groups:
             raise ValueError(f"max_seq {max_seq} must be divisible by "
@@ -127,21 +143,47 @@ class LatentKVCache:
             return jnp.pad(x, cfgp)
 
         w = sals.n_recent
-        # ring layout: slot = position % w for the last min(s, w) positions
-        n_tail = min(s, w)
-        tail_pos = jnp.arange(s - n_tail, s)
-        slots = tail_pos % w
-        rk = jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim), dtype)
-        rv = jnp.zeros_like(rk)
-        rk = rk.at[:, slots].set(k_pre[:, s - n_tail:].astype(dtype))
-        rv = rv.at[:, slots].set(v[:, s - n_tail:].astype(dtype))
-
         ns = sals.n_sink
-        sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
-        sv = jnp.zeros_like(sk)
-        n_head = min(s, ns)
-        sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
-        sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
+        if lengths is None:
+            len_v = jnp.full((b,), s, jnp.int32)
+            # ring layout: slot = position % w for the last min(s, w) positions
+            n_tail = min(s, w)
+            tail_pos = jnp.arange(s - n_tail, s)
+            slots = tail_pos % w
+            rk = jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim), dtype)
+            rv = jnp.zeros_like(rk)
+            rk = rk.at[:, slots].set(k_pre[:, s - n_tail:].astype(dtype))
+            rv = rv.at[:, slots].set(v[:, s - n_tail:].astype(dtype))
+
+            sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
+            sv = jnp.zeros_like(sk)
+            n_head = min(s, ns)
+            sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
+            sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
+        else:
+            len_v = jnp.asarray(lengths, jnp.int32)
+            # ragged ring: slot j of row b holds that row's own position
+            # p = last - (last - j) % w (last = len-1); p < 0 -> empty slot
+            last = (len_v - 1)[:, None]                          # (B, 1)
+            p = last - (last - jnp.arange(w)[None, :]) % w       # (B, w)
+            ring_ok = p >= 0
+            pc = jnp.clip(p, 0, s - 1)[..., None, None]
+            rk = jnp.where(ring_ok[..., None, None],
+                           jnp.take_along_axis(k_pre, pc, axis=1), 0) \
+                .astype(dtype)
+            rv = jnp.where(ring_ok[..., None, None],
+                           jnp.take_along_axis(v, pc, axis=1), 0) \
+                .astype(dtype)
+            # ragged sink: first min(len, n_sink) real positions per row
+            n_head = min(s, ns)
+            sink_ok = (jnp.arange(ns)[None, :] < len_v[:, None]) \
+                & (jnp.arange(ns)[None, :] < n_head)
+            sk = jnp.zeros((b, ns, cfg.n_kv_heads, cfg.head_dim), dtype)
+            sv = jnp.zeros_like(sk)
+            sk = sk.at[:, :n_head].set(k_pre[:, :n_head].astype(dtype))
+            sv = sv.at[:, :n_head].set(v[:, :n_head].astype(dtype))
+            sk = jnp.where(sink_ok[..., None, None], sk, 0)
+            sv = jnp.where(sink_ok[..., None, None], sv, 0)
 
         if sals.k_latent_dtype == "int8":
             q, scale = qz.quantize_latent_int8(lat)
@@ -154,6 +196,7 @@ class LatentKVCache:
             v_q=pad(vq["q"]), v_scale=pad(vq["scale"]),
             v_zero=pad(vq["zero"]),
             sink_k=sk, sink_v=sv, recent_k=rk, recent_v=rv,
+            lengths=len_v,
             n_groups=n_groups,
         )
 
@@ -206,47 +249,86 @@ class LatentKVCache:
         plus the full-precision recent ring / sink insert.
 
         k_lat: (B, r) pre-RoPE latent keys; v_flat: (B, kv_dim);
-        k_pre/v: (B, n_kv, dh).  ``pos`` is a traced scalar.
+        k_pre/v: (B, n_kv, dh).  ``pos`` is a traced scalar or (B,) per-row
+        positions (ragged continuous batching: each slot appends at its own
+        position).
         """
         return self.write_latents(sals, pos, k_lat, v_flat) \
                    .write_ring(sals, pos, k_pre, v)
 
     def write_latents(self, sals: SALSConfig, pos, k_lat: jnp.ndarray,
                       v_flat: jnp.ndarray) -> "LatentKVCache":
-        """Write one token's latent K + quantized V at ``pos`` (no ring
-        update — see :meth:`write_ring`)."""
+        """Write one token's latent K + quantized V at ``pos`` (scalar or
+        (B,) per-row; no ring update — see :meth:`write_ring`)."""
+        pos_v = _row_positions(pos, k_lat.shape[0])
         out = {}
         if sals.k_latent_dtype == "int8":
             q, scale = qz.quantize_latent_int8(k_lat)
-            out["k_lat"] = _upd(self.k_lat, q[:, None, :], pos)
-            out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
-                self.k_scale, scale[:, None].astype(self.k_scale.dtype),
-                pos, axis=1)
+            out["k_lat"] = _upd_rows(self.k_lat, q, pos_v)
+            out["k_scale"] = _upd_rows(self.k_scale, scale, pos_v)
         else:
-            out["k_lat"] = _upd(self.k_lat, k_lat[:, None, :], pos)
+            out["k_lat"] = _upd_rows(self.k_lat, k_lat, pos_v)
         vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
-        out["v_q"] = _upd(self.v_q, vq["q"][:, None, :], pos)
-        out["v_scale"] = _upd(self.v_scale, vq["scale"][:, None, :], pos)
-        out["v_zero"] = _upd(self.v_zero, vq["zero"][:, None, :], pos)
+        out["v_q"] = _upd_rows(self.v_q, vq["q"], pos_v)
+        out["v_scale"] = _upd_rows(self.v_scale, vq["scale"], pos_v)
+        out["v_zero"] = _upd_rows(self.v_zero, vq["zero"], pos_v)
+        if self.lengths is not None:
+            out["lengths"] = jnp.maximum(self.lengths, pos_v + 1)
         return self.replace(**out)
 
     def write_ring(self, sals: SALSConfig, pos, k_pre: jnp.ndarray,
                    v: jnp.ndarray) -> "LatentKVCache":
         """Insert one token into the full-precision recent ring (and the
-        sink region while pos < n_sink).  k_pre/v: (B, n_kv, dh)."""
+        sink region while pos < n_sink).  k_pre/v: (B, n_kv, dh); ``pos``
+        scalar or (B,) per-row positions."""
         w = sals.n_recent
-        slot = jax.lax.rem(pos, w)
+        pos_v = _row_positions(pos, k_pre.shape[0])
+        slot = jax.lax.rem(pos_v, w)
         out = {
-            "recent_k": _upd(self.recent_k, k_pre[:, None], slot),
-            "recent_v": _upd(self.recent_v, v[:, None], slot),
+            "recent_k": _upd_rows(self.recent_k, k_pre, slot),
+            "recent_v": _upd_rows(self.recent_v, v, slot),
         }
-        in_sink = pos < sals.n_sink
-        sink_pos = jnp.where(in_sink, pos, 0)
-        new_sk = _upd(self.sink_k, k_pre[:, None], sink_pos)
-        new_sv = _upd(self.sink_v, v[:, None], sink_pos)
-        out["sink_k"] = jnp.where(in_sink, new_sk, self.sink_k)
-        out["sink_v"] = jnp.where(in_sink, new_sv, self.sink_v)
+        in_sink = pos_v < sals.n_sink                       # (B,)
+        sink_pos = jnp.where(in_sink, pos_v, 0)
+        new_sk = _upd_rows(self.sink_k, k_pre, sink_pos)
+        new_sv = _upd_rows(self.sink_v, v, sink_pos)
+        keep = in_sink[:, None, None, None]
+        out["sink_k"] = jnp.where(keep, new_sk, self.sink_k)
+        out["sink_v"] = jnp.where(keep, new_sv, self.sink_v)
         return self.replace(**out)
+
+    # ------------------------------------------------------------ slot arena
+
+    def prefill_into_slot(self, slot, other: "LatentKVCache"
+                          ) -> "LatentKVCache":
+        """Replace batch row ``slot`` with ``other``'s (batch=1) arrays.
+
+        ``other`` must have the same treedef (same layer stacking, same
+        ``n_groups`` / optional-field pattern) with batch size 1 — e.g. a
+        freshly prefilled single request joining a running slot arena.
+        ``slot`` may be a traced scalar, so admission re-executes ONE
+        compiled HLO regardless of which slot frees up.
+        """
+        ax = 1 if self.k_lat.ndim == 4 else 0
+
+        def put(a, o):
+            return jax.lax.dynamic_update_slice_in_dim(
+                a, o.astype(a.dtype), slot, axis=ax)
+
+        return jax.tree.map(put, self, other)
+
+    def free_slot(self, slot) -> "LatentKVCache":
+        """Zero batch row ``slot`` (all regions + its length): the slot is
+        reusable by :meth:`prefill_into_slot` without touching any other
+        slot's bytes."""
+        ax = 1 if self.k_lat.ndim == 4 else 0
+
+        def clr(a):
+            row = jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(
+                a, jnp.zeros_like(row), slot, axis=ax)
+
+        return jax.tree.map(clr, self)
 
     # --------------------------------------------------------------- oracles
 
@@ -303,7 +385,7 @@ class LatentKVCache:
 jax.tree_util.register_dataclass(
     LatentKVCache,
     data_fields=["k_lat", "v_q", "v_scale", "v_zero", "sink_k", "sink_v",
-                 "recent_k", "recent_v", "k_scale", "ssm"],
+                 "recent_k", "recent_v", "k_scale", "ssm", "lengths"],
     meta_fields=["n_groups", "shard_axis"])
 
 
@@ -319,6 +401,12 @@ def cache_bytes_per_token(cfg: ModelConfig, sals: SALSConfig) -> float:
     return shapes.bytes_per_token
 
 
-def _upd(arr, val, pos):
-    return jax.lax.dynamic_update_slice_in_dim(arr, val.astype(arr.dtype),
-                                               pos, axis=1)
+def _row_positions(pos, batch: int) -> jnp.ndarray:
+    """Normalize a scalar-or-(B,) decode position to (B,) int32."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (batch,))
+
+
+def _upd_rows(arr, val, pos_v):
+    """Write val[b] into arr[b, pos_v[b]] (per-row scatter along axis 1)."""
+    b = arr.shape[0]
+    return arr.at[jnp.arange(b), pos_v].set(val.astype(arr.dtype))

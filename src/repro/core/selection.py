@@ -125,6 +125,10 @@ def ring_positions(pos, n_recent: int) -> jnp.ndarray:
     (after the current token was inserted at slot pos % W).
 
     slot i holds position p = pos - ((pos - i) mod W); negative -> empty.
+    ``pos`` scalar -> (W,); ``pos`` (B,) per-row positions -> (B, W).
     """
     i = jnp.arange(n_recent)
-    return pos - (pos - i) % n_recent  # jnp % is floored -> non-negative
+    p = jnp.asarray(pos)
+    if p.ndim == 1:
+        p = p[:, None]
+    return p - (p - i) % n_recent  # jnp % is floored -> non-negative

@@ -165,8 +165,9 @@ def _slab_partials(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos,
                    backend):
     """Fused top-k + recon-attend over sequence slabs (rows = slabs).
 
-    All per-token arrays are (N, S_loc, ...); ``base`` (N,) holds each
-    row's global position offset.  Returns flash partials (N, H[, dh]).
+    All per-token arrays are (N, S_loc, ...); ``pos`` is a scalar or (N,)
+    per-row decode positions; ``base`` (N,) holds each row's global
+    position offset.  Returns flash partials (N, H[, dh]).
     """
     idx, valid = ops.latent_topk(
         q_lat, k_lat, k_scale, pos, n_critical=k_loc, n_sink=sals.n_sink,
@@ -212,7 +213,9 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
     base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)  # row = b·G+g
     qg = jnp.repeat(q0, g, axis=0)                              # (B·G, H, dh)
     qlg = jnp.repeat(q_lat, g, axis=0)
-    m, l, o = _slab_partials(qg, qlg, kg, ksg, vqg, vsg, vzg, u, pos, base,
+    pos_g = jnp.repeat(jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,)), g)      # (B·G,)
+    m, l, o = _slab_partials(qg, qlg, kg, ksg, vqg, vsg, vzg, u, pos_g, base,
                              cfg, sals, k_loc, plan.backend)
     return (m.reshape(b, g, h), l.reshape(b, g, h),
             o.reshape(b, g, h, cfg.head_dim))
@@ -225,7 +228,9 @@ def _grouped_shardmap(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
     axes = plan.shard_axes
     sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
     ba = ctx.rules.get("batch")
-    pos_arr = jnp.asarray(pos, jnp.int32)
+    # per-row positions ride with the batch sharding (ragged decode)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                               (q0.shape[0],))
 
     def local_fn(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos):
         gi = jnp.int32(0)
@@ -244,7 +249,7 @@ def _grouped_shardmap(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
     in_specs = (P(ba, None, None), P(ba, None), tok_specs[0],
                 scale_spec if k_scale is not None else P(),
                 tok_specs[1], tok_specs[2], tok_specs[3],
-                P(None, None), P())
+                P(None, None), P(ba))
     out_specs = (P(ba, seq), P(ba, seq), P(ba, seq, None))
     k_scale_arg = k_scale if k_scale is not None \
         else jnp.zeros((), jnp.int32)               # unused placeholder
@@ -268,8 +273,11 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
                        ) -> Tuple[jnp.ndarray, LatentKVCache]:
     """One-token SALS attention for one layer.
 
-    x: (B, 1, d); pos: traced scalar position of this token.  The selection
-    layout comes from ``cache.n_groups`` (via :func:`plan_decode`) unless an
+    x: (B, 1, d); pos: traced scalar position of this token, or a (B,)
+    per-row positions vector (ragged continuous batching — every stage
+    masks, RoPEs, and writes per row; a batch of heterogeneous positions is
+    bit-identical to the same rows decoded alone).  The selection layout
+    comes from ``cache.n_groups`` (via :func:`plan_decode`) unless an
     explicit ``plan`` is given.  Returns (y (B,1,d), updated cache).
     """
     if plan is None:
@@ -277,6 +285,7 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
     b = x.shape[0]
     kvd = cfg.kv_dim
     w = sals.n_recent
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
 
     q, k_new, v_new = qkv_proj(params, x, cfg)        # (B,1,H,dh)/(B,1,Hkv,dh)
     k_flat = k_new.reshape(b, kvd)
@@ -284,30 +293,31 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
 
     # ---- stage 1: append to caches ---------------------------------------
     k_lat_new = (k_flat.astype(jnp.float32) @ u.astype(jnp.float32))
-    cache = cache.write(sals, pos, k_lat_new, v_flat, k_new[:, 0], v_new[:, 0])
+    cache = cache.write(sals, pos_v, k_lat_new, v_flat, k_new[:, 0],
+                        v_new[:, 0])
 
     # ---- stage 2 input: head-group-summed query ---------------------------
     q_bar = sel.group_query(q[:, 0], cfg)             # (B, kvd)
 
-    # RoPE'd query for the exact attention
-    pos_b = jnp.full((b, 1), pos, jnp.int32)
-    q_r = (apply_rope(q, pos_b, cfg.rope_theta) if cfg.use_rope else q)[:, 0]
+    # RoPE'd query for the exact attention (per-row position)
+    q_r = (apply_rope(q, pos_v[:, None], cfg.rope_theta)
+           if cfg.use_rope else q)[:, 0]
 
     # ---- sink + recent region (always attended, full precision) ----------
     ns = sals.n_sink
-    sink_pos = jnp.arange(ns)
-    rec_pos = sel.ring_positions(pos, w)
+    sink_pos = jnp.broadcast_to(jnp.arange(ns)[None, :], (b, ns))
+    rec_pos = sel.ring_positions(pos_v, w)            # (B, w)
     sr_k = jnp.concatenate([cache.sink_k, cache.recent_k], axis=1)
     sr_v = jnp.concatenate([cache.sink_v, cache.recent_v], axis=1)
-    sr_positions = jnp.concatenate([sink_pos, rec_pos])
-    sr_valid = (sr_positions >= 0) & (sr_positions <= pos)
-    sr_logits = _region_logits(q_r, sr_k, sr_positions[None, :], cfg)
-    sr_logits = jnp.where(sr_valid[None, None, :], sr_logits, NEG)
+    sr_positions = jnp.concatenate([sink_pos, rec_pos], axis=1)  # (B, ns+w)
+    sr_valid = (sr_positions >= 0) & (sr_positions <= pos_v[:, None])
+    sr_logits = _region_logits(q_r, sr_k, sr_positions, cfg)
+    sr_logits = jnp.where(sr_valid[:, None, :], sr_logits, NEG)
     m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
 
     # ---- stages 2-4: fused selected-token partials, (B, G, H[, dh]) -------
     attend = _global_partials if plan.n_groups <= 1 else _grouped_partials
-    m_c, l_c, o_c = attend(q[:, 0], q_bar, u, cache, pos, cfg, sals, plan)
+    m_c, l_c, o_c = attend(q[:, 0], q_bar, u, cache, pos_v, cfg, sals, plan)
 
     # ---- stage 5: flash-style LSE merge across groups + window ------------
     m_all = jnp.maximum(jnp.max(m_c, axis=1), m_sr)   # (B,H)

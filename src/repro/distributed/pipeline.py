@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import axis_size
+
 
 def stage_slice(tree, stage: int, n_stages: int, n_layers: int):
     """Slice stacked (L, ...) block params to one stage's layers."""
@@ -48,7 +50,7 @@ def gpipe_loss(block_fn: Callable, embed_fn: Callable, head_loss_fn: Callable,
     """
 
     def loss_fn(stage_blocks, io_params, batch):
-        p = jax.lax.axis_size(axis)
+        p = axis_size(axis)
         sid = jax.lax.axis_index(axis)
         m = jax.tree.leaves(batch)[0].shape[0]
         t_total = m + p - 1
@@ -67,7 +69,10 @@ def gpipe_loss(block_fn: Callable, embed_fn: Callable, head_loss_fn: Callable,
             # last stage: microbatch (t - p + 1) completes this tick
             out_idx = jnp.clip(t - (p - 1), 0, m - 1)
             mb_out = jax.tree.map(lambda a: a[out_idx], batch)
-            mb_loss = head_loss_fn(io_params, y, mb_out)
+            # (1,)-shaped, not scalar: rank-0 values crossing the shard_map
+            # boundary as autodiff residuals trip the out-spec rank check
+            # (they cannot concatenate along the pipe axis)
+            mb_loss = head_loss_fn(io_params, y, mb_out).reshape(1)
             take = jnp.logical_and(sid == p - 1, t >= p - 1)
             loss_sum = loss_sum + jnp.where(take, mb_loss, 0.0)
             # push boundary activation to the next stage (ring; the wrap
@@ -78,11 +83,11 @@ def gpipe_loss(block_fn: Callable, embed_fn: Callable, head_loss_fn: Callable,
             return (nxt, loss_sum), None
 
         (_, loss_sum), _ = jax.lax.scan(
-            tick, (buf0, jnp.zeros((), jnp.float32)), jnp.arange(t_total))
+            tick, (buf0, jnp.zeros((1,), jnp.float32)), jnp.arange(t_total))
         # everyone returns the last stage's mean loss
         loss = jax.lax.psum(
             jnp.where(sid == p - 1, loss_sum, 0.0), axis) / m
-        return loss
+        return loss[0]
 
     return loss_fn
 

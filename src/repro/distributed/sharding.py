@@ -84,6 +84,15 @@ def logical_spec(logical) -> P:
     return ctx.spec(logical)
 
 
+def axis_size(ax) -> int:
+    """Static mesh-axis size inside shard_map, across jax versions:
+    jax >= 0.6 exposes lax.axis_size; 0.4.x returns the int from
+    core.axis_frame."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.core.axis_frame(ax)
+
+
 def mesh_axes_for(logical: str) -> Tuple[Tuple[str, ...], int]:
     """Physical mesh axes a logical axis maps to, and their combined size.
 

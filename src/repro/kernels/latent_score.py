@@ -13,8 +13,10 @@ the §4.5 traffic model's ``s·r*`` term is paid exactly once, streaming):
 
 ``latent_topk_pallas``
     The same streaming scores, plus the §4.3 selection fused in: the decode
-    position arrives as a scalar-prefetch operand, the sink/recent
-    selectability mask is computed from an in-kernel iota, and each seq block
+    positions arrive as a per-batch-row (B,) scalar-prefetch operand (a
+    scalar broadcasts — ragged continuous-batching rows each carry their own
+    position), the sink/recent selectability mask is computed from an
+    in-kernel iota, and each seq block
     emits its top-min(N_c, bs) candidates via an iterative max-extract loop
     (Mosaic-safe: max + iota-argmin + mask, no sort).  The host-side
     ``jax.lax.top_k`` then runs over (B, nb·k) candidates instead of (B, S).
@@ -141,7 +143,7 @@ def _topk_body(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
                *, bs: int, s: int, kb: int, n_sink: int, n_recent: int):
     b_, i = pl.program_id(0), pl.program_id(1)
     scores, col = _block_scores(q_ref, k_ref, scale_ref, i, bs, s)
-    pos = pos_ref[0]
+    pos = pos_ref[b_]                                       # per-row position
     posn = i * bs + col                                     # (1, bs) local
     pglob = posn + base_ref[b_]                             # global position
     ok = (pglob >= n_sink) & (pglob <= pos - n_recent) & (posn < s)
@@ -183,16 +185,18 @@ def latent_topk_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
     """Fused §4.3 scoring + selection over the raw latent cache.
 
     q_lat: (B, r*); k_lat: (B, S, r); k_scale: (B, S) or None; pos: traced
-    decode position (scalar); pos_base: (B,) per-row global offset of
-    column 0 (grouped layout), or None for 0.  Returns (idx (B, N_c) int32
-    row-LOCAL, valid (B, N_c) bool) — identical (incl. tie-breaks) to
-    masking + full-seq lax.top_k.
+    decode position — scalar, or (B,) per-row positions (ragged continuous
+    batching: each batch row masks against its own position); pos_base:
+    (B,) per-row global offset of column 0 (grouped layout), or None for 0.
+    Returns (idx (B, N_c) int32 row-LOCAL, valid (B, N_c) bool) — identical
+    (incl. tie-breaks) to masking + full-seq lax.top_k.
     """
     b, r_star = q_lat.shape
     s = k_lat.shape[1]
     bs = min(block_s, s)
     nb, kb = topk_candidate_shape(s, n_critical, block_s)
-    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+    pos_arr = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     base_arr = jnp.zeros((b,), jnp.int32) if pos_base is None \
         else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
 

@@ -264,7 +264,8 @@ def latent_topk(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
                 backend: Optional[str] = None):
     """Fused scoring + top-N_c selection over the raw latent cache.
 
-    Returns (idx (B, N_c) int32, valid (B, N_c) bool).  ``pos_base`` (B,)
+    Returns (idx (B, N_c) int32, valid (B, N_c) bool).  ``pos`` is a scalar
+    or (B,) per-row decode positions (ragged batches).  ``pos_base`` (B,)
     offsets row b's global positions — the grouped layout scores each
     sequence slab with the same kernel (indices stay slab-local).  The
     Pallas path emits per-seq-block candidates so the final ``lax.top_k``
@@ -296,7 +297,8 @@ def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
     The top-k ``idx`` (B, N_c) is the only selection artifact passed in; the
     Pallas path gathers + dequantizes in-kernel via scalar-prefetch indexing
     (zero HBM intermediates), the "xla"/"naive" oracle gathers with
-    ``take_along_axis``.  ``pos_base`` (B,) offsets each row's RoPE
+    ``take_along_axis``.  ``q_pos`` is a scalar or (B,) per-row decode
+    positions (ragged batches).  ``pos_base`` (B,) offsets each row's RoPE
     positions (grouped layout: idx is slab-local, position is
     ``pos_base[b] + idx[b, n]``).  See ref.sparse_recon_attention_fused_ref
     for the full contract."""

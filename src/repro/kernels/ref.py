@@ -65,7 +65,8 @@ def latent_topk_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
     """Fused §4.3 scoring + selection oracle over the raw latent cache.
 
     Scores every cached latent, masks the sink / recent / future ranges,
-    takes the global top-N_c.  ``pos_base`` (B,) offsets row b's global
+    takes the global top-N_c.  ``pos`` is a scalar or (B,) per-row decode
+    positions (ragged batches); ``pos_base`` (B,) offsets row b's global
     positions (grouped layout; returned indices stay row-local).  Returns
     (idx (B, N_c) int32, valid (B, N_c) bool); ``valid`` is False for slots
     that fell on masked entries.
@@ -74,8 +75,9 @@ def latent_topk_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
     b, s = scores.shape
     base = jnp.zeros((b,), jnp.int32) if pos_base is None \
         else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     positions = jnp.arange(s)[None, :] + base[:, None]          # (B, S)
-    mask = (positions >= n_sink) & (positions <= pos - n_recent)
+    mask = (positions >= n_sink) & (positions <= pos_b[:, None] - n_recent)
     masked = jnp.where(mask, scores, NEG_INF)
     vals, idx = jax.lax.top_k(masked, n_critical)
     return idx.astype(jnp.int32), vals > NEG_INF / 2

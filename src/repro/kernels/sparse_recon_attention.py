@@ -166,10 +166,12 @@ def sparse_recon_attention_pallas(
 
     q: (B, H, dh) pre-RoPE query; k_lat: (B, S, r); k_scale: (B, S) or None;
     v_q: (B, S, code_w); v_scale/v_zero: (B, S, G); u: (kvd, r);
-    idx/valid: (B, N_c) selected cache rows; q_pos: scalar or (B,);
-    pos_base: (B,) per-row global offset of cache row 0 (grouped layout —
-    RoPE is applied at ``pos_base[b] + idx[b, n]``), or None for 0.
-    Returns (m (B,H), l (B,H), o (B,H,dh)) flash partials, f32.
+    idx/valid: (B, N_c) selected cache rows; q_pos: scalar or (B,) per-row
+    decode positions — each row's query is RoPE'd at its own position, so
+    ragged (continuous-batching) batches decode bit-identically to the same
+    rows decoded alone; pos_base: (B,) per-row global offset of cache row 0
+    (grouped layout — RoPE is applied at ``pos_base[b] + idx[b, n]``), or
+    None for 0.  Returns (m (B,H), l (B,H), o (B,H,dh)) flash partials, f32.
     """
     b, h, dh = q.shape
     r = k_lat.shape[2]

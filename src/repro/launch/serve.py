@@ -79,6 +79,13 @@ def main() -> None:
                          "global top-k, >1 = per-group top-(N_c/G) + LSE "
                          "merge (the sequence-sharded serving layout; rides "
                          "as LatentKVCache metadata)")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("continuous", "static"),
+                    help="continuous = slot-arena batching (requests join a "
+                         "running batch between decode steps; per-slot "
+                         "lengths, ragged positions); static = GPT-fast-"
+                         "style fixed batches (also the automatic fallback "
+                         "for recurrent-state families)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -116,6 +123,7 @@ def main() -> None:
     scfg = ServeConfig(max_seq_len=args.max_seq, max_batch=args.max_batch,
                        max_new_tokens=args.max_new_tokens,
                        temperature=args.temperature,
+                       scheduler=args.scheduler,
                        sals=sals or SALSConfig(enabled=False))
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility
@@ -133,7 +141,7 @@ def main() -> None:
     total_new = sum(r.result.steps for r in done)
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"-> {total_new / dt:.1f} tok/s "
-          f"(sals={args.sals}, arch={args.arch})")
+          f"(sals={args.sals}, arch={args.arch}, scheduler={sched.mode})")
     for r in done[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")

@@ -123,6 +123,8 @@ def cache_pspecs(cache_shapes, rules: dict) -> Any:
             return P(None, ba, sa)
         if name in ("sink_k", "sink_v", "recent_k", "recent_v"):
             return P(None, ba, None, None, None)
+        if name == "lengths":                # per-slot token counts (L, B)
+            return P(None, ba)
         if name in ("k", "v"):               # full-precision skip layers:
             # seq-sharded: the 1-token DUS at a traced position stays local
             # (masked select per shard) and the softmax reduction over the

@@ -195,11 +195,13 @@ def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,
 
     x: (B, 1, d).  k_cache/v_cache: (B, S_max, Hkv, dh) — k_cache holds
     *post-RoPE* keys (standard layout; these layers never reconstruct).
-    pos: scalar int32 — current token position (same across batch; the
-    serve engine right-aligns).  Returns (y, new_k_cache, new_v_cache).
+    pos: scalar int32, or (B,) per-row positions (ragged continuous
+    batching: every row writes, RoPEs, and masks at its own position).
+    Returns (y, new_k_cache, new_v_cache).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    positions = pos_v[:, None]
     q, k, v = qkv_proj(params, x, cfg)
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -208,16 +210,17 @@ def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,
     # without the constraint GSPMD propagates the wk column sharding into
     # the cache and re-gathers the whole 32k cache every step (§Perf A3)
     cache_axes = ("batch", "kv_seq_full", "kv_heads", None)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, constrain(k, ("batch", "seq", "kv_heads", None))
-        .astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, constrain(v, ("batch", "seq", "kv_heads", None))
-        .astype(v_cache.dtype), pos, axis=1)
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, pos_v].set(
+        constrain(k, ("batch", "seq", "kv_heads", None))[:, 0]
+        .astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, pos_v].set(
+        constrain(v, ("batch", "seq", "kv_heads", None))[:, 0]
+        .astype(v_cache.dtype))
     k_cache = constrain(k_cache, cache_axes)
     v_cache = constrain(v_cache, cache_axes)
     s_max = k_cache.shape[1]
-    valid = jnp.arange(s_max) <= pos  # (S,)
+    valid = jnp.arange(s_max)[None, :] <= pos_v[:, None]  # (B, S)
     # GQA einsum without repeat_kv materialization (×group memory); bf16
     # operands with f32 accumulation — .astype(f32) on the cache would
     # materialize a full f32 copy of the 32k cache every step (§Perf A4)
@@ -228,7 +231,7 @@ def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,
     if cfg.attn_logit_softcap:
         logits = cfg.attn_logit_softcap * jnp.tanh(
             logits / cfg.attn_logit_softcap)
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkrs,bskd->bkrd", p.astype(q.dtype),
                    v_cache.astype(q.dtype),

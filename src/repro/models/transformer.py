@@ -15,8 +15,12 @@ Entry points
   init_params(key, cfg)                      -> params
   forward(params, cfg, batch, ...)           -> (logits, aux)     [train]
   init_cache(cfg, sals, batch, max_seq)      -> cache
-  prefill(params, proj, cfg, sals, batch, max_seq) -> (last_logits, cache)
+  prefill(params, proj, cfg, sals, batch, max_seq[, lengths]) -> (last_logits, cache)
   decode_step(params, proj, cache, tokens, pos, cfg, sals) -> (logits, cache)
+
+``pos`` is a traced scalar or a (B,) per-row positions vector, and
+``lengths`` right-pad-masks a ragged prompt batch — the continuous-batching
+layout (see serve/engine.py).
 """
 from __future__ import annotations
 
@@ -331,11 +335,17 @@ def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
 
 def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
             sals: Optional[SALSConfig], batch: Dict[str, jnp.ndarray],
-            max_seq: int, n_groups: int = 1) -> Tuple[jnp.ndarray, dict]:
+            max_seq: int, n_groups: int = 1,
+            lengths: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, dict]:
     """Process the prompt, build the decode cache.
 
     ``n_groups`` stamps the SALS segments' decode selection layout.
-    Returns (last-position logits (B, V) f32, cache).
+    ``lengths`` (B,) int32: per-row true prompt lengths for RIGHT-padded
+    ragged batches — the SALS segments store per-slot lengths (sink/recent
+    windows filled from each row's real positions) and the returned logits
+    are taken at each row's own last real token.  None = all rows span the
+    full padded width.  Returns (last-position logits (B, V) f32, cache).
     """
     dtype = jnp.dtype(cfg.dtype)
     x, prefix_len = embed_inputs(params, cfg, batch)
@@ -343,6 +353,10 @@ def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
     positions = jnp.arange(s)[None, :]
     segs = segment_plan(cfg, sals)
     cache: Dict[str, Any] = {}
+    len_v = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+    # cache positions include any vision prefix (vlm): a row's true span in
+    # the cache is prefix_len + its token length
+    cache_len = None if len_v is None else prefix_len + len_v
 
     for si, (i0, i1, mode) in enumerate(segs):
         bp_seg = _slice_tree(params["blocks"], i0, i1)
@@ -354,7 +368,7 @@ def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
                 x, _, ex = _block_fwd(bp, x, cfg, positions, prefix_len, True)
                 layer = lc.LatentKVCache.prefill_layer(
                     cfg, sals, u_l, ex["k_pre"], ex["v"], max_seq, dtype,
-                    n_groups=n_groups)
+                    n_groups=n_groups, lengths=cache_len)
                 if cfg.family == "hybrid":
                     layer = layer.replace(ssm=ex["ssm"])
                 return x, layer
@@ -377,7 +391,11 @@ def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
         cache[f"seg{si}"] = seg
 
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    last = x[:, -1:, :]
+    if len_v is None:
+        last = x[:, -1:, :]
+    else:        # ragged: each row's last REAL token (+ any vision prefix)
+        last_idx = prefix_len + len_v - 1
+        last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
     logits = unembed_apply(params["embed"], last, cfg)[:, 0]
     return logits, cache
 
@@ -398,7 +416,10 @@ def _pad_seq(a: jnp.ndarray, max_seq: int) -> jnp.ndarray:
 def decode_step(params: dict, projectors: Optional[dict], cache: dict,
                 tokens: jnp.ndarray, pos, cfg: ModelConfig,
                 sals: Optional[SALSConfig]) -> Tuple[jnp.ndarray, dict]:
-    """One decode step. tokens: (B,) int32; pos: traced scalar.
+    """One decode step. tokens: (B,) int32; pos: traced scalar, or a (B,)
+    per-row positions vector — the ragged continuous-batching layout where
+    every sequence advances at its own position (all attention paths mask,
+    RoPE, and write per row; recurrent ssm/hybrid state is position-free).
 
     The SALS selection layout (global vs grouped) is read from the latent
     segments' ``n_groups`` metadata — set at init_cache/prefill time.

@@ -1,25 +1,30 @@
 """Serving engine: batched prefill + SALS decode.
 
 One engine per (model, SALS setting).  The decode step is jitted once with a
-static max_seq cache and a traced position, so generation is a fixed HLO
-re-executed per token — the serving equivalent of the paper's GPT-fast
+static max_seq cache and traced per-row positions, so generation is a fixed
+HLO re-executed per token — the serving equivalent of the paper's GPT-fast
 baseline, with SALS latent-cache attention replacing full KV attention on
 the middle layers.
 
-Batching: prompts in a batch are RIGHT-ALIGNED (left-padded) to a common
-length so every sequence's next position is the same scalar ``pos`` —
-this keeps the decode step's position a single traced value (the layout
-GPT-fast and most static-shape servers use).  Padding tokens occupy cache
-slots but are masked out of attention scores by their position range never
-being reached... for simplicity we instead LEFT-pad with the first real
-token repeated; with sink tokens at the pad positions the effect on quality
-is negligible for the synthetic-weight tests here, and the positions stay
-exact.
+Batching is RAGGED: prompts are right-padded with ``scfg.pad_id`` and carry
+their true lengths (per-slot ``lengths`` on the LatentKVCache, per-row
+decode positions through every kernel), so pad tokens are never selectable
+by the latent top-k nor attended by the window/full paths.  The batch axis
+is a slot arena for continuous batching: :meth:`init_slot_cache`,
+:meth:`prefill_one`, and :meth:`admit` let the scheduler prefill a single
+joining request and splice it into an empty slot of a RUNNING batch between
+decode steps — the decode HLO is compiled once and reused across
+admissions (the slot index is a traced scalar).
+
+Exception: recurrent-state families (ssm, hybrid) build their state by
+scanning the padded sequence, so right-padding would fold pad tokens into
+the state.  For those, :meth:`generate` falls back to the uniform-length
+layout (left-fill with the first prompt token, exact positions) and the
+scheduler uses static batching.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Tuple
 
 import jax
@@ -27,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig, SALSConfig, ServeConfig
+from repro.core.latent_cache import LatentKVCache
 from repro.models import transformer as tf
 
 
@@ -58,17 +64,44 @@ class ServeEngine:
         self.n_groups = n_groups
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._init_slots = jax.jit(self._init_slots_impl)
+
+    @property
+    def ragged_ok(self) -> bool:
+        """Right-padded ragged batching is exact for attention families;
+        recurrent ssm/hybrid state would absorb pad tokens."""
+        return self.cfg.family not in ("ssm", "hybrid")
 
     # -- jitted bodies -------------------------------------------------------
 
-    def _prefill_impl(self, batch):
+    def _prefill_impl(self, batch, lengths=None):
         return tf.prefill(self.params, self.projectors, self.cfg, self.sals,
                           batch, self.scfg.max_seq_len,
-                          n_groups=self.n_groups)
+                          n_groups=self.n_groups, lengths=lengths)
 
     def _decode_impl(self, tokens, cache, pos):
         return tf.decode_step(self.params, self.projectors, cache, tokens,
                               pos, self.cfg, self.sals)
+
+    def _admit_impl(self, cache, one, slot):
+        # every cache leaf is layer-stacked (L, B, ...): splice batch row
+        # ``slot`` (a TRACED scalar — one admission HLO for every slot).
+        # Latent segments go through the typed slot-arena method; the
+        # full-precision / recurrent segments are plain leaf splices.
+        def splice(seg, one_seg):
+            if isinstance(seg, LatentKVCache):
+                return seg.prefill_into_slot(slot, one_seg)
+            return jax.tree.map(
+                lambda a, o: jax.lax.dynamic_update_slice_in_dim(
+                    a, o.astype(a.dtype), slot, axis=1),
+                seg, one_seg)
+
+        return {k: splice(seg, one[k]) for k, seg in cache.items()}
+
+    def _init_slots_impl(self):
+        return tf.init_cache(self.cfg, self.sals, self.scfg.max_batch,
+                             self.scfg.max_seq_len, n_groups=self.n_groups)
 
     # -- sampling ------------------------------------------------------------
 
@@ -77,6 +110,32 @@ class ServeEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    # -- continuous-batching primitives (used by RequestScheduler) -----------
+
+    def init_slot_cache(self):
+        """Zeroed slot-arena decode cache with ``max_batch`` slots."""
+        return self._init_slots()
+
+    def prefill_one(self, prompt: np.ndarray) -> Tuple[jnp.ndarray, dict]:
+        """Prefill ONE request (padded to the prompt bucket so admissions of
+        similar lengths share a compiled prefill).  Returns (logits (1, V)
+        at the last real token, single-slot cache)."""
+        plen = len(prompt)
+        pb = max(1, self.scfg.prompt_bucket)
+        bucket = min(self.scfg.max_seq_len, -(-max(plen, 1) // pb) * pb)
+        if plen > bucket:
+            raise ValueError(f"prompt {plen} exceeds max_seq "
+                             f"{self.scfg.max_seq_len}")
+        toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+        toks[0, :plen] = prompt
+        return self._prefill({"tokens": jnp.asarray(toks)},
+                             jnp.asarray([plen], jnp.int32))
+
+    def admit(self, cache, one_cache, slot: int):
+        """Splice a prefilled single-request cache into batch row ``slot``
+        of a running slot arena (same compiled HLO for every slot)."""
+        return self._admit(cache, one_cache, jnp.int32(slot))
 
     # -- public API ----------------------------------------------------------
 
@@ -92,13 +151,23 @@ class ServeEngine:
             raise ValueError(
                 f"prompt {max_len} + new {mnt} exceeds max_seq "
                 f"{self.scfg.max_seq_len}")
-        toks = np.zeros((b, max_len), np.int32)
-        for i, p in enumerate(prompts):           # right-align, pad-left
-            toks[i, max_len - lens[i]:] = p
-            toks[i, :max_len - lens[i]] = p[0]
-        batch = {"tokens": jnp.asarray(toks)}
+        if self.ragged_ok:
+            # right-pad with the real pad id; per-slot lengths mask the pads
+            toks = np.full((b, max_len), self.scfg.pad_id, np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, :lens[i]] = p
+            pos0 = jnp.asarray(lens, jnp.int32)
+            logits, cache = self._prefill({"tokens": jnp.asarray(toks)}, pos0)
+        else:
+            # recurrent state: uniform-length layout (left-fill with the
+            # first real token — positions stay exact, state stays causal)
+            toks = np.zeros((b, max_len), np.int32)
+            for i, p in enumerate(prompts):
+                toks[i, max_len - lens[i]:] = p
+                toks[i, :max_len - lens[i]] = p[0]
+            pos0 = jnp.full((b,), max_len, jnp.int32)
+            logits, cache = self._prefill({"tokens": jnp.asarray(toks)})
 
-        logits, cache = self._prefill(batch)
         key = jax.random.PRNGKey(self.scfg.seed)
         out = np.zeros((b, mnt), np.int32)
         done = np.zeros((b,), bool)
@@ -114,8 +183,7 @@ class ServeEngine:
             if t == mnt - 1:
                 break
             key, sub = jax.random.split(key)
-            pos = jnp.int32(max_len + t)
-            logits, cache = self._decode(next_tok, cache, pos)
+            logits, cache = self._decode(next_tok, cache, pos0 + t)
             next_tok = self._sample(logits, sub)
         return [GenerationResult(out[i, :steps], lens[i], steps)
                 for i in range(b)]
@@ -128,13 +196,13 @@ class ServeEngine:
         toks = jnp.asarray(np.stack(prompts))
         logits, cache = self._prefill({"tokens": toks})
         next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos0 = jnp.full((batch_size,), context_len, jnp.int32)
         # warmup + compile
-        lg, cache = self._decode(next_tok, cache, jnp.int32(context_len))
+        lg, cache = self._decode(next_tok, cache, pos0)
         lg.block_until_ready()
         t0 = time.perf_counter()
         for t in range(n_steps):
-            lg, cache = self._decode(next_tok, cache,
-                                     jnp.int32(context_len + 1 + t))
+            lg, cache = self._decode(next_tok, cache, pos0 + 1 + t)
         lg.block_until_ready()
         dt = time.perf_counter() - t0
         return batch_size * n_steps / dt

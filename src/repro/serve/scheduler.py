@@ -1,15 +1,20 @@
-"""Batched request scheduler.
+"""Request scheduler: continuous batching over the engine's slot arena.
 
-Groups pending requests into fixed-size generation batches (static shapes —
-one compiled decode HLO), FIFO with a length-bucketing heuristic: requests
-are sorted by prompt length inside the admission window so a batch pads to
-its own bucket, not the global max.  Each batch runs prefill → decode-until-
-done on the engine; finished results are delivered via per-request futures.
+Default mode ("continuous"): the batch axis is a SLOT ARENA.  Between decode
+steps the scheduler admits pending requests FIFO into empty slots — each
+admission is one single-request prefill plus one compiled splice
+(``engine.admit``, traced slot index), and the ragged decode step (per-row
+positions, per-slot lengths) keeps every resident sequence exact.  A request
+submitted mid-generation therefore joins the running batch within one decode
+step, a finished request's slot is recycled immediately, and the jitted
+decode HLO is compiled once and reused across all admissions — no
+recompiles, no cache compaction, no drain barrier.
 
-This is deliberately a *static* batcher (GPT-fast-style) rather than
-continuous batching: SALS's latent cache is a fixed-shape ring+arena per
-slot, so joining a running batch would need cache compaction; the scheduler
-instead keeps the engine busy with back-to-back full batches.
+"static" mode survives as the GPT-fast-style baseline (and the fallback for
+recurrent-state families, whose prefill cannot right-pad): fixed-size
+batches, length-bucketed FIFO, prefill → decode-until-drained per batch.
+
+Results are delivered on the ``Request`` objects in both modes.
 """
 from __future__ import annotations
 
@@ -17,6 +22,8 @@ import dataclasses
 import itertools
 from typing import Callable, Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import GenerationResult, ServeEngine
@@ -36,20 +43,142 @@ class Request:
         return self.result is not None
 
 
+@dataclasses.dataclass
+class _Slot:
+    """One resident sequence of the continuous batch."""
+    req: Request
+    out: List[int]                 # generated token ids so far
+
+
 class RequestScheduler:
-    def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None):
+    """``mode``: "continuous" (default, from ``engine.scfg.scheduler``) or
+    "static".  Recurrent-state families always run static (see engine).
+
+    ``admissions`` records (decode_step_index, slot, req_id) for every
+    admission — the observability hook the scheduler tests (join latency,
+    slot recycling, FIFO) assert against.
+    """
+
+    def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None,
+                 mode: Optional[str] = None):
         self.engine = engine
         self.max_batch = max_batch or engine.scfg.max_batch
+        mode = mode or engine.scfg.scheduler
+        if mode not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduler mode {mode!r}")
+        if not engine.ragged_ok:
+            mode = "static"        # recurrent state can't right-pad
+        self.mode = mode
         self.pending: List[Request] = []
         self.completed: Dict[int, Request] = {}
+        self.admissions: List[tuple] = []   # (step, slot, req_id)
+        self.steps: int = 0                 # decode steps executed
 
     def submit(self, req: Request) -> int:
+        if req.max_new_tokens < 1:
+            raise ValueError(f"req {req.req_id}: max_new_tokens must be >= 1 "
+                             "(prefill always emits the first token)")
+        if len(req.prompt) + req.max_new_tokens > self.engine.scfg.max_seq_len:
+            # reject HERE, not mid-run: an oversized request must not abort
+            # a running batch and strand its residents
+            raise ValueError(
+                f"req {req.req_id}: prompt {len(req.prompt)} + new "
+                f"{req.max_new_tokens} exceeds max_seq "
+                f"{self.engine.scfg.max_seq_len}")
         self.pending.append(req)
         return req.req_id
 
-    def run(self, on_batch: Optional[Callable[[List[Request]], None]] = None
+    # ------------------------------------------------------------------ run
+
+    def run(self, on_batch: Optional[Callable[[List[Request]], None]] = None,
+            on_step: Optional[Callable[["RequestScheduler", int], None]] = None
             ) -> List[Request]:
-        """Drain the queue; returns all completed requests in issue order."""
+        """Drain the queue; returns completed requests in completion order.
+
+        ``on_step`` (continuous mode) fires after every decode step — tests
+        and clients use it to submit requests mid-generation; they are
+        admitted before the NEXT decode step.  ``on_batch`` (static mode)
+        fires after each drained batch.
+        """
+        if self.mode == "static":
+            return self._run_static(on_batch)
+        return self._run_continuous(on_step)
+
+    # ------------------------------------------------------------ continuous
+
+    def _run_continuous(self, on_step) -> List[Request]:
+        eng = self.engine
+        if self.max_batch != eng.scfg.max_batch:
+            raise ValueError("continuous mode uses the engine's slot arena: "
+                             f"max_batch {self.max_batch} != "
+                             f"engine {eng.scfg.max_batch}")
+        b = self.max_batch
+        cache = eng.init_slot_cache()
+        slots: List[Optional[_Slot]] = [None] * b
+        tokens = np.zeros((b,), np.int32)
+        positions = np.zeros((b,), np.int32)
+        key = jax.random.PRNGKey(eng.scfg.seed)
+        issued: List[Request] = []
+
+        def finish(i: int):
+            slot = slots[i]
+            slot.req.result = GenerationResult(
+                np.asarray(slot.out, np.int32), len(slot.req.prompt),
+                len(slot.out))
+            self.completed[slot.req.req_id] = slot.req
+            issued.append(slot.req)
+            slots[i] = None        # recycled on the next admission sweep
+            tokens[i] = 0          # park the dead row at position 0: its
+            positions[i] = 0       # writes stay in-bounds and the slot row
+            #                        is fully overwritten at admission anyway
+
+        while self.pending or any(s is not None for s in slots):
+            # ---- admit FIFO into every empty slot -------------------------
+            for i in range(b):
+                if slots[i] is not None or not self.pending:
+                    continue
+                req = self.pending.pop(0)
+                logits1, cache1 = eng.prefill_one(req.prompt)
+                cache = eng.admit(cache, cache1, i)
+                key, sub = jax.random.split(key)
+                tok0 = int(np.asarray(eng._sample(logits1, sub))[0])
+                slots[i] = _Slot(req, out=[tok0])
+                tokens[i] = tok0
+                positions[i] = len(req.prompt)
+                self.admissions.append((self.steps, i, req.req_id))
+                if len(slots[i].out) >= req.max_new_tokens:
+                    finish(i)
+
+            if not any(s is not None for s in slots):
+                if not self.pending:
+                    break
+                continue
+
+            # ---- one ragged decode step for the whole arena ---------------
+            # (empty slots idle at position 0, harmlessly rewriting their
+            # own row's slot-0 cache line; the SAME compiled HLO serves
+            # every step and every admission pattern)
+            logits, cache = eng._decode(
+                jnp.asarray(tokens), cache, jnp.asarray(positions))
+            key, sub = jax.random.split(key)
+            new_toks = np.asarray(eng._sample(logits, sub))
+            self.steps += 1
+            for i in range(b):
+                if slots[i] is None:
+                    continue
+                slots[i].out.append(int(new_toks[i]))
+                tokens[i] = new_toks[i]
+                positions[i] += 1
+                if len(slots[i].out) >= slots[i].req.max_new_tokens:
+                    finish(i)
+            if on_step:
+                on_step(self, self.steps)
+        return issued
+
+    # ---------------------------------------------------------------- static
+
+    def _run_static(self, on_batch) -> List[Request]:
+        """GPT-fast-style: drain fixed batches back to back."""
         issued: List[Request] = []
         # length-bucket inside the admission window
         self.pending.sort(key=lambda r: len(r.prompt))

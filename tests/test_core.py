@@ -285,6 +285,101 @@ def test_cache_bytes_per_token_matches_nbytes_growth():
 
 
 # ---------------------------------------------------------------------------
+# slot arena lifecycle (continuous batching, ISSUE 3)
+# ---------------------------------------------------------------------------
+
+def _slot_sals():
+    return SALSConfig(rank_ratio=0.5, n_sink=2, n_recent=4, n_critical=8,
+                      v_bits=8, v_group=32, k_latent_dtype="int8")
+
+
+def _filled_cache(cfg, sals, n_layers=2, batch=3, max_seq=16, seed=11):
+    cache = lc.LatentKVCache.init(cfg, sals, n_layers, batch, max_seq,
+                                  jnp.float32)
+    # make every slot's bytes distinctive
+    return jax.tree.map(
+        lambda a: a + jnp.arange(a.shape[1], dtype=jnp.float32) \
+            .reshape((1, -1) + (1,) * (a.ndim - 2)).astype(a.dtype), cache)
+
+
+def test_prefill_into_slot_leaves_other_slots_byte_identical():
+    """free_slot + prefill_into_slot must only touch the target slot: every
+    other slot's latent / window / quantized regions stay BYTE-identical
+    (the invariant that makes admission into a running batch safe)."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    sals = _slot_sals()
+    cache = _filled_cache(cfg, sals)
+    one = lc.LatentKVCache.init(cfg, sals, 2, 1, 16, jnp.float32)
+    one = jax.tree.map(lambda a: a + 3, one)
+    out = cache.free_slot(jnp.int32(1)).prefill_into_slot(jnp.int32(1), one)
+    for (path, got), before, adm in zip(
+            jax.tree_util.tree_flatten_with_path(out)[0],
+            jax.tree.leaves(cache), jax.tree.leaves(one)):
+        name = jax.tree_util.keystr(path)
+        got, before = np.asarray(got), np.asarray(before)
+        np.testing.assert_array_equal(got[:, 0], before[:, 0], err_msg=name)
+        np.testing.assert_array_equal(got[:, 2], before[:, 2], err_msg=name)
+        # the target slot took the admitted request's bytes
+        np.testing.assert_array_equal(got[:, 1], np.asarray(adm)[:, 0],
+                                      err_msg=name)
+
+
+def test_free_slot_zeroes_only_target_slot():
+    cfg = get_config("qwen2-1.5b").reduced()
+    sals = _slot_sals()
+    cache = _filled_cache(cfg, sals)
+    freed = cache.free_slot(jnp.int32(2))
+    for (path, got), before in zip(
+            jax.tree_util.tree_flatten_with_path(freed)[0],
+            jax.tree.leaves(cache)):
+        name = jax.tree_util.keystr(path)
+        got, before = np.asarray(got), np.asarray(before)
+        np.testing.assert_array_equal(got[:, :2], before[:, :2], err_msg=name)
+        assert np.all(got[:, 2] == 0), name
+    assert np.all(np.asarray(freed.lengths)[:, 2] == 0)
+
+
+def test_slot_roundtrip_matches_direct_prefill():
+    """Admitting a single-sequence prefill into a freed slot reproduces the
+    bytes a whole-batch prefill would have put there."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    sals = _slot_sals()
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    u = pj.random_projector(KEY, kvd, r)["u"]
+    b, s, max_seq = 3, 12, 16
+    k_pre = jax.random.normal(KEY, (b, s, cfg.n_kv_heads, cfg.head_dim))
+    v = jax.random.normal(jax.random.fold_in(KEY, 5), k_pre.shape)
+    full = lc.LatentKVCache.prefill_layer(cfg, sals, u, k_pre, v, max_seq,
+                                          jnp.float32)
+    one = lc.LatentKVCache.prefill_layer(cfg, sals, u, k_pre[1:2], v[1:2],
+                                         max_seq, jnp.float32)
+    rebuilt = full.free_slot(jnp.int32(1)).prefill_into_slot(jnp.int32(1),
+                                                             one)
+    for a, bb in zip(jax.tree.leaves(rebuilt), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_bytes_per_token_unchanged_by_per_slot_lengths():
+    """``lengths`` is slot bookkeeping, not token storage: bytes_per_token
+    (and the derived cache_bytes_per_token) must not count it."""
+    cfg = get_config("yi-9b").reduced()
+    for sals in (SALSConfig(rank_ratio=0.25, v_bits=8, v_group=32),
+                 SALSConfig(rank_ratio=0.25, v_bits=8, v_group=32,
+                            k_latent_dtype="int8")):
+        with_l = lc.LatentKVCache.init(cfg, sals, 1, 2, 64)
+        without = with_l.replace(lengths=None)
+        assert with_l.bytes_per_token == without.bytes_per_token
+        # and the eval_shape-derived bookkeeping still matches nbytes growth
+        per_tok = sum(
+            np.prod(getattr(with_l, f).shape) *
+            jnp.dtype(getattr(with_l, f).dtype).itemsize
+            for f in ("k_lat", "k_scale", "v_q", "v_scale", "v_zero")
+            if getattr(with_l, f) is not None) / (2 * 64)
+        assert lc.cache_bytes_per_token(cfg, sals) == per_tok
+
+
+# ---------------------------------------------------------------------------
 # overlap score (paper §3.2)
 # ---------------------------------------------------------------------------
 

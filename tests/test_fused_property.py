@@ -1,7 +1,10 @@
 """Property tests: the fused Pallas decode path and the index-taking jnp
 oracle must agree on the MERGED attention output for arbitrary shapes,
-dtypes, and validity patterns (ISSUE 1 acceptance).  Runs under the
-``hypothesis`` dev extra; skips cleanly when it is absent."""
+dtypes, and validity patterns (ISSUE 1 acceptance), and the RAGGED layout
+(per-row decode positions, ISSUE 3) must be bit-identical to independent
+single-sequence decodes.  Runs under the ``hypothesis`` dev extra; skips
+cleanly when it is absent (tests/test_kernels.py carries an always-running
+deterministic ragged-parity sweep)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -112,3 +115,55 @@ def test_grouped_dispatch_backends_agree(seed, g, k_int8, pos_v):
     assert np.array_equal(sel_out["pallas"][1], sel_out["xla"][1])
     np.testing.assert_allclose(_merged(*out["pallas"]), _merged(*out["xla"]),
                                rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.lists(st.integers(5, 158), min_size=2, max_size=5),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_ragged_rows_bit_identical_to_single_decodes(seed, pos_rows, k_int8):
+    """ISSUE 3 tentpole pin: a batched RAGGED decode (per-row (B,) positions
+    through the fused kernels) must produce, row for row, EXACTLY the bits
+    of B independent single-sequence decodes at those positions — selection
+    indices, validity, and the (m, l, o) flash partials alike.  This is the
+    invariant that makes continuous batching exact: joining a running batch
+    cannot perturb any resident sequence."""
+    b = len(pos_rows)
+    n_kv, dh, group = 2, 32, 2
+    h = n_kv * group
+    s, r, r_star, nc, vg = 160, 16, 8, 24, 16
+    kvd = n_kv * dh
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    q_lat = jax.random.normal(ks[4], (b, r_star))
+    pos = jnp.asarray(pos_rows, jnp.int32)
+
+    idx, valid = ops.latent_topk(q_lat, k_lat, k_scale, pos, n_critical=nc,
+                                 n_sink=2, n_recent=8, backend="pallas")
+    m, l, o = ops.sparse_recon_attention(
+        q, k_lat, k_scale, vq["q"], vq["scale"], vq["zero"], u, idx, valid,
+        pos, n_kv=n_kv, v_bits=8, v_group=vg, backend="pallas")
+
+    for i in range(b):
+        sl = slice(i, i + 1)
+        ks_i = None if k_scale is None else k_scale[sl]
+        i1, v1 = ops.latent_topk(q_lat[sl], k_lat[sl], ks_i,
+                                 jnp.int32(pos_rows[i]), n_critical=nc,
+                                 n_sink=2, n_recent=8, backend="pallas")
+        m1, l1, o1 = ops.sparse_recon_attention(
+            q[sl], k_lat[sl], ks_i, vq["q"][sl], vq["scale"][sl],
+            vq["zero"][sl], u, i1, v1, jnp.int32(pos_rows[i]), n_kv=n_kv,
+            v_bits=8, v_group=vg, backend="pallas")
+        assert np.array_equal(np.asarray(idx[i]), np.asarray(i1[0]))
+        assert np.array_equal(np.asarray(valid[i]), np.asarray(v1[0]))
+        assert np.array_equal(np.asarray(m[i]), np.asarray(m1[0]))
+        assert np.array_equal(np.asarray(l[i]), np.asarray(l1[0]))
+        assert np.array_equal(np.asarray(o[i]), np.asarray(o1[0]))

@@ -396,6 +396,59 @@ def test_fused_path_materializes_no_cache_scale_buffers():
     assert not offenders, offenders
 
 
+@pytest.mark.parametrize("seed,pos_rows", [
+    (0, [159, 30, 7]),       # full / mid / almost-nothing-selectable
+    (1, [15, 100]),          # below + above the sink+recent floor
+    (2, [64, 64, 64, 64]),   # degenerate: uniform vector == scalar path
+])
+@pytest.mark.parametrize("k_int8", [False, True])
+def test_ragged_rows_bit_identical_to_single_decodes(seed, pos_rows, k_int8):
+    """Deterministic (hypothesis-free) ragged bit-parity: batched decode
+    with heterogeneous per-row positions == B independent single-sequence
+    decodes, bit-for-bit, through both fused kernels AND the jnp oracle."""
+    b = len(pos_rows)
+    n_kv, dh, group = 2, 32, 2
+    h = n_kv * group
+    s, r, r_star, nc, vg = 160, 16, 8, 24, 16
+    kvd = n_kv * dh
+    ks = jax.random.split(jax.random.fold_in(KEY, 31 + seed), 5)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    q_lat = jax.random.normal(ks[4], (b, r_star))
+    pos = jnp.asarray(pos_rows, jnp.int32)
+
+    for backend in ("pallas", "xla"):
+        idx, valid = ops.latent_topk(q_lat, k_lat, k_scale, pos,
+                                     n_critical=nc, n_sink=2, n_recent=8,
+                                     backend=backend)
+        m, l, o = ops.sparse_recon_attention(
+            q, k_lat, k_scale, vq["q"], vq["scale"], vq["zero"], u, idx,
+            valid, pos, n_kv=n_kv, v_bits=8, v_group=vg, backend=backend)
+        for i in range(b):
+            sl = slice(i, i + 1)
+            ks_i = None if k_scale is None else k_scale[sl]
+            i1, v1 = ops.latent_topk(q_lat[sl], k_lat[sl], ks_i,
+                                     jnp.int32(pos_rows[i]), n_critical=nc,
+                                     n_sink=2, n_recent=8, backend=backend)
+            m1, l1, o1 = ops.sparse_recon_attention(
+                q[sl], k_lat[sl], ks_i, vq["q"][sl], vq["scale"][sl],
+                vq["zero"][sl], u, i1, v1, jnp.int32(pos_rows[i]),
+                n_kv=n_kv, v_bits=8, v_group=vg, backend=backend)
+            assert np.array_equal(np.asarray(idx[i]), np.asarray(i1[0])), \
+                (backend, i)
+            assert np.array_equal(np.asarray(valid[i]), np.asarray(v1[0]))
+            assert np.array_equal(np.asarray(m[i]), np.asarray(m1[0]))
+            assert np.array_equal(np.asarray(l[i]), np.asarray(l1[0]))
+            assert np.array_equal(np.asarray(o[i]), np.asarray(o1[0]))
+
+
 def test_grouped_fused_path_materializes_no_dense_buffers():
     """ISSUE 2: the GROUPED (n_groups > 1) hot path must uphold the same
     invariant — no dense (B,S,r) dequant pass, no slice/pad copy, no XLA
@@ -453,4 +506,39 @@ def test_grouped_fused_path_materializes_no_dense_buffers():
             if eqn.primitive.name == "reshape" and size in in_sizes:
                 continue                     # metadata-only group fold
             offenders.append((eqn.primitive.name, ov.aval.shape))
+    assert not offenders, offenders
+
+
+def test_ragged_fused_path_materializes_no_cache_scale_buffers():
+    """ISSUE 3: vector (B,) decode positions must not silently reintroduce
+    the dense gather/dequant buffers — the ragged hot path upholds the same
+    jaxpr no-dense-copy invariant as the scalar one."""
+    b, s, r, r_star, n_kv, dh, h, nc, vg = 3, 512, 32, 16, 2, 64, 4, 64, 32
+    kvd = n_kv * dh
+    args = _fused_inputs(b, h, n_kv, dh, s, r, nc, k_int8=True, v_bits=8,
+                         v_group=vg, seed=13)
+    q, k_lat, k_scale, v_q, v_scale, v_zero, u = args[:7]
+    q_lat = jax.random.normal(KEY, (b, r_star))
+    pos = jnp.array([511, 200, 37], jnp.int32)          # ragged positions
+
+    def fused_pipeline(q, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                       pos):
+        idx, valid = ops.latent_topk(q_lat, k_lat, k_scale, pos,
+                                     n_critical=nc, n_sink=4, n_recent=16,
+                                     backend="pallas")
+        return ops.sparse_recon_attention(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+            n_kv=n_kv, v_bits=8, v_group=vg, backend="pallas")
+
+    jaxpr = jax.make_jaxpr(fused_pipeline)(q, q_lat, k_lat, k_scale, v_q,
+                                           v_scale, v_zero, u, pos)
+    limit = min(b * s * r_star,              # old score slice/pad copy
+                b * s * r,                   # old dense dequant pass
+                b * nc * kvd)                # old gathered value buffer
+    offenders = []
+    for eqn in _walk_eqns(jaxpr.jaxpr, []):
+        for ov in eqn.outvars:
+            size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if size >= limit:
+                offenders.append((eqn.primitive.name, ov.aval.shape))
     assert not offenders, offenders

@@ -24,6 +24,7 @@ def run_sub(body: str, devices: int = 4, timeout: int = 900) -> str:
 
 def test_gpipe_matches_reference_loss_and_grads():
     out = run_sub("""
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.configs import get_config
         from repro.data import SyntheticCorpus
@@ -85,11 +86,11 @@ def test_gpipe_matches_reference_loss_and_grads():
             staged = jax.tree.map(
                 lambda a: a.reshape(n_stages, a.shape[0] // n_stages,
                                     *a.shape[1:]), blocks)
-            f = jax.shard_map(
+            f = shard_map(
                 pl, mesh=mesh,
                 in_specs=(P("pipe"), P(), P()),
                 out_specs=P(),
-                check_vma=False)
+                check_rep=False)
             return f(staged, io_params, batch)
 
         val, grads = jax.value_and_grad(pipelined, argnums=(0, 1))(

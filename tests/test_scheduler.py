@@ -1,0 +1,222 @@
+"""Continuous-batching scheduler behavior (ISSUE 3 acceptance).
+
+A small untrained-but-deterministic model is enough: every test asserts
+scheduling semantics (join latency, slot recycling, FIFO, starvation,
+compile-once) or exactness (continuous == static tokens; pad tokens never
+selected), none asserts model quality.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.core import selection as sel
+from repro.models import transformer as tf
+from repro.serve import Request, RequestScheduler, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _engine(model, use_sals=True, max_batch=3, max_new=8):
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=max_new,
+                       max_batch=max_batch,
+                       sals=sals if use_sals else SALSConfig(enabled=False))
+    return ServeEngine(params, proj if use_sals else None, cfg, scfg)
+
+
+def _prompts(n, lo=6, hi=30, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 128, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+@pytest.mark.parametrize("use_sals", [False, True])
+def test_continuous_matches_static_token_exact(model, use_sals):
+    """The whole point of ragged positions: a request decoded inside a
+    continuous batch (arbitrary co-residents, recycled slots) produces the
+    SAME tokens as under the drain-everything static batcher."""
+    prompts = _prompts(7, seed=3)
+    eng = _engine(model, use_sals)
+    reqs_c = [Request(p, max_new_tokens=4 + i % 3)
+              for i, p in enumerate(prompts)]
+    sc = RequestScheduler(eng, mode="continuous")
+    for r in reqs_c:
+        sc.submit(r)
+    sc.run()
+    reqs_s = [Request(p, max_new_tokens=4 + i % 3)
+              for i, p in enumerate(prompts)]
+    ss = RequestScheduler(eng, mode="static")
+    for r in reqs_s:
+        ss.submit(r)
+    ss.run()
+    for rc, rs in zip(reqs_c, reqs_s):
+        assert rc.done and rs.done
+        assert len(rc.result.tokens) == rc.max_new_tokens
+        np.testing.assert_array_equal(rc.result.tokens, rs.result.tokens)
+
+
+def test_midstream_submit_joins_within_one_step(model):
+    """A request submitted while the batch is generating must be admitted
+    before the NEXT decode step — no drain barrier."""
+    eng = _engine(model, use_sals=True, max_batch=3, max_new=12)
+    sched = RequestScheduler(eng, mode="continuous")
+    first = [Request(p, max_new_tokens=10) for p in _prompts(2, seed=1)]
+    for r in first:
+        sched.submit(r)
+    late = Request(_prompts(1, seed=9)[0], max_new_tokens=4)
+    submitted_at = {}
+
+    def on_step(s, step):
+        if step == 3 and not submitted_at:
+            submitted_at["step"] = step
+            s.submit(late)
+
+    done = sched.run(on_step=on_step)
+    assert late.done and len(done) == 3
+    late_admission = [a for a in sched.admissions
+                      if a[2] == late.req_id]
+    assert len(late_admission) == 1
+    admit_step = late_admission[0][0]
+    # admitted into the free slot before the step right after submission
+    assert admit_step == submitted_at["step"]
+    # and it genuinely overlapped the first requests' generation
+    assert not all(r.done for r in first) or admit_step < 10
+
+
+def test_finished_slots_are_recycled(model):
+    """More requests than slots: every slot index is reused, and the arena
+    never exceeds max_batch residents."""
+    eng = _engine(model, use_sals=False, max_batch=2, max_new=4)
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs = [Request(p, max_new_tokens=3) for p in _prompts(6, seed=5)]
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 6 and all(r.done for r in reqs)
+    slots_used = [a[1] for a in sched.admissions]
+    assert set(slots_used) == {0, 1}
+    assert len(slots_used) == 6               # every admission logged
+    # each slot admitted 3 requests back to back -> recycling, not growth
+    assert slots_used.count(0) + slots_used.count(1) == 6
+
+
+def test_fifo_admission_order_under_mixed_budgets(model):
+    """Heterogeneous max_new_tokens must not reorder ADMISSION: requests
+    enter the arena strictly in submission order."""
+    eng = _engine(model, use_sals=False, max_batch=2, max_new=16)
+    sched = RequestScheduler(eng, mode="continuous")
+    budgets = [9, 2, 14, 3, 5, 2]
+    reqs = [Request(p, max_new_tokens=m)
+            for p, m in zip(_prompts(6, seed=7), budgets)]
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 6
+    admitted_ids = [a[2] for a in sched.admissions]
+    assert admitted_ids == [r.req_id for r in reqs]     # strict FIFO
+    for r, m in zip(reqs, budgets):
+        assert len(r.result.tokens) == m
+
+
+def test_no_starvation_three_wave_workload(model):
+    """3 waves of submissions arriving mid-generation: every request from
+    every wave completes with its full budget (nobody starves behind the
+    long-running residents)."""
+    eng = _engine(model, use_sals=True, max_batch=3, max_new=16)
+    sched = RequestScheduler(eng, mode="continuous")
+    waves = [[Request(p, max_new_tokens=6 + i)
+              for i, p in enumerate(_prompts(3, seed=20 + w))]
+             for w in range(3)]
+    for r in waves[0]:
+        sched.submit(r)
+    fired = set()
+
+    def on_step(s, step):
+        for w, trigger in ((1, 2), (2, 5)):
+            if step >= trigger and w not in fired:
+                fired.add(w)
+                for r in waves[w]:
+                    s.submit(r)
+
+    done = sched.run(on_step=on_step)
+    assert len(done) == 9
+    for wave in waves:
+        for r in wave:
+            assert r.done and len(r.result.tokens) == r.max_new_tokens
+    # all three waves were admitted (not just the first batchful)
+    assert len(sched.admissions) == 9
+
+
+def test_decode_hlo_compiled_once_across_admissions(model):
+    """ISSUE 3 acceptance: joining a running batch must NOT recompile — the
+    jitted ragged decode step (and the slot-splice) each trace exactly one
+    HLO across all admissions, slot recycles, and waves."""
+    eng = _engine(model, use_sals=True, max_batch=2, max_new=8)
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs = [Request(p, max_new_tokens=3 + i % 4)
+            for i, p in enumerate(_prompts(5, seed=13))]
+    for r in reqs[:2]:
+        sched.submit(r)
+
+    def on_step(s, step):
+        if step == 2 and len(s.admissions) == 2:
+            for r in reqs[2:]:
+                s.submit(r)
+
+    done = sched.run(on_step=on_step)
+    assert len(done) == 5
+    assert len({a[0] for a in sched.admissions}) > 1    # staggered admits
+    assert eng._decode._cache_size() == 1
+    assert eng._admit._cache_size() == 1
+
+
+def test_pad_tokens_never_selected_by_topk(model):
+    """Regression for the left-pad-with-first-token hack: prompts are now
+    RIGHT-padded with scfg.pad_id and masked via per-slot lengths — the
+    latent top-k over a ragged prefilled cache must never select a pad
+    position, and ragged generate must agree with per-request generate."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=4, max_batch=4,
+                       sals=sals, pad_id=0)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    prompts = _prompts(3, lo=8, hi=40, seed=42)
+    lens = [len(p) for p in prompts]
+
+    # ragged batched generate == per-request generate (no pad leakage)
+    batched = eng.generate(prompts, max_new_tokens=4)
+    for i, p in enumerate(prompts):
+        alone = eng.generate([p], max_new_tokens=4)[0]
+        np.testing.assert_array_equal(batched[i].tokens, alone.tokens)
+
+    # and directly: top-k over the ragged prefilled cache stays < length
+    toks = np.zeros((len(prompts), max(lens)), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :lens[i]] = p
+    _, cache = tf.prefill(params, proj, cfg, sals, {"tokens": jnp.asarray(toks)},
+                          scfg.max_seq_len, lengths=jnp.asarray(lens))
+    layer = cache["seg1"].layer_view(0)
+    np.testing.assert_array_equal(np.asarray(layer.lengths), lens)
+    q_bar = jax.random.normal(KEY, (len(prompts), cfg.kv_dim))
+    u = proj["u"][1]
+    pos = jnp.asarray(lens, jnp.int32)          # first decode position
+    idx, valid = sel.topk_latent(q_bar, u, layer.k_lat, layer.k_scale, pos,
+                                 sals, sals.score_rank(cfg.kv_dim))
+    idx, valid = np.asarray(idx), np.asarray(valid)
+    for i, li in enumerate(lens):
+        chosen = idx[i][valid[i]]
+        assert chosen.size == 0 or chosen.max() < li, (i, li, chosen)
