@@ -25,7 +25,8 @@ from repro.core.sparse_attention import sals_decode_attend
 from repro.models import attention as attn
 from repro.models import transformer as tf
 from benchmarks import common
-from benchmarks.memory_access import decode_stage_bytes, traffic_ratio
+from benchmarks.memory_access import (decode_stage_bytes, prefill_chunk_bytes,
+                                      traffic_ratio)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
 
@@ -117,6 +118,24 @@ def traffic_model_rows():
     return rows
 
 
+def prefill_traffic_rows():
+    """ISSUE 4 ledger: modeled HBM bytes of ONE chunked-prefill step per
+    layer (full vs SALS layers, incl. the prompt-lifetime scratch term) at
+    representative chunk offsets — both the fixed-shape-HLO streamed bytes
+    and the live (length-bounded-kernel) bytes."""
+    cfg = get_config("paper-llama2-7b")
+    sals = SALSConfig(rank_ratio=0.25, v_bits=8, n_critical=512,
+                      n_sink=16, n_recent=64, v_group=64)
+    max_seq = 32768
+    rows = []
+    for chunk in (256, 512):
+        for s in (0, 4096, 32768):
+            m = prefill_chunk_bytes(cfg, sals, chunk, s, max_seq)
+            rows.append({"model": "paper-llama2-7b", "chunk": chunk,
+                         "cache_so_far": s, "max_seq": max_seq, **m})
+    return rows
+
+
 def run() -> list:
     cpu_rows = measured_rows()
     v5e_rows = projected_rows()
@@ -132,6 +151,13 @@ def run() -> list:
           r["selected_ratio"], r["total_ratio"]) for r in model_rows],
         ["seq", "k_lat", "score_old_B", "score_new_B", "score_x",
          "sel_old_B", "sel_new_B", "sel_x", "total_x"])
+    prefill_rows = prefill_traffic_rows()
+    common.emit(
+        [(r["chunk"], r["cache_so_far"], r["full_layer_bytes_streamed"],
+          r["full_layer_bytes_live"], r["sals_layer_bytes_streamed"],
+          r["sals_compressed_write_bytes"]) for r in prefill_rows],
+        ["chunk", "cache_so_far", "full_streamed_B", "full_live_B",
+         "sals_streamed_B", "sals_write_B"])
     cols = ["table", "batch", "seq", "full_us", "sals_us", "speedup"]
     payload = {
         "bench": "attention",
@@ -139,6 +165,7 @@ def run() -> list:
         "measured_cpu": [dict(zip(cols, r)) for r in cpu_rows],
         "projected_v5e": [dict(zip(cols, r)) for r in v5e_rows],
         "traffic_model": model_rows,
+        "prefill_traffic_model": prefill_rows,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")

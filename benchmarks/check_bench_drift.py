@@ -1,0 +1,70 @@
+"""CI drift check: the MODELED sections of the committed BENCH_attention.json
+must match what the traffic model in benchmarks/memory_access.py computes
+TODAY.
+
+The ledger in ROADMAP.md and the perf story in the benchmarks both quote
+numbers out of BENCH_attention.json; if someone edits the byte model (or
+the cache layout it derives from — LatentKVCache field shapes/dtypes feed
+``cache_bytes_per_token``) without re-running ``benchmarks/attention_latency.py``,
+the committed file silently lies.  This script recomputes the pure-model
+sections ("traffic_model", "prefill_traffic_model" — NOT the wall-clock
+"measured_cpu" rows, which legitimately vary per machine) and exits
+non-zero on any mismatch.
+
+    PYTHONPATH=src python -m benchmarks.check_bench_drift     # repo root
+
+Fix a failure by re-running ``PYTHONPATH=src python -m
+benchmarks.attention_latency`` (module form — the benchmarks package needs
+the repo root on sys.path) and committing the refreshed BENCH_attention.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.attention_latency import (BENCH_JSON, prefill_traffic_rows,
+                                          traffic_model_rows)
+
+MODELED_SECTIONS = {
+    "traffic_model": traffic_model_rows,
+    "prefill_traffic_model": prefill_traffic_rows,
+}
+
+
+def _normalize(rows):
+    # round-trip through JSON so committed ints/floats compare like for like
+    return json.loads(json.dumps(rows))
+
+
+def main() -> int:
+    if not BENCH_JSON.exists():
+        print(f"DRIFT: {BENCH_JSON} is missing — run "
+              "'PYTHONPATH=src python -m benchmarks.attention_latency' "
+              "and commit it")
+        return 1
+    committed = json.loads(BENCH_JSON.read_text())
+    bad = False
+    for section, compute in MODELED_SECTIONS.items():
+        want = _normalize(compute())
+        got = committed.get(section)
+        if got != want:
+            bad = True
+            print(f"DRIFT: BENCH_attention.json[{section!r}] no longer "
+                  "matches benchmarks/memory_access.py")
+            for i, (w, g) in enumerate(zip(want, got or [])):
+                if w != g:
+                    print(f"  row {i}:\n    model now: {w}\n    committed: {g}")
+            if got is not None and len(got) != len(want):
+                print(f"  row count: model now {len(want)}, "
+                      f"committed {len(got)}")
+        else:
+            print(f"ok: {section} ({len(want)} rows)")
+    if bad:
+        print("re-run: PYTHONPATH=src python -m benchmarks.attention_latency")
+        return 1
+    print("BENCH_attention.json modeled sections are in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,6 +108,46 @@ def decode_stage_bytes(cfg, sals: SALSConfig, s: int, fused: bool) -> dict:
     }
 
 
+def prefill_chunk_bytes(cfg, sals: SALSConfig, chunk: int, s: int,
+                        max_seq: int) -> dict:
+    """Modeled HBM bytes for ONE chunked-prefill step per layer at chunk
+    offset ``s`` (cache-so-far length), in a ``max_seq``-slot cache.
+
+    The ONE-HLO design trades history-read bytes for zero recompiles: the
+    chunk-vs-cache attend runs at a fixed shape, streaming the FULL
+    (max_seq)-row K/V buffer every chunk with positions >= off merely
+    masked — so ``*_streamed`` terms (what the current HLO actually moves)
+    carry 2·max_seq·kvd regardless of ``s``, while ``*_live`` terms count
+    only the useful 2·s·kvd history (what a length-bounded flash kernel
+    would read; see the ROADMAP open item).  Both layers append the chunk
+    (2·C·kvd write); SALS layers additionally pay the PROMPT-LIFETIME-ONLY
+    full-precision scratch plus the incremental compressed writes: C latent
+    rows, C quantized value rows, and the ring/sink inserts.  Activations
+    are (B, C, d) per layer instead of the monolithic (B, S_prompt, d) —
+    the chunk width, not the prompt length, bounds them.
+    """
+    from repro.core import quantization as qz
+    kvd = cfg.kv_dim
+    r = sals.rank(kvd)
+    int8 = sals.k_latent_dtype == "int8"
+    lat_b = 1 if int8 else 2
+    scale_b = 2 if int8 else 0
+    v_tok = qz.bytes_per_token(kvd, sals.v_bits, sals.v_group)  # code + meta
+    hist_streamed = 2 * max_seq * kvd * 2        # fixed-shape HLO K+V read
+    hist_live = 2 * s * kvd * 2                  # useful history bytes
+    append = 2 * chunk * kvd * 2                 # chunk K/V append
+    sals_writes = chunk * (r * lat_b + scale_b + v_tok) \
+        + min(chunk, sals.n_recent + sals.n_sink) * 2 * kvd * 2
+    return {
+        "full_layer_bytes_streamed": hist_streamed + append,
+        "full_layer_bytes_live": hist_live + append,
+        "sals_layer_bytes_streamed": hist_streamed + append + sals_writes,
+        "sals_layer_bytes_live": hist_live + append + sals_writes,
+        "sals_compressed_write_bytes": sals_writes,
+        "scratch_resident_bytes_per_token": 2 * kvd * 2,   # prefill-only
+    }
+
+
 def accuracy_proxy():
     """Next-token agreement + logit MSE of SALS vs full on a trained model."""
     cfg, params, corpus = common.trained_model()

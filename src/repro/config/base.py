@@ -307,7 +307,17 @@ class ServeConfig:
                      lengths, ragged per-row decode positions)
       "static"     — GPT-fast-style: fixed batches run prefill→drain
     ``pad_id`` right-pads ragged prompts (masked via per-slot lengths —
-    pad tokens are never selectable nor attended)."""
+    pad tokens are never selectable nor attended).
+
+    ``prefill_chunk`` is the fixed chunk width of the chunked prefill path:
+    admission prefill runs as a loop over ONE compiled chunk HLO (the chunk
+    offset is a traced scalar), so prompts of any length share one trace and
+    peak activation memory is (1, chunk, d) instead of (1, S_prompt, d).
+    ``max_seq_len`` must be a multiple of it (attention families).
+    ``prefill_token_budget`` bounds how many prefill tokens the continuous
+    scheduler spends between consecutive decode steps — resident sequences
+    never stall longer than ~budget (rounded down to whole chunks, minimum
+    one chunk) regardless of arriving prompt length."""
 
     max_seq_len: int = 4096
     max_batch: int = 8
@@ -317,7 +327,8 @@ class ServeConfig:
     seed: int = 0
     pad_id: int = 0
     scheduler: str = "continuous"     # continuous | static
-    prompt_bucket: int = 32           # single-request prefill pad granularity
+    prefill_chunk: int = 32           # chunked-prefill step width (tokens)
+    prefill_token_budget: int = 256   # prefill tokens between decode steps
 
 
 def asdict(cfg) -> dict:

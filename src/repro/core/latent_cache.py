@@ -276,6 +276,80 @@ class LatentKVCache:
             out["lengths"] = jnp.maximum(self.lengths, pos_v + 1)
         return self.replace(**out)
 
+    def append_chunk(self, cfg: ModelConfig, sals: SALSConfig,
+                     u: jnp.ndarray, off, k_pre: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray) -> "LatentKVCache":
+        """Append one CHUNK of prompt tokens at positions [off, off+C).
+
+        The chunked-prefill write path (single-layer view): ``k_pre``/``v``
+        are (B, C, n_kv, dh) pre-RoPE keys / values of the chunk, ``off`` is
+        a traced scalar (chunks land at the same offset for every row — the
+        ragged batch is right-padded), and ``lengths`` (B,) holds each
+        row's TRUE prompt length.
+
+        Latent-K + quantized-V writes cover every chunk position, pad
+        positions included — byte parity with :meth:`prefill_layer`, and the
+        per-slot lengths keep pads forever unselectable.  Ring/sink inserts
+        are masked to each row's REAL positions: an unmasked pad write at
+        position p >= lengths[b] could evict a real token from ring slot
+        p % n_recent.  Per-slot ``lengths`` advance to min(lengths, off+C).
+        """
+        b, c = k_pre.shape[:2]
+        kvd = cfg.kv_dim
+        len_v = jnp.asarray(lengths, jnp.int32)
+        lat = to_latent(u.astype(jnp.float32), k_pre.reshape(b, c, kvd))
+        vq = qz.quantize(v.reshape(b, c, kvd), sals.v_bits, sals.v_group)
+
+        def put(arr, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                arr, val.astype(arr.dtype), off, axis=1)
+
+        out = {}
+        if sals.k_latent_dtype == "int8":
+            q8, scale = qz.quantize_latent_int8(lat)
+            out["k_lat"] = put(self.k_lat, q8)
+            out["k_scale"] = put(self.k_scale, scale)
+        else:
+            out["k_lat"] = put(self.k_lat, lat)
+        out["v_q"] = put(self.v_q, vq["q"])
+        out["v_scale"] = put(self.v_scale, vq["scale"])
+        out["v_zero"] = put(self.v_zero, vq["zero"])
+
+        # ragged ring: slot j receives the LAST real chunk position p ≡ j
+        # (mod w); p outside [off, min(len, off+C)) leaves the slot alone
+        # (earlier chunks' tokens stay resident until genuinely evicted)
+        w = sals.n_recent
+        last = jnp.minimum(len_v, off + c)[:, None] - 1          # (B, 1)
+        p = last - (last - jnp.arange(w)[None, :]) % w           # (B, w)
+        ring_ok = (p >= off) & (len_v[:, None] > off)
+        pc = jnp.clip(p - off, 0, c - 1)[..., None, None]
+        rk = jnp.take_along_axis(k_pre, pc, axis=1)
+        rv = jnp.take_along_axis(v, pc, axis=1)
+        keep = ring_ok[..., None, None]
+        out["recent_k"] = jnp.where(keep, rk.astype(self.recent_k.dtype),
+                                    self.recent_k)
+        out["recent_v"] = jnp.where(keep, rv.astype(self.recent_v.dtype),
+                                    self.recent_v)
+
+        # ragged sink: positions [off, off+C) ∩ [0, n_sink) ∩ [0, len)
+        ns = sals.n_sink
+        sidx = jnp.arange(ns)[None, :]                           # (1, ns)
+        sink_ok = (sidx >= off) & (sidx < off + c) \
+            & (sidx < len_v[:, None])
+        spc = jnp.broadcast_to(jnp.clip(sidx - off, 0, c - 1),
+                               (b, ns))[..., None, None]
+        sk = jnp.take_along_axis(k_pre, spc, axis=1)
+        sv = jnp.take_along_axis(v, spc, axis=1)
+        keep_s = sink_ok[..., None, None]
+        out["sink_k"] = jnp.where(keep_s, sk.astype(self.sink_k.dtype),
+                                  self.sink_k)
+        out["sink_v"] = jnp.where(keep_s, sv.astype(self.sink_v.dtype),
+                                  self.sink_v)
+
+        if self.lengths is not None:
+            out["lengths"] = jnp.minimum(len_v, off + c)
+        return self.replace(**out)
+
     def write_ring(self, sals: SALSConfig, pos, k_pre: jnp.ndarray,
                    v: jnp.ndarray) -> "LatentKVCache":
         """Insert one token into the full-precision recent ring (and the

@@ -86,6 +86,14 @@ def main() -> None:
                          "lengths, ragged positions); static = GPT-fast-"
                          "style fixed batches (also the automatic fallback "
                          "for recurrent-state families)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill step width: admission prefill "
+                         "loops ONE compiled (1, chunk) HLO with a traced "
+                         "offset — max-seq must be a multiple of it")
+    ap.add_argument("--prefill-budget", type=int, default=256,
+                    help="prefill tokens the continuous scheduler spends "
+                         "between decode steps (bounds resident inter-token "
+                         "latency while long prompts are admitted)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -124,6 +132,8 @@ def main() -> None:
                        max_new_tokens=args.max_new_tokens,
                        temperature=args.temperature,
                        scheduler=args.scheduler,
+                       prefill_chunk=args.prefill_chunk,
+                       prefill_token_budget=args.prefill_budget,
                        sals=sals or SALSConfig(enabled=False))
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility

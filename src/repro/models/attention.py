@@ -7,6 +7,11 @@ Three execution paths share one parameter set:
                          the encoder family.
   * ``attend_prefill`` — same math as train, but also returns the pre-RoPE
                          K and the V tensors so the caller can build caches.
+  * ``attend_prefill_chunk`` — one fixed-width chunk of prompt tokens vs the
+                         cache-so-far (chunked prefill): a cache partial over
+                         previously-written positions and an intra-chunk
+                         causal partial, LSE-merged flash-style, then the
+                         chunk's K/V appended at a traced offset.
   * ``attend_decode_full`` — one-token decode against a *full-precision*
                          KV cache (post-RoPE keys, standard layout).  Used
                          for the SALS skip-layers (0, 1, last) and for the
@@ -185,6 +190,115 @@ def attend_prefill(params: dict, x: jnp.ndarray, cfg: ModelConfig,
                             prefix_len=prefix_len)
     y = out_proj(params, o, cfg)
     return y, k_pre, v
+
+
+def _chunk_partial(logits: jnp.ndarray, v: jnp.ndarray, cfg: ModelConfig
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Flash-style partial softmax stats for a CHUNK of queries.
+
+    logits: (B, H, C, N) f32 (already scaled/softcapped/masked with NEG_INF);
+    v: (B, N, Hkv, dh) UNEXPANDED kv heads — the GQA value contraction splits
+    H into (Hkv, group) instead of materializing repeat_kv'd values.
+    Returns (m (B,H,C), l (B,H,C), o (B,H,C,dh)) with o = Σ exp(x-m)·v —
+    fully-masked query rows yield l=0 (the merge's denominator guard keeps
+    them NaN-free).
+    """
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    b, h, c, n = logits.shape
+    p_g = p.reshape(b, cfg.n_kv_heads, cfg.group_size, c, n)
+    o = jnp.einsum("bkrcn,bnkd->bkrcd", p_g, v.astype(jnp.float32))
+    return m, l, o.reshape(b, h, c, cfg.head_dim)
+
+
+def _chunk_logits(q_r: jnp.ndarray, k: jnp.ndarray, cfg: ModelConfig
+                  ) -> jnp.ndarray:
+    """GQA QK^T for a chunk of already-RoPE'd queries.
+
+    q_r: (B, C, H, dh); k: (B, N, Hkv, dh) post-RoPE keys.
+    Returns (B, H, C, N) f32 scaled + softcapped logits — the query is
+    contracted with an explicit (Hkv, group) split, no repeat_kv copy.
+    """
+    b, c = q_r.shape[:2]
+    q_g = q_r.reshape(b, c, cfg.n_kv_heads, cfg.group_size, cfg.head_dim) \
+        .astype(jnp.float32)
+    logits = jnp.einsum("bckrd,bnkd->bkrcn", q_g, k.astype(jnp.float32))
+    logits = logits.reshape(b, cfg.n_heads, c, k.shape[1])
+    logits = logits * (cfg.head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(
+            logits / cfg.attn_logit_softcap)
+    return logits
+
+
+def attend_prefill_chunk(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                         off, k_cache: jnp.ndarray, v_cache: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                    jnp.ndarray, jnp.ndarray]:
+    """Chunk-vs-cache attention: one fixed-width prefill step.
+
+    x: (B, C, d) hidden states of prompt tokens [off, off+C); ``off`` is a
+    TRACED scalar — the chunk's global start position (shared across rows:
+    the ragged batch is right-padded, so array index == position).
+    k_cache/v_cache: (B, S_max, Hkv, dh) full-precision post-RoPE keys /
+    values holding every previously-written prompt position (< off).
+
+    Two flash partials, LSE-merged (as in core/sparse_attention):
+
+      * cache partial  — chunk queries vs cache positions < off (history),
+      * chunk partial  — intra-chunk causal attention,
+
+    then the chunk's K/V are appended at [off, off+C).  Rows shorter than
+    ``off`` contribute only pad queries here; their outputs are garbage but
+    masked downstream (causality keeps pad keys out of every real query's
+    window, exactly as in monolithic prefill).
+
+    Returns (y (B,C,d), k_pre (B,C,Hkv,dh), v (B,C,Hkv,dh),
+    new_k_cache, new_v_cache).
+    """
+    b, c, _ = x.shape
+    positions = (off + jnp.arange(c))[None, :]                 # (1, C)
+    q, k_pre, v = qkv_proj(params, x, cfg)
+    if cfg.use_rope:
+        q_r = apply_rope(q, positions, cfg.rope_theta)
+        k_r = apply_rope(k_pre, positions, cfg.rope_theta)
+    else:
+        q_r, k_r = q, k_pre
+
+    # cache partial: history positions < off (written by previous chunks)
+    s_max = k_cache.shape[1]
+    hist = jnp.arange(s_max)[None, None, None, :] < off        # (1,1,1,S)
+    lg_h = jnp.where(hist, _chunk_logits(q_r, k_cache, cfg), NEG_INF)
+    m_h, l_h, o_h = _chunk_partial(lg_h, v_cache, cfg)
+
+    # chunk partial: intra-chunk causal (index mask — positions are aligned)
+    causal = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+              )[None, None]                                    # (1,1,C,C)
+    lg_c = jnp.where(causal, _chunk_logits(q_r, k_r, cfg), NEG_INF)
+    m_c, l_c, o_c = _chunk_partial(lg_c, v, cfg)
+
+    # LSE merge (the chunk partial always has the self-attention entry, so
+    # the denominator is strictly positive for every query row)
+    m = jnp.maximum(m_h, m_c)
+    w_h = jnp.exp(m_h - m)
+    w_c = jnp.exp(m_c - m)
+    denom = w_h * l_h + w_c * l_c
+    o = (w_h[..., None] * o_h + w_c[..., None] * o_c) \
+        / jnp.maximum(denom, 1e-30)[..., None]                 # (B,H,C,dh)
+    o = jnp.moveaxis(o, 1, 2).astype(x.dtype)                  # (B,C,H,dh)
+    y = out_proj(params, o, cfg)
+
+    # append the chunk's K/V — same cache-layout pin as attend_decode_full
+    cache_axes = ("batch", "kv_seq_full", "kv_heads", None)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_r.astype(k_cache.dtype), off, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), off, axis=1)
+    k_cache = constrain(k_cache, cache_axes)
+    v_cache = constrain(v_cache, cache_axes)
+    return y, k_pre, v, k_cache, v_cache
 
 
 def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,

@@ -16,11 +16,18 @@ Entry points
   forward(params, cfg, batch, ...)           -> (logits, aux)     [train]
   init_cache(cfg, sals, batch, max_seq)      -> cache
   prefill(params, proj, cfg, sals, batch, max_seq[, lengths]) -> (last_logits, cache)
+  init_prefill_scratch(cfg, sals, batch, max_seq) -> scratch
+  prefill_chunk(params, proj, cfg, sals, cache, scratch, batch, off, lengths)
+                                             -> (logits, cache, scratch)
   decode_step(params, proj, cache, tokens, pos, cfg, sals) -> (logits, cache)
 
 ``pos`` is a traced scalar or a (B,) per-row positions vector, and
 ``lengths`` right-pad-masks a ragged prompt batch — the continuous-batching
-layout (see serve/engine.py).
+layout (see serve/engine.py).  ``prefill`` processes the whole prompt in one
+monolithic forward (the chunked path's parity oracle, and the recurrent
+families' only prefill); ``prefill_chunk`` builds the same cache one
+fixed-width chunk at a time against the cache-so-far, with ``off`` a traced
+scalar so every chunk of every prompt re-executes ONE compiled HLO.
 """
 from __future__ import annotations
 
@@ -398,6 +405,108 @@ def prefill(params: dict, projectors: Optional[dict], cfg: ModelConfig,
         last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
     logits = unembed_apply(params["embed"], last, cfg)[:, 0]
     return logits, cache
+
+
+def init_prefill_scratch(cfg: ModelConfig, sals: Optional[SALSConfig],
+                         batch: int, max_seq: int, dtype=None) -> dict:
+    """Full-precision prompt-K/V scratch for the SALS segments of a CHUNKED
+    prefill.
+
+    SALS layers store only compressed latents plus the small sink/recent
+    windows, but chunk queries must attend EXACTLY to every previous prompt
+    token — so chunked prefill carries a transient post-RoPE K/V buffer per
+    SALS layer, written chunk by chunk and discarded once the prompt is
+    done (the full-precision segments use their own decode cache as the
+    scratch).  Returns {"seg{i}": {"k": (ls,B,S,Hkv,dh), "v": ...}} for the
+    SALS segments only ({} when SALS is off).
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    scratch: Dict[str, Any] = {}
+    for si, (i0, i1, mode) in enumerate(segment_plan(cfg, sals)):
+        if mode != "sals":
+            continue
+        ls = i1 - i0
+        shape = (ls, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        scratch[f"seg{si}"] = {"k": jnp.zeros(shape, dtype),
+                               "v": jnp.zeros(shape, dtype)}
+    return scratch
+
+
+def prefill_chunk(params: dict, projectors: Optional[dict], cfg: ModelConfig,
+                  sals: Optional[SALSConfig], cache: dict, scratch: dict,
+                  batch: Dict[str, jnp.ndarray], off,
+                  lengths: jnp.ndarray) -> Tuple[jnp.ndarray, dict, dict]:
+    """One fixed-width chunked-prefill step: prompt tokens [off, off+C)
+    against the cache-so-far.
+
+    ``batch``: {"tokens": (B, C)} — one chunk of the right-padded prompt;
+    ``off`` is a TRACED scalar (the same compiled HLO serves every chunk of
+    every prompt length); ``lengths`` (B,) are the TRUE prompt lengths.
+    ``cache`` is the decode cache being built (from :func:`init_cache`) and
+    ``scratch`` the SALS prompt-K/V buffer (:func:`init_prefill_scratch`).
+
+    Each layer LSE-merges a cache partial (positions < off) with the
+    intra-chunk causal partial (attention.attend_prefill_chunk), appends the
+    chunk's K/V — full layers into their decode cache, SALS layers into the
+    scratch plus incremental latent/ring/sink writes at per-slot offsets
+    (LatentKVCache.append_chunk) — and advances per-slot lengths to
+    min(lengths, off+C).
+
+    Recurrent-state families (ssm, hybrid) scan their state over the whole
+    sequence and are not chunkable — they keep the monolithic :func:`prefill`.
+    Returns (logits (B, V) at each row's last real token AS COVERED SO FAR
+    (clip(lengths-1-off, 0, C-1)) — the chunk containing position
+    lengths-1 returns the real last-token logits — cache, scratch).
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"{cfg.family} prefill is recurrent — chunked "
+                         "prefill supports attention-only families")
+    if not cfg.is_decoder:
+        raise ValueError("encoder family has no decode cache to prefill")
+    x = embed_apply(params["embed"], batch["tokens"], cfg)
+    b, c, _ = x.shape
+    len_v = jnp.asarray(lengths, jnp.int32)
+    segs = segment_plan(cfg, sals)
+    new_cache: Dict[str, Any] = {}
+    new_scratch: Dict[str, Any] = {}
+
+    for si, (i0, i1, mode) in enumerate(segs):
+        bp_seg = _slice_tree(params["blocks"], i0, i1)
+        seg_cache = cache[f"seg{si}"]
+        if mode == "sals":
+            u_seg = projectors["u"][i0:i1]
+            sc = scratch[f"seg{si}"]
+
+            def body_s(x, bp_u_cl_sc):
+                bp, u_l, cl, sk, sv = bp_u_cl_sc
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                a, k_pre, v, sk, sv = attn.attend_prefill_chunk(
+                    bp["attn"], h, cfg, off, sk, sv)
+                cl = cl.append_chunk(cfg, sals, u_l, off, k_pre, v, len_v)
+                x, cl = _finish_block(bp, x, h, a, cl, None, cfg)
+                return x, (cl, sk, sv)
+
+            x, (seg, sk, sv) = jax.lax.scan(
+                body_s, x, (bp_seg, u_seg, seg_cache, sc["k"], sc["v"]))
+            new_scratch[f"seg{si}"] = {"k": sk, "v": sv}
+        else:
+            def body_f(x, bp_cl):
+                bp, cl = bp_cl
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                a, _, _, kc, vc = attn.attend_prefill_chunk(
+                    bp["attn"], h, cfg, off, cl["k"], cl["v"])
+                x, cl = _finish_block(bp, x, h, a, {"k": kc, "v": vc},
+                                      None, cfg)
+                return x, cl
+
+            x, seg = jax.lax.scan(body_f, x, (bp_seg, seg_cache))
+        new_cache[f"seg{si}"] = seg
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    last_idx = jnp.clip(len_v - 1 - off, 0, c - 1)
+    last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+    logits = unembed_apply(params["embed"], last, cfg)[:, 0]
+    return logits, new_cache, new_scratch
 
 
 def _pad_seq(a: jnp.ndarray, max_seq: int) -> jnp.ndarray:

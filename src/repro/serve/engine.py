@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + SALS decode.
+"""Serving engine: chunked prefill + SALS decode over a slot arena.
 
 One engine per (model, SALS setting).  The decode step is jitted once with a
 static max_seq cache and traced per-row positions, so generation is a fixed
@@ -11,16 +11,26 @@ their true lengths (per-slot ``lengths`` on the LatentKVCache, per-row
 decode positions through every kernel), so pad tokens are never selectable
 by the latent top-k nor attended by the window/full paths.  The batch axis
 is a slot arena for continuous batching: :meth:`init_slot_cache`,
-:meth:`prefill_one`, and :meth:`admit` let the scheduler prefill a single
-joining request and splice it into an empty slot of a RUNNING batch between
-decode steps — the decode HLO is compiled once and reused across
-admissions (the slot index is a traced scalar).
+:meth:`start_prefill` / :meth:`prefill_chunk_step`, and :meth:`admit` let
+the scheduler prefill a single joining request and splice it into an empty
+slot of a RUNNING batch between decode steps — the decode HLO is compiled
+once and reused across admissions (the slot index is a traced scalar).
+
+Prefill is CHUNKED: a joining request's prompt is processed as a loop over
+ONE jitted fixed-width chunk step (``scfg.prefill_chunk`` tokens; the chunk
+offset is a traced scalar, so heterogeneous prompt lengths all re-execute
+the same compiled HLO — no per-length or per-bucket recompiles, and peak
+prefill activation memory is (1, chunk, d) instead of (1, S_prompt, d)).
+The chunk state (:class:`PrefillTask`) is resumable between decode steps,
+which is what lets the scheduler interleave long-prompt admission work with
+resident decoding instead of head-of-line blocking the arena.
 
 Exception: recurrent-state families (ssm, hybrid) build their state by
 scanning the padded sequence, so right-padding would fold pad tokens into
-the state.  For those, :meth:`generate` falls back to the uniform-length
-layout (left-fill with the first prompt token, exact positions) and the
-scheduler uses static batching.
+the state and chunking would have to carry it.  For those,
+:meth:`generate` falls back to the uniform-length monolithic layout
+(left-fill with the first prompt token, exact positions) and the scheduler
+uses static batching.
 """
 from __future__ import annotations
 
@@ -43,6 +53,33 @@ class GenerationResult:
     steps: int
 
 
+@dataclasses.dataclass
+class PrefillTask:
+    """One request's chunked prefill in flight.
+
+    Created by :meth:`ServeEngine.start_prefill`; each
+    :meth:`ServeEngine.prefill_chunk_step` advances it by one fixed-width
+    chunk.  ``cache`` is the single-slot decode cache being built and
+    ``scratch`` the transient full-precision prompt-K/V buffer the SALS
+    segments attend against across chunks (dropped when the task is
+    admitted).  ``logits`` always holds the last chunk's per-row
+    last-real-token logits — after the final chunk that IS the prompt's
+    next-token distribution.
+    """
+
+    tokens: np.ndarray           # (1, n_chunks·C) right-padded prompt
+    prompt_len: int
+    cache: dict
+    scratch: dict
+    n_chunks: int
+    next_chunk: int = 0
+    logits: Optional[jnp.ndarray] = None
+
+    @property
+    def done(self) -> bool:
+        return self.next_chunk >= self.n_chunks
+
+
 class ServeEngine:
     """Holds params + projectors and runs batched generation."""
 
@@ -62,15 +99,29 @@ class ServeEngine:
             raise ValueError(f"max_seq_len {scfg.max_seq_len} must be "
                              f"divisible by n_groups {n_groups}")
         self.n_groups = n_groups
+        if self.ragged_ok:
+            if scfg.prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if scfg.max_seq_len % scfg.prefill_chunk:
+                # guarantees every chunk write [off, off+C) stays in-bounds
+                # for every admissible prompt (dynamic_update_slice would
+                # otherwise clamp the offset and silently shift the write)
+                raise ValueError(
+                    f"max_seq_len {scfg.max_seq_len} must be a multiple of "
+                    f"prefill_chunk {scfg.prefill_chunk}")
         self._prefill = jax.jit(self._prefill_impl)
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      donate_argnums=(1, 2))
+        self._init_prefill = jax.jit(self._init_prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._init_slots = jax.jit(self._init_slots_impl)
 
     @property
     def ragged_ok(self) -> bool:
-        """Right-padded ragged batching is exact for attention families;
-        recurrent ssm/hybrid state would absorb pad tokens."""
+        """Right-padded ragged batching (and chunked prefill) is exact for
+        attention families; recurrent ssm/hybrid state would absorb pad
+        tokens and spans chunk boundaries."""
         return self.cfg.family not in ("ssm", "hybrid")
 
     # -- jitted bodies -------------------------------------------------------
@@ -79,6 +130,18 @@ class ServeEngine:
         return tf.prefill(self.params, self.projectors, self.cfg, self.sals,
                           batch, self.scfg.max_seq_len,
                           n_groups=self.n_groups, lengths=lengths)
+
+    def _prefill_chunk_impl(self, tokens, cache, scratch, off, lengths):
+        return tf.prefill_chunk(self.params, self.projectors, self.cfg,
+                                self.sals, cache, scratch,
+                                {"tokens": tokens}, off, lengths)
+
+    def _init_prefill_impl(self):
+        cache = tf.init_cache(self.cfg, self.sals, 1, self.scfg.max_seq_len,
+                              n_groups=self.n_groups)
+        scratch = tf.init_prefill_scratch(self.cfg, self.sals, 1,
+                                          self.scfg.max_seq_len)
+        return cache, scratch
 
     def _decode_impl(self, tokens, cache, pos):
         return tf.decode_step(self.params, self.projectors, cache, tokens,
@@ -117,20 +180,52 @@ class ServeEngine:
         """Zeroed slot-arena decode cache with ``max_batch`` slots."""
         return self._init_slots()
 
-    def prefill_one(self, prompt: np.ndarray) -> Tuple[jnp.ndarray, dict]:
-        """Prefill ONE request (padded to the prompt bucket so admissions of
-        similar lengths share a compiled prefill).  Returns (logits (1, V)
-        at the last real token, single-slot cache)."""
+    def start_prefill(self, prompt: np.ndarray) -> PrefillTask:
+        """Begin a chunked prefill for ONE request.
+
+        The prompt is right-padded to a whole number of ``prefill_chunk``
+        tokens; every :meth:`prefill_chunk_step` then re-executes the SAME
+        compiled chunk HLO (fixed (1, chunk) shape, traced offset) — no
+        per-length buckets, no recompiles across heterogeneous prompts.
+        """
+        if not self.ragged_ok:
+            raise ValueError(f"{self.cfg.family} prefill is recurrent — "
+                             "chunked prefill needs an attention family "
+                             "(the scheduler falls back to static batching)")
         plen = len(prompt)
-        pb = max(1, self.scfg.prompt_bucket)
-        bucket = min(self.scfg.max_seq_len, -(-max(plen, 1) // pb) * pb)
-        if plen > bucket:
+        if plen > self.scfg.max_seq_len:
             raise ValueError(f"prompt {plen} exceeds max_seq "
                              f"{self.scfg.max_seq_len}")
-        toks = np.full((1, bucket), self.scfg.pad_id, np.int32)
+        c = self.scfg.prefill_chunk
+        n = max(1, -(-plen // c))
+        toks = np.full((1, n * c), self.scfg.pad_id, np.int32)
         toks[0, :plen] = prompt
-        return self._prefill({"tokens": jnp.asarray(toks)},
-                             jnp.asarray([plen], jnp.int32))
+        cache, scratch = self._init_prefill()
+        return PrefillTask(tokens=toks, prompt_len=plen, cache=cache,
+                           scratch=scratch, n_chunks=n)
+
+    def prefill_chunk_step(self, task: PrefillTask) -> bool:
+        """Advance ``task`` by one chunk; returns True when the prompt is
+        fully processed (``task.logits`` then holds the next-token logits
+        and ``task.cache`` the finished single-slot cache)."""
+        c = self.scfg.prefill_chunk
+        j = task.next_chunk
+        chunk = jnp.asarray(task.tokens[:, j * c:(j + 1) * c])
+        task.logits, task.cache, task.scratch = self._prefill_chunk(
+            chunk, task.cache, task.scratch, jnp.int32(j * c),
+            jnp.asarray([task.prompt_len], jnp.int32))
+        task.next_chunk += 1
+        return task.done
+
+    def prefill_one(self, prompt: np.ndarray) -> Tuple[jnp.ndarray, dict]:
+        """Prefill ONE request by draining its chunk loop.  Returns (logits
+        (1, V) at the last real token, single-slot cache).  The scheduler
+        instead drives :meth:`start_prefill` / :meth:`prefill_chunk_step`
+        directly so chunks interleave with decode steps."""
+        task = self.start_prefill(prompt)
+        while not task.done:
+            self.prefill_chunk_step(task)
+        return task.logits, task.cache
 
     def admit(self, cache, one_cache, slot: int):
         """Splice a prefilled single-request cache into batch row ``slot``
@@ -142,7 +237,13 @@ class ServeEngine:
     def generate(self, prompts: List[np.ndarray], max_new_tokens: Optional[int]
                  = None, eos_id: Optional[int] = None
                  ) -> List[GenerationResult]:
-        """Generate for a batch of prompts (each a 1-D int array)."""
+        """Generate for a batch of prompts (each a 1-D int array).
+
+        Rows finishing early (``eos_id``) are truncated at their OWN eos:
+        each row's result carries exactly the tokens up to and including its
+        first eos (the batch keeps stepping for unfinished rows; a finished
+        row's later samples are discarded, never reported).
+        """
         mnt = max_new_tokens or self.scfg.max_new_tokens
         b = len(prompts)
         lens = [len(p) for p in prompts]
@@ -171,11 +272,11 @@ class ServeEngine:
         key = jax.random.PRNGKey(self.scfg.seed)
         out = np.zeros((b, mnt), np.int32)
         done = np.zeros((b,), bool)
-        steps = 0
+        n_out = np.zeros((b,), np.int32)       # per-row emitted count
         next_tok = self._sample(logits, key)
         for t in range(mnt):
             out[:, t] = np.asarray(next_tok)
-            steps += 1
+            n_out[~done] = t + 1               # finished rows stop counting
             if eos_id is not None:
                 done |= out[:, t] == eos_id
                 if done.all():
@@ -185,7 +286,7 @@ class ServeEngine:
             key, sub = jax.random.split(key)
             logits, cache = self._decode(next_tok, cache, pos0 + t)
             next_tok = self._sample(logits, sub)
-        return [GenerationResult(out[i, :steps], lens[i], steps)
+        return [GenerationResult(out[i, :n_out[i]], lens[i], int(n_out[i]))
                 for i in range(b)]
 
     def decode_throughput(self, batch_size: int, context_len: int,

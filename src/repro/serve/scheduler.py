@@ -1,18 +1,26 @@
-"""Request scheduler: continuous batching over the engine's slot arena.
+"""Request scheduler: continuous batching with decode-interleaved chunked
+prefill over the engine's slot arena.
 
-Default mode ("continuous"): the batch axis is a SLOT ARENA.  Between decode
-steps the scheduler admits pending requests FIFO into empty slots — each
-admission is one single-request prefill plus one compiled splice
-(``engine.admit``, traced slot index), and the ragged decode step (per-row
-positions, per-slot lengths) keeps every resident sequence exact.  A request
-submitted mid-generation therefore joins the running batch within one decode
-step, a finished request's slot is recycled immediately, and the jitted
-decode HLO is compiled once and reused across all admissions — no
-recompiles, no cache compaction, no drain barrier.
+Default mode ("continuous"): the batch axis is a SLOT ARENA.  Each loop
+iteration first spends at most ``ServeConfig.prefill_token_budget`` tokens
+advancing the head-of-queue request's CHUNKED prefill (one fixed-width
+compiled chunk HLO per ``engine.prefill_chunk_step``; a request whose
+prompt outruns the budget simply resumes next iteration), admitting it into
+a free slot the moment its prompt completes (one compiled splice,
+``engine.admit``, traced slot index) — then runs ONE ragged decode step for
+the whole arena.  Resident sequences therefore never stall behind an
+arriving prompt for more than the configured budget (rounded down to whole
+chunks, minimum one chunk): long-prompt admission work and decoding
+interleave instead of head-of-line blocking.  A request submitted
+mid-generation joins the running batch as soon as its chunks are paid for,
+a finished request's slot is recycled immediately, and the jitted decode /
+chunk / splice HLOs are each compiled once and reused across all
+admissions — no recompiles, no cache compaction, no drain barrier.
 
 "static" mode survives as the GPT-fast-style baseline (and the fallback for
-recurrent-state families, whose prefill cannot right-pad): fixed-size
-batches, length-bucketed FIFO, prefill → decode-until-drained per batch.
+recurrent-state families, whose prefill can neither right-pad nor chunk):
+fixed-size batches, length-bucketed FIFO, monolithic prefill →
+decode-until-drained per batch.
 
 Results are delivered on the ``Request`` objects in both modes.
 """
@@ -26,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
 
 _req_ids = itertools.count()
 
@@ -50,13 +58,26 @@ class _Slot:
     out: List[int]                 # generated token ids so far
 
 
+@dataclasses.dataclass
+class _Admission:
+    """Head-of-queue request being chunk-prefilled into a reserved slot."""
+    req: Request
+    slot: int
+    task: PrefillTask
+
+
 class RequestScheduler:
     """``mode``: "continuous" (default, from ``engine.scfg.scheduler``) or
     "static".  Recurrent-state families always run static (see engine).
 
-    ``admissions`` records (decode_step_index, slot, req_id) for every
-    admission — the observability hook the scheduler tests (join latency,
-    slot recycling, FIFO) assert against.
+    Observability hooks the scheduler tests assert against:
+      ``admissions``     — (decode_step_index, slot, req_id) per admission
+                           (join latency, slot recycling, FIFO);
+      ``prefill_chunks`` — (decode_step_index, req_id, chunk_index,
+                           n_resident) per chunk HLO executed (the
+                           interleaving ledger: the number of entries
+                           sharing a step index with n_resident > 0 bounds
+                           how long residents waited between decode steps).
     """
 
     def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None,
@@ -67,12 +88,14 @@ class RequestScheduler:
         if mode not in ("continuous", "static"):
             raise ValueError(f"unknown scheduler mode {mode!r}")
         if not engine.ragged_ok:
-            mode = "static"        # recurrent state can't right-pad
+            mode = "static"        # recurrent state can't right-pad or chunk
         self.mode = mode
         self.pending: List[Request] = []
         self.completed: Dict[int, Request] = {}
-        self.admissions: List[tuple] = []   # (step, slot, req_id)
-        self.steps: int = 0                 # decode steps executed
+        self.admissions: List[tuple] = []       # (step, slot, req_id)
+        # (step, req_id, chunk_idx, n_resident) — see class docstring
+        self.prefill_chunks: List[tuple] = []
+        self.steps: int = 0                     # decode steps executed
 
     def submit(self, req: Request) -> int:
         if req.max_new_tokens < 1:
@@ -96,9 +119,9 @@ class RequestScheduler:
         """Drain the queue; returns completed requests in completion order.
 
         ``on_step`` (continuous mode) fires after every decode step — tests
-        and clients use it to submit requests mid-generation; they are
-        admitted before the NEXT decode step.  ``on_batch`` (static mode)
-        fires after each drained batch.
+        and clients use it to submit requests mid-generation; their prefill
+        chunks start within the very next iteration's budget.  ``on_batch``
+        (static mode) fires after each drained batch.
         """
         if self.mode == "static":
             return self._run_static(on_batch)
@@ -113,8 +136,11 @@ class RequestScheduler:
                              f"max_batch {self.max_batch} != "
                              f"engine {eng.scfg.max_batch}")
         b = self.max_batch
+        chunk = eng.scfg.prefill_chunk
+        chunks_per_sweep = max(1, eng.scfg.prefill_token_budget // chunk)
         cache = eng.init_slot_cache()
         slots: List[Optional[_Slot]] = [None] * b
+        active: Optional[_Admission] = None   # its slot stays reserved
         tokens = np.zeros((b,), np.int32)
         positions = np.zeros((b,), np.int32)
         key = jax.random.PRNGKey(eng.scfg.seed)
@@ -132,27 +158,41 @@ class RequestScheduler:
             positions[i] = 0       # writes stay in-bounds and the slot row
             #                        is fully overwritten at admission anyway
 
-        while self.pending or any(s is not None for s in slots):
-            # ---- admit FIFO into every empty slot -------------------------
-            for i in range(b):
-                if slots[i] is not None or not self.pending:
-                    continue
-                req = self.pending.pop(0)
-                logits1, cache1 = eng.prefill_one(req.prompt)
-                cache = eng.admit(cache, cache1, i)
-                key, sub = jax.random.split(key)
-                tok0 = int(np.asarray(eng._sample(logits1, sub))[0])
-                slots[i] = _Slot(req, out=[tok0])
-                tokens[i] = tok0
-                positions[i] = len(req.prompt)
-                self.admissions.append((self.steps, i, req.req_id))
-                if len(slots[i].out) >= req.max_new_tokens:
-                    finish(i)
+        while self.pending or active or any(s is not None for s in slots):
+            # ---- prefill sweep: ≤ budget tokens of chunk work, FIFO -------
+            spent = 0
+            while spent < chunks_per_sweep:
+                if active is None:
+                    free = next((i for i in range(b) if slots[i] is None),
+                                None)
+                    if free is None or not self.pending:
+                        break
+                    req = self.pending.pop(0)
+                    active = _Admission(req, free,
+                                        eng.start_prefill(req.prompt))
+                self.prefill_chunks.append(
+                    (self.steps, active.req.req_id, active.task.next_chunk,
+                     sum(s is not None for s in slots)))
+                eng.prefill_chunk_step(active.task)
+                spent += 1
+                if active.task.done:
+                    i = active.slot
+                    cache = eng.admit(cache, active.task.cache, i)
+                    key, sub = jax.random.split(key)
+                    tok0 = int(np.asarray(
+                        eng._sample(active.task.logits, sub))[0])
+                    slots[i] = _Slot(active.req, out=[tok0])
+                    tokens[i] = tok0
+                    positions[i] = len(active.req.prompt)
+                    self.admissions.append((self.steps, i, active.req.req_id))
+                    if len(slots[i].out) >= active.req.max_new_tokens:
+                        finish(i)
+                    active = None
 
             if not any(s is not None for s in slots):
-                if not self.pending:
+                if not (self.pending or active):
                     break
-                continue
+                continue            # nothing resident yet: keep prefilling
 
             # ---- one ragged decode step for the whole arena ---------------
             # (empty slots idle at position 0, harmlessly rewriting their

@@ -1,0 +1,232 @@
+"""Chunked prefill parity (ISSUE 4 acceptance).
+
+The chunked path (fixed-width prefill_chunk steps against the cache-so-far,
+traced chunk offset) must build the SAME decode cache and the SAME
+generation as the monolithic prefill oracle, for every attention family,
+for any chunk width, and through ONE compiled chunk HLO regardless of
+prompt length.  Recurrent families (ssm/hybrid) are excluded by
+construction — they keep the monolithic path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.models import transformer as tf
+from repro.serve import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+MAX_SEQ = 128
+
+# attention (non-recurrent) decoder families: dense, moe, vlm (tokens-only)
+ARCHS = ["qwen2-1.5b", "qwen3-moe-235b-a22b", "paligemma-3b"]
+
+
+def _sals(cfg):
+    return SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8,
+                      v_group=min(32, cfg.kv_dim),
+                      skip_layers_front=1, skip_layers_back=1)
+
+
+def _model(arch, f32_cache=True):
+    cfg = get_config(arch).reduced(n_layers=3, vocab_size=128)
+    if f32_cache:
+        # f32 caches: chunked-vs-monolithic differences are then pure float
+        # reassociation (~1e-6), not bf16 cache rounding — the tight regime
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = _sals(cfg)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _ragged_tokens(lens, width, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = np.zeros((len(lens), width), np.int32)
+    for i, l in enumerate(lens):
+        toks[i, :l] = rng.integers(1, 128, l)
+    return toks
+
+
+def _run_chunked(params, proj, cfg, sals, toks, lens, chunk):
+    b, width = toks.shape
+    assert width % chunk == 0
+    len_v = jnp.asarray(lens, jnp.int32)
+    cache = tf.init_cache(cfg, sals, b, MAX_SEQ)
+    scratch = tf.init_prefill_scratch(cfg, sals, b, MAX_SEQ)
+    step = jax.jit(lambda ca, sc, tk, off: tf.prefill_chunk(
+        params, proj, cfg, sals, ca, sc, {"tokens": tk}, off, len_v))
+    logits = np.zeros((b, cfg.vocab_size), np.float32)
+    for j in range(width // chunk):
+        lg, cache, scratch = step(cache, scratch,
+                                  jnp.asarray(toks[:, j * chunk:(j + 1) * chunk]),
+                                  jnp.int32(j * chunk))
+        # the chunk covering a row's last real token carries its logits
+        covered = (np.asarray(lens) - 1 >= j * chunk) \
+            & (np.asarray(lens) - 1 < (j + 1) * chunk)
+        logits[covered] = np.asarray(lg)[covered]
+    return logits, cache
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_cache_matches_monolithic(arch):
+    """Every LatentKVCache field (and the full-precision segment caches)
+    from chunked prefill matches the monolithic oracle dtype-tight, and the
+    last-real-token logits agree, over a ragged batch."""
+    cfg, params, sals, proj = _model(arch)
+    lens = [37, 20, 64]
+    chunk = 16
+    width = 64
+    toks = _ragged_tokens(lens, width, seed=3)
+    len_v = jnp.asarray(lens, jnp.int32)
+    logits_m, cache_m = tf.prefill(params, proj, cfg, sals,
+                                   {"tokens": jnp.asarray(toks)}, MAX_SEQ,
+                                   lengths=len_v)
+    logits_c, cache_c = _run_chunked(params, proj, cfg, sals, toks, lens,
+                                     chunk)
+    np.testing.assert_allclose(logits_c, np.asarray(logits_m),
+                               atol=5e-5, rtol=1e-4)
+    for name, seg_m in cache_m.items():
+        seg_c = cache_c[name]
+        if hasattr(seg_m, "k_lat"):          # SALS segment
+            np.testing.assert_array_equal(np.asarray(seg_c.lengths),
+                                          np.asarray(seg_m.lengths))
+            for f in ("k_lat", "sink_k", "sink_v", "recent_k", "recent_v",
+                      "v_scale", "v_zero"):
+                a = np.asarray(getattr(seg_m, f), np.float32)
+                b_ = np.asarray(getattr(seg_c, f), np.float32)
+                np.testing.assert_allclose(b_, a, atol=5e-5, rtol=1e-4,
+                                           err_msg=f"{name}.{f}")
+            # quant codes: at most one code step of drift at bin boundaries
+            dq = np.abs(np.asarray(seg_c.v_q, np.int32)
+                        - np.asarray(seg_m.v_q, np.int32))
+            assert dq.max() <= 1, f"{name}.v_q drift {dq.max()}"
+        else:                                # full-precision segment
+            for f in ("k", "v"):
+                np.testing.assert_allclose(
+                    np.asarray(seg_c[f], np.float32),
+                    np.asarray(seg_m[f], np.float32),
+                    atol=5e-5, rtol=1e-4, err_msg=f"{name}.{f}")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_greedy_decode_after_chunked_matches_monolithic(arch):
+    """Greedy decode emits IDENTICAL tokens from the chunked-prefill cache
+    and the monolithic-prefill cache (every attention family)."""
+    cfg, params, sals, proj = _model(arch)
+    lens = [29, 44]
+    width = 48
+    toks = _ragged_tokens(lens, width, seed=7)
+    len_v = jnp.asarray(lens, jnp.int32)
+    logits_m, cache_m = tf.prefill(params, proj, cfg, sals,
+                                   {"tokens": jnp.asarray(toks)}, MAX_SEQ,
+                                   lengths=len_v)
+    logits_c, cache_c = _run_chunked(params, proj, cfg, sals, toks, lens, 16)
+
+    def greedy(logits, cache, n=8):
+        tok = jnp.argmax(jnp.asarray(logits), -1).astype(jnp.int32)
+        pos = len_v
+        seq = [np.asarray(tok)]
+        for t in range(n - 1):
+            lg, cache = tf.decode_step(params, proj, cache, tok, pos + t,
+                                       cfg, sals)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            seq.append(np.asarray(tok))
+        return np.stack(seq, axis=1)
+
+    np.testing.assert_array_equal(greedy(logits_c, cache_c),
+                                  greedy(logits_m, cache_m))
+
+
+def test_chunk_width_invariance():
+    """Any chunk width builds the same cache: C=8 vs C=32 vs one full-width
+    chunk agree dtype-tight."""
+    cfg, params, sals, proj = _model("qwen2-1.5b")
+    lens = [21, 64, 40]
+    toks = _ragged_tokens(lens, 64, seed=11)
+    outs = {c: _run_chunked(params, proj, cfg, sals, toks, lens, c)
+            for c in (8, 32, 64)}
+    ref_logits, ref_cache = outs[64]
+    flat_ref, _ = jax.tree.flatten(ref_cache)
+    for c in (8, 32):
+        lg, cache = outs[c]
+        np.testing.assert_allclose(lg, ref_logits, atol=5e-5, rtol=1e-4)
+        flat, _ = jax.tree.flatten(cache)
+        for a, b_ in zip(flat_ref, flat):
+            np.testing.assert_allclose(np.asarray(b_, np.float32),
+                                       np.asarray(a, np.float32),
+                                       atol=5e-5, rtol=1e-4)
+
+
+def test_prefill_one_traces_single_chunk_hlo():
+    """ISSUE 4 acceptance: chunked prefill_one compiles ONE chunk HLO across
+    heterogeneous prompt lengths (the chunk offset and per-row lengths are
+    traced; prompt length only changes the python-level loop count)."""
+    cfg, params, sals, proj = _model("qwen2-1.5b", f32_cache=False)
+    scfg = ServeConfig(max_seq_len=MAX_SEQ, max_batch=2, sals=sals,
+                       prefill_chunk=16)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    rng = np.random.default_rng(0)
+    for plen in (5, 16, 23, 49, 64, 100):
+        logits, cache = eng.prefill_one(
+            rng.integers(1, 128, plen).astype(np.int32))
+        assert logits.shape == (1, cfg.vocab_size)
+    assert eng._prefill_chunk._cache_size() == 1
+    assert eng._init_prefill._cache_size() == 1
+
+
+def test_engine_chunked_prefill_logits_match_monolithic():
+    """ServeEngine.prefill_one (chunked, bf16 cache) agrees with the
+    engine's monolithic prefill on the next token, and the admitted cache
+    decodes the same greedy continuation."""
+    cfg, params, sals, proj = _model("qwen2-1.5b", f32_cache=False)
+    scfg = ServeConfig(max_seq_len=MAX_SEQ, max_batch=1, sals=sals,
+                       prefill_chunk=16)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, 128, 41).astype(np.int32)
+    lg_c, cache_c = eng.prefill_one(prompt)
+    lg_m, cache_m = eng._prefill(
+        {"tokens": jnp.asarray(prompt[None, :])},
+        jnp.asarray([len(prompt)], jnp.int32))
+
+    def greedy(lg, cache, n=6):
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        out = [int(tok[0])]
+        pos = jnp.asarray([len(prompt)], jnp.int32)
+        for t in range(n - 1):
+            lg, cache = eng._decode(tok, cache, pos + t)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            out.append(int(tok[0]))
+        return out
+
+    assert greedy(lg_c, cache_c) == greedy(lg_m, cache_m)
+
+
+def test_recurrent_families_reject_chunked_prefill():
+    """ssm/hybrid prefill scans recurrent state across the whole sequence —
+    start_prefill must refuse (the scheduler falls back to static mode)."""
+    cfg = get_config("rwkv6-7b").reduced(n_layers=2, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    eng = ServeEngine(params, None, cfg,
+                      ServeConfig(max_seq_len=MAX_SEQ,
+                                  sals=SALSConfig(enabled=False)))
+    with pytest.raises(ValueError, match="recurrent"):
+        eng.start_prefill(np.arange(1, 9, dtype=np.int32))
+
+
+def test_max_seq_must_align_to_chunk():
+    """Misaligned max_seq_len would let a final chunk write clamp+shift —
+    the engine must refuse up front."""
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=2, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    with pytest.raises(ValueError, match="multiple of"):
+        ServeEngine(params, None, cfg,
+                    ServeConfig(max_seq_len=100, prefill_chunk=32,
+                                sals=SALSConfig(enabled=False)))
