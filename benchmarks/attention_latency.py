@@ -25,8 +25,9 @@ from repro.core.sparse_attention import sals_decode_attend
 from repro.models import attention as attn
 from repro.models import transformer as tf
 from benchmarks import common
-from benchmarks.memory_access import (decode_stage_bytes, prefill_chunk_bytes,
-                                      traffic_ratio)
+from benchmarks.memory_access import (decode_stage_bytes,
+                                      paged_capacity_model,
+                                      prefill_chunk_bytes, traffic_ratio)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
 
@@ -136,6 +137,27 @@ def prefill_traffic_rows():
     return rows
 
 
+def paged_capacity_rows():
+    """ISSUE 5 ledger: paged-pool capacity + metadata model at the paper
+    config — per-token page-table overhead (< 2% of latent bytes by
+    orders of magnitude), dense-slot vs live-page residency, and the
+    prefix-sharing storage term (§4.5 traffic-model capacity argument)."""
+    cfg = get_config("paper-llama2-7b")
+    rows = []
+    for variant, v_bits, ratio in (("25", 8, 0.25), ("12.5", 4, 0.125)):
+        sals = SALSConfig(rank_ratio=ratio, v_bits=v_bits, n_critical=512,
+                          n_sink=16, n_recent=64, v_group=64)
+        for page_size in (16, 64, 256):
+            m = paged_capacity_model(cfg, sals, page_size,
+                                     mean_live_tokens=512, max_seq=4096,
+                                     n_requests=8, shared_prefix=256)
+            rows.append({"model": "paper-llama2-7b",
+                         "sals": f"SALS-{variant}%",
+                         "page_size": page_size, "mean_live_tokens": 512,
+                         "max_seq": 4096, **m})
+    return rows
+
+
 def run() -> list:
     cpu_rows = measured_rows()
     v5e_rows = projected_rows()
@@ -158,6 +180,13 @@ def run() -> list:
           r["sals_compressed_write_bytes"]) for r in prefill_rows],
         ["chunk", "cache_so_far", "full_streamed_B", "full_live_B",
          "sals_streamed_B", "sals_write_B"])
+    paged_rows = paged_capacity_rows()
+    common.emit(
+        [(r["sals"], r["page_size"], r["latent_bytes_per_token"],
+          r["page_overhead_fraction"], r["capacity_gain"],
+          r["prefix_sharing_gain"]) for r in paged_rows],
+        ["sals", "page", "lat_B_tok", "table_frac", "capacity_x",
+         "prefix_x"])
     cols = ["table", "batch", "seq", "full_us", "sals_us", "speedup"]
     payload = {
         "bench": "attention",
@@ -166,6 +195,7 @@ def run() -> list:
         "projected_v5e": [dict(zip(cols, r)) for r in v5e_rows],
         "traffic_model": model_rows,
         "prefill_traffic_model": prefill_rows,
+        "paged_capacity_model": paged_rows,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")

@@ -22,12 +22,14 @@ from __future__ import annotations
 import json
 import sys
 
-from benchmarks.attention_latency import (BENCH_JSON, prefill_traffic_rows,
+from benchmarks.attention_latency import (BENCH_JSON, paged_capacity_rows,
+                                          prefill_traffic_rows,
                                           traffic_model_rows)
 
 MODELED_SECTIONS = {
     "traffic_model": traffic_model_rows,
     "prefill_traffic_model": prefill_traffic_rows,
+    "paged_capacity_model": paged_capacity_rows,
 }
 
 

@@ -148,6 +148,48 @@ def prefill_chunk_bytes(cfg, sals: SALSConfig, chunk: int, s: int,
     }
 
 
+def paged_capacity_model(cfg, sals: SALSConfig, page_size: int,
+                         mean_live_tokens: int, max_seq: int,
+                         n_requests: int = 8, shared_prefix: int = 0) -> dict:
+    """ISSUE 5: HBM capacity + metadata model of the paged latent cache.
+
+    The dense slot arena pins ``max_seq`` tokens of compressed cache per
+    SLOT; the page pool pins ``ceil(live/ps)`` pages per SEQUENCE — the
+    §4.5 traffic-model argument in reverse: SALS's cheap per-token bytes
+    (``r·b_lat`` + quant metadata) make page-table metadata (one int32 per
+    page = ``4/ps`` bytes/token) a rounding error, so paging is nearly
+    free in overhead and the whole dense-vs-live gap converts to capacity.
+
+    ``shared_prefix`` > 0 adds the prefix-sharing term: ``n_requests``
+    same-prefix sequences store the prefix pages ONCE (plus per-sequence
+    suffix pages) instead of ``n_requests`` full copies.
+    """
+    bpt = lc.cache_bytes_per_token(cfg, sals)            # compressed B/token
+    table_overhead = 4.0 / page_size                     # int32 entry/page
+    window_bytes = (sals.n_sink + sals.n_recent) * 2 * cfg.kv_dim * 2
+    pages_live = -(-mean_live_tokens // page_size)
+    dense_bytes = max_seq * bpt                          # per slot, pinned
+    paged_bytes = pages_live * page_size * bpt \
+        + (max_seq // page_size) * 4                     # pool + table row
+    suffix = max(0, mean_live_tokens - shared_prefix)
+    unshared_total = n_requests * pages_live * page_size * bpt
+    shared_total = (-(-shared_prefix // page_size)
+                    + n_requests * -(-suffix // page_size)) * page_size * bpt
+    return {
+        "latent_bytes_per_token": round(bpt, 3),
+        "page_table_bytes_per_token": round(table_overhead, 5),
+        "page_overhead_fraction": round(table_overhead / bpt, 6),
+        "window_bytes_per_resident": window_bytes,
+        "dense_slot_bytes": dense_bytes,
+        "paged_seq_bytes": paged_bytes,
+        "capacity_gain": round(dense_bytes / paged_bytes, 2),
+        "prefix_unshared_bytes": unshared_total,
+        "prefix_shared_bytes": shared_total,
+        "prefix_sharing_gain": round(unshared_total / max(shared_total, 1),
+                                     2),
+    }
+
+
 def accuracy_proxy():
     """Next-token agreement + logit MSE of SALS vs full on a trained model."""
     cfg, params, corpus = common.trained_model()

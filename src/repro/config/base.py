@@ -317,7 +317,31 @@ class ServeConfig:
     ``prefill_token_budget`` bounds how many prefill tokens the continuous
     scheduler spends between consecutive decode steps — resident sequences
     never stall longer than ~budget (rounded down to whole chunks, minimum
-    one chunk) regardless of arriving prompt length."""
+    one chunk) regardless of arriving prompt length.
+
+    PAGED latent cache (ISSUE 5).  ``page_size`` > 0 switches the SALS
+    segments' backing store from the dense ``(B, max_seq, ·)`` slot arena
+    to a refcounted page pool (``core/pager.py``): per-token fields become
+    ``(n_pages, page_size, ·)`` pools indexed through per-sequence page
+    tables, so HBM is pinned per LIVE TOKEN (rounded up to a page) instead
+    of per slot×max_seq, and same-prefix requests share one stored copy of
+    their prefix pages (``prefix_cache``).
+
+    Sizing rule: page-table overhead is ``4 / page_size`` bytes per token
+    (one int32 table entry per page) — < 2% of the latent payload for any
+    ``page_size`` ≥ 1 at the paper geometry (r·b_lat ≈ 2 KiB/token), so
+    pick ``page_size`` by DMA burst width (reconstruct gathers one page
+    per DMA; 16–64 is the sweet spot) and prefix-sharing granularity
+    (smaller pages share shorter common prefixes), NOT by metadata cost.
+    ``n_pages`` (0 = auto: ``max_batch · max_seq_len / page_size``, the
+    dense-equivalent capacity) sizes the pool; admission reserves a
+    prompt's pages up front and decode growth may evict-to-requeue on
+    exhaustion, so the pool bounds LIVE tokens, not slots.
+
+    Validated at construction (not inside jit): ``max_seq_len`` must be a
+    multiple of ``page_size``; ``page_size`` a multiple of
+    ``prefill_chunk`` (prefix-resume boundaries are chunk-aligned); the
+    pool must fit at least one max-length sequence."""
 
     max_seq_len: int = 4096
     max_batch: int = 8
@@ -329,6 +353,55 @@ class ServeConfig:
     scheduler: str = "continuous"     # continuous | static
     prefill_chunk: int = 32           # chunked-prefill step width (tokens)
     prefill_token_budget: int = 256   # prefill tokens between decode steps
+    page_size: int = 0                # >0: paged latent cache (tokens/page)
+    n_pages: int = 0                  # pool size (0 = max_batch·max_seq/ps)
+    prefix_cache: bool = True         # COW prefix sharing (paged mode only)
+    # Each prefix-cache entry retains its registrant's DENSE single-request
+    # cache + prefill scratch ((L, 1, max_seq, ·) — the append-only resume
+    # state) on top of its pinned pool pages, so the entry COUNT bounds
+    # HBM beyond the pool: LRU entries are evicted past this cap.
+    prefix_cache_entries: int = 4
+    # Deepest shareable prefix, in pages.  Prefill-resume needs a ring
+    # snapshot per page boundary (the one non-append-only piece of prefill
+    # state), captured during every chunked prefill — this cap bounds the
+    # snapshots to prefix_share_pages × (L_sals, 1, n_recent, Hkv, dh)·2
+    # per task instead of max_seq/page_size of them, and covers typical
+    # system prompts (8 pages × page_size tokens) without trying to dedup
+    # arbitrarily deep prompt bodies.
+    prefix_share_pages: int = 8
+
+    def __post_init__(self):
+        if self.page_size < 0 or self.n_pages < 0:
+            raise ValueError("page_size / n_pages must be >= 0")
+        if self.page_size == 0:
+            return                            # dense slot arena: no paging
+        if self.max_seq_len % self.page_size:
+            raise ValueError(
+                f"max_seq_len {self.max_seq_len} must be a multiple of "
+                f"page_size {self.page_size} (page tables map whole pages)")
+        if self.page_size % self.prefill_chunk:
+            raise ValueError(
+                f"page_size {self.page_size} must be a multiple of "
+                f"prefill_chunk {self.prefill_chunk}: prefix-cache resume "
+                "offsets are page boundaries and must land on chunk "
+                "boundaries")
+        if self.scheduler != "continuous":
+            raise ValueError("the paged latent cache requires the "
+                             "continuous scheduler (admission = page "
+                             "reservation)")
+        if self.n_pages and self.n_pages * self.page_size < self.max_seq_len:
+            raise ValueError(
+                f"n_pages {self.n_pages} × page_size {self.page_size} = "
+                f"{self.n_pages * self.page_size} tokens cannot hold one "
+                f"max_seq_len {self.max_seq_len} sequence")
+
+    @property
+    def pool_pages(self) -> int:
+        """Effective pool size (auto = dense-equivalent capacity)."""
+        if not self.page_size:
+            return 0
+        return self.n_pages or (self.max_batch * self.max_seq_len
+                                // self.page_size)
 
 
 def asdict(cfg) -> dict:

@@ -30,6 +30,23 @@ Layout metadata rides with the arrays as static pytree aux data:
                    group axis matching the ``shard_axis`` sharding.
   ``shard_axis`` — the logical axis name the sequence dimension is sharded
                    over (see distributed/sharding.py).
+  ``page_size``  — 0 = dense slot arena (above); > 0 = PAGED layout
+                   (ISSUE 5): the five per-token fields are physical page
+                   POOLS shaped ``([L,] n_pages, page_size, ·)`` shared by
+                   every sequence, and ``page_table`` ``([L,] B,
+                   max_pages)`` int32 maps row b's logical page j to its
+                   physical page (same page id in every layer's pool — one
+                   host-side allocator, ``core/pager.py``).  Token t of row
+                   b lives at pool row ``(page_table[b, t // ps], t % ps)``;
+                   both Pallas kernels take the table as a scalar-prefetch
+                   operand and dereference it in their index maps, so the
+                   paged hot path still never materializes a dense
+                   ``(B, S, ·)`` gather.  The sink/recent window and
+                   ``lengths`` stay slot-resident (fixed per-RESIDENT
+                   bytes, not per token — the capacity model counts them
+                   as such).  Unmapped table entries are 0: kernels mask
+                   by per-row position, so a garbage page read is never
+                   selectable.
 
 All arrays carry a leading layer axis L when built by :meth:`init` so the
 decode loop can ``lax.scan`` over layers (batch axis 1, sequence axis 2);
@@ -69,9 +86,15 @@ class LatentKVCache:
     k_scale: Optional[jnp.ndarray] = None  # ([L,] B, S) int8-latent scale
     ssm: Any = None                        # hybrid-family recurrent state
     lengths: Optional[jnp.ndarray] = None  # ([L,] B) int32 tokens per slot
+    page_table: Optional[jnp.ndarray] = None  # ([L,] B, max_pages) int32
     # --- static layout metadata (pytree aux data) --------------------------
     n_groups: int = 1
     shard_axis: str = "kv_seq"
+    page_size: int = 0                     # 0 = dense; >0 = paged pools
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size > 0
 
     # ------------------------------------------------------------------ init
 
@@ -108,6 +131,50 @@ class LatentKVCache:
             recent_k=jnp.zeros(ring, dtype), recent_v=jnp.zeros(ring, dtype),
             lengths=jnp.zeros((n_layers, batch), jnp.int32),
             n_groups=n_groups,
+        )
+
+    @classmethod
+    def init_paged(cls, cfg: ModelConfig, sals: SALSConfig, n_layers: int,
+                   batch: int, max_seq: int, n_pages: int, page_size: int,
+                   dtype=jnp.bfloat16, n_groups: int = 1) -> "LatentKVCache":
+        """Zero-initialized PAGED cache: per-token fields are page pools.
+
+        ``n_pages`` physical pages of ``page_size`` tokens back every
+        sequence; ``max_seq`` only sizes the per-row page TABLE
+        (``max_seq // page_size`` entries).  The host-side allocator
+        (``core/pager.PagePool``) owns which pages are live — this method
+        just shapes the device arrays.
+        """
+        if max_seq % page_size:
+            raise ValueError(f"max_seq {max_seq} must be a multiple of "
+                             f"page_size {page_size}")
+        if n_pages * page_size < max_seq:
+            raise ValueError(f"pool {n_pages}×{page_size} cannot hold one "
+                             f"max_seq {max_seq} sequence")
+        if n_groups > 1 and (max_seq // page_size) % n_groups:
+            raise ValueError(f"pages per sequence {max_seq // page_size} "
+                             f"must be divisible by n_groups {n_groups} "
+                             "(the grouped fold splits the page table)")
+        dense = cls.init(cfg, sals, n_layers, 1, page_size, dtype,
+                         n_groups=1)          # template: 1 page of rows
+        out = {}
+        for name in _PER_TOKEN_FIELDS:
+            a = getattr(dense, name)
+            if a is None:
+                out[name] = None
+                continue
+            # (L, 1, ps, ·) template -> (L, n_pages, ps, ·) pool
+            out[name] = jnp.zeros((n_layers, n_pages, *a.shape[2:]), a.dtype)
+        win = (n_layers, batch, sals.n_sink, cfg.n_kv_heads, cfg.head_dim)
+        ring = (n_layers, batch, sals.n_recent, cfg.n_kv_heads, cfg.head_dim)
+        return cls(
+            **out,
+            sink_k=jnp.zeros(win, dtype), sink_v=jnp.zeros(win, dtype),
+            recent_k=jnp.zeros(ring, dtype), recent_v=jnp.zeros(ring, dtype),
+            lengths=jnp.zeros((n_layers, batch), jnp.int32),
+            page_table=jnp.zeros((n_layers, batch, max_seq // page_size),
+                                 jnp.int32),
+            n_groups=n_groups, page_size=page_size,
         )
 
     @classmethod
@@ -216,6 +283,10 @@ class LatentKVCache:
         grouped kernels index group slabs of the flat arrays directly.
         Only valid on a single-layer view (use :meth:`layer_view` first).
         """
+        if self.paged:
+            raise ValueError("group_view is a dense-layout oracle; the "
+                             "paged grouped fold reshapes the page TABLE, "
+                             "not the pools (see sparse_attention)")
         if self.k_lat.ndim != 3:
             raise ValueError("group_view needs a single-layer cache "
                              f"(B, S, r); got k_lat {self.k_lat.shape} — "
@@ -261,17 +332,28 @@ class LatentKVCache:
         """Write one token's latent K + quantized V at ``pos`` (scalar or
         (B,) per-row; no ring update — see :meth:`write_ring`)."""
         pos_v = _row_positions(pos, k_lat.shape[0])
+        if self.paged:
+            # logical pos -> (physical page, in-page row); the page MUST
+            # already be mapped (the scheduler reserves pages ahead of the
+            # decode step — see RequestScheduler._ensure_pages)
+            pid = jnp.take_along_axis(
+                self.page_table, (pos_v // self.page_size)[:, None],
+                axis=1)[:, 0]                                    # (B,)
+            row = pos_v % self.page_size
+            upd = lambda arr, val: arr.at[pid, row].set(val.astype(arr.dtype))
+        else:
+            upd = lambda arr, val: _upd_rows(arr, val, pos_v)
         out = {}
         if sals.k_latent_dtype == "int8":
             q, scale = qz.quantize_latent_int8(k_lat)
-            out["k_lat"] = _upd_rows(self.k_lat, q, pos_v)
-            out["k_scale"] = _upd_rows(self.k_scale, scale, pos_v)
+            out["k_lat"] = upd(self.k_lat, q)
+            out["k_scale"] = upd(self.k_scale, scale)
         else:
-            out["k_lat"] = _upd_rows(self.k_lat, k_lat, pos_v)
+            out["k_lat"] = upd(self.k_lat, k_lat)
         vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
-        out["v_q"] = _upd_rows(self.v_q, vq["q"], pos_v)
-        out["v_scale"] = _upd_rows(self.v_scale, vq["scale"], pos_v)
-        out["v_zero"] = _upd_rows(self.v_zero, vq["zero"], pos_v)
+        out["v_q"] = upd(self.v_q, vq["q"])
+        out["v_scale"] = upd(self.v_scale, vq["scale"])
+        out["v_zero"] = upd(self.v_zero, vq["zero"])
         if self.lengths is not None:
             out["lengths"] = jnp.maximum(self.lengths, pos_v + 1)
         return self.replace(**out)
@@ -294,6 +376,10 @@ class LatentKVCache:
         position p >= lengths[b] could evict a real token from ring slot
         p % n_recent.  Per-slot ``lengths`` advance to min(lengths, off+C).
         """
+        if self.paged:
+            raise ValueError("append_chunk writes a DENSE single-request "
+                             "prefill cache; paged admission scatters its "
+                             "pages afterwards (ServeEngine._admit_paged)")
         b, c = k_pre.shape[:2]
         kvd = cfg.kv_dim
         len_v = jnp.asarray(lengths, jnp.int32)
@@ -383,6 +469,10 @@ class LatentKVCache:
         ``slot`` may be a traced scalar, so admission re-executes ONE
         compiled HLO regardless of which slot frees up.
         """
+        if self.paged:
+            raise ValueError("paged caches admit through the page-scatter "
+                             "path (ServeEngine._admit_paged), not slot "
+                             "row splices")
         ax = 1 if self.k_lat.ndim == 4 else 0
 
         def put(a, o):
@@ -392,17 +482,33 @@ class LatentKVCache:
         return jax.tree.map(put, self, other)
 
     def free_slot(self, slot) -> "LatentKVCache":
-        """Zero batch row ``slot`` (all regions + its length): the slot is
-        reusable by :meth:`prefill_into_slot` without touching any other
-        slot's bytes."""
-        ax = 1 if self.k_lat.ndim == 4 else 0
+        """Release batch row ``slot`` — METADATA ONLY (ISSUE 5).
 
-        def clr(a):
+        Resets the slot's length (and, paged, its page-table row); the
+        payload bytes are deliberately left in place — no O(max_seq)
+        zeroing.  Safety: per-slot ``lengths``/positions gate every read
+        (the top-k selectability mask and the window validity mask are
+        per-row position tests), and the next admission overwrites the
+        row's windows and either splices (dense) or page-scatters (paged)
+        fresh per-token data, so a recycled slot or page can never leak the
+        previous request's tokens into selection — pinned by
+        tests/test_paged.py::test_recycled_pages_never_leak_into_topk.
+        """
+        ax = 1 if self.k_lat.ndim == 4 else 0   # [L,] stacked vs layer view
+
+        def clr_meta(a):
+            if a is None:
+                return None
             row = jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
             return jax.lax.dynamic_update_slice_in_dim(
                 a, jnp.zeros_like(row), slot, axis=ax)
 
-        return jax.tree.map(clr, self)
+        out = {}
+        if self.lengths is not None:
+            out["lengths"] = clr_meta(self.lengths)
+        if self.page_table is not None:
+            out["page_table"] = clr_meta(self.page_table)
+        return self.replace(**out)
 
     # --------------------------------------------------------------- oracles
 
@@ -459,8 +565,9 @@ class LatentKVCache:
 jax.tree_util.register_dataclass(
     LatentKVCache,
     data_fields=["k_lat", "v_q", "v_scale", "v_zero", "sink_k", "sink_v",
-                 "recent_k", "recent_v", "k_scale", "ssm", "lengths"],
-    meta_fields=["n_groups", "shard_axis"])
+                 "recent_k", "recent_v", "k_scale", "ssm", "lengths",
+                 "page_table"],
+    meta_fields=["n_groups", "shard_axis", "page_size"])
 
 
 def cache_bytes_per_token(cfg: ModelConfig, sals: SALSConfig) -> float:

@@ -58,7 +58,8 @@ def latent_query(q_bar: jnp.ndarray, u: jnp.ndarray, r_star: int
 
 def topk_latent(q_bar: jnp.ndarray, u: jnp.ndarray, k_lat: jnp.ndarray,
                 k_scale, pos, sals: SALSConfig, r_star: int, *,
-                n_critical=None, pos_base=None, backend=None
+                n_critical=None, pos_base=None, page_table=None,
+                page_size=0, backend=None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused score→top-N_c over the RAW latent cache (decode hot path).
 
@@ -68,14 +69,34 @@ def topk_latent(q_bar: jnp.ndarray, u: jnp.ndarray, k_lat: jnp.ndarray,
     dispatch — no dense (B, S, r) dequant, slice, or pad copy is made.
     ``n_critical`` overrides the per-call budget (grouped layout uses the
     per-group quota); ``pos_base`` (B,) offsets each row's global
-    positions.  Returns (idx (B, N_c) int32, valid (B, N_c) bool).
+    positions; ``page_table``/``page_size``: paged layout (k_lat/k_scale
+    are page pools, idx stays logical).  Returns (idx (B, N_c) int32,
+    valid (B, N_c) bool).
     """
     from repro.kernels import ops
     q_lat = latent_query(q_bar, u, r_star)
     return ops.latent_topk(q_lat, k_lat, k_scale, pos,
                            n_critical=n_critical or sals.n_critical,
                            n_sink=sals.n_sink, n_recent=sals.n_recent,
-                           pos_base=pos_base, backend=backend)
+                           pos_base=pos_base, page_table=page_table,
+                           page_size=page_size, backend=backend)
+
+
+def sort_selected(idx: jnp.ndarray, valid: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reorder the selected set ascending-by-position, invalid slots last.
+
+    Softmax over a fixed set is order-free mathematically, so the decode
+    path is free to pick the accumulation order — ascending order buckets
+    the top-k indices by PAGE, which is what lets the paged reconstruct
+    kernel DMA each touched page exactly once (consecutive same-page grid
+    steps reuse the resident block).  Applied to BOTH layouts so paged and
+    dense decode accumulate in the same order and stay bit-identical.
+    """
+    big = jnp.iinfo(jnp.int32).max
+    order = jnp.argsort(jnp.where(valid, idx, big), axis=-1)
+    return (jnp.take_along_axis(idx, order, axis=-1),
+            jnp.take_along_axis(valid, order, axis=-1))
 
 
 def selectable_mask(seq_positions: jnp.ndarray, pos, sals: SALSConfig

@@ -80,6 +80,10 @@ def plan_decode(cache: LatentKVCache, backend: Optional[str] = None
     g = cache.n_groups
     if g <= 1:
         return DecodePlan(1, backend)
+    if cache.paged:
+        # paged pools are not kv_seq-sharded: grouped slabs always fold
+        # into the kernel batch axis (the page TABLE reshapes per slab)
+        return DecodePlan(g, backend)
     axes, total = mesh_axes_for(cache.shard_axis)
     if total == g:
         return DecodePlan(g, backend, axes)
@@ -146,37 +150,47 @@ def _global_partials(q0, q_bar, u, cache: LatentKVCache, pos,
     """Paper-faithful global top-N_c.  Returns (m, l, o) with a G=1 axis."""
     r_star = sals.score_rank(cfg.kv_dim)
     k_lat, k_scale = cache.latent_views()
-    k_lat = constrain(k_lat, ("batch", "kv_seq", None))
-    if k_scale is not None:
-        k_scale = constrain(k_scale, ("batch", "kv_seq"))
+    pt, ps = cache.page_table, cache.page_size
+    if not cache.paged:
+        k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+        if k_scale is not None:
+            k_scale = constrain(k_scale, ("batch", "kv_seq"))
     idx, valid = sel.topk_latent(q_bar, u, k_lat, k_scale, pos, sals, r_star,
+                                 page_table=pt, page_size=ps,
                                  backend=plan.backend)
+    # ascending-position order: page-bucketed DMA for the paged kernel,
+    # same accumulation order for BOTH layouts (paged == dense bit-exact)
+    idx, valid = sel.sort_selected(idx, valid)
     m, l, o = ops.sparse_recon_attention(
         q0, k_lat, k_scale, cache.v_q, cache.v_scale, cache.v_zero, u, idx,
         valid, pos, n_kv=cfg.n_kv_heads, v_bits=sals.v_bits,
         v_group=sals.v_group, theta=cfg.rope_theta,
         softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope,
-        backend=plan.backend)
+        page_table=pt, page_size=ps, backend=plan.backend)
     return m[:, None], l[:, None], o[:, None]
 
 
 def _slab_partials(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos,
                    base, cfg: ModelConfig, sals: SALSConfig, k_loc: int,
-                   backend):
+                   backend, page_table=None, page_size=0):
     """Fused top-k + recon-attend over sequence slabs (rows = slabs).
 
-    All per-token arrays are (N, S_loc, ...); ``pos`` is a scalar or (N,)
-    per-row decode positions; ``base`` (N,) holds each row's global
-    position offset.  Returns flash partials (N, H[, dh]).
+    All per-token arrays are (N, S_loc, ...) — or page pools with a
+    per-slab ``page_table`` — ``pos`` is a scalar or (N,) per-row decode
+    positions; ``base`` (N,) holds each row's global position offset.
+    Returns flash partials (N, H[, dh]).
     """
     idx, valid = ops.latent_topk(
         q_lat, k_lat, k_scale, pos, n_critical=k_loc, n_sink=sals.n_sink,
-        n_recent=sals.n_recent, pos_base=base, backend=backend)
+        n_recent=sals.n_recent, pos_base=base, page_table=page_table,
+        page_size=page_size, backend=backend)
+    idx, valid = sel.sort_selected(idx, valid)
     return ops.sparse_recon_attention(
         q0, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
         n_kv=cfg.n_kv_heads, v_bits=sals.v_bits, v_group=sals.v_group,
         theta=cfg.rope_theta, softcap=cfg.attn_logit_softcap,
-        use_rope=cfg.use_rope, pos_base=base, backend=backend)
+        use_rope=cfg.use_rope, pos_base=base, page_table=page_table,
+        page_size=page_size, backend=backend)
 
 
 def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
@@ -189,11 +203,34 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
     g = plan.n_groups
     r_star = sals.score_rank(cfg.kv_dim)
     k_lat, k_scale = cache.latent_views()
-    b, s, r = k_lat.shape
-    s_loc = s // g
     k_loc = -(-sals.n_critical // g)
     q_lat = sel.latent_query(q_bar, u, r_star)                  # (B, r*)
     h = q0.shape[1]
+
+    if cache.paged:
+        # paged grouped fold: the POOLS are physical (no slab structure) —
+        # only the page TABLE splits per slab.  Row (b, g) of the folded
+        # batch sees table row pt[b, g·mp/G:(g+1)·mp/G]: slab-local logical
+        # indices, global positions via pos_base, same kernels.
+        pt = cache.page_table                                   # (B, mp)
+        b, mp = pt.shape
+        ps = cache.page_size
+        s_loc = (mp // g) * ps
+        ptg = pt.reshape(b * g, mp // g)
+        base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+        qg = jnp.repeat(q0, g, axis=0)
+        qlg = jnp.repeat(q_lat, g, axis=0)
+        pos_g = jnp.repeat(jnp.broadcast_to(
+            jnp.asarray(pos, jnp.int32).reshape(-1), (b,)), g)
+        m, l, o = _slab_partials(qg, qlg, k_lat, k_scale, cache.v_q,
+                                 cache.v_scale, cache.v_zero, u, pos_g, base,
+                                 cfg, sals, k_loc, plan.backend,
+                                 page_table=ptg, page_size=ps)
+        return (m.reshape(b, g, h), l.reshape(b, g, h),
+                o.reshape(b, g, h, cfg.head_dim))
+
+    b, s, r = k_lat.shape
+    s_loc = s // g
 
     if plan.shard_axes:
         # shard-LOCAL slabs: each kv_seq shard scores + gathers its own slab

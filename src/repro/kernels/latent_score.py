@@ -33,6 +33,17 @@ the §4.5 traffic model's ``s·r*`` term is paid exactly once, streaming):
     layout folds the group axis into the batch axis, or runs per shard
     under shard_map) — emitted indices stay slab-LOCAL.
 
+    PAGED layout (ISSUE 5): with ``page_table`` ((B, max_pages) int32, an
+    additional scalar-prefetch operand) + ``page_size``, ``k_lat`` is the
+    physical page POOL ``(n_pages, page_size, r)`` and the kernel walks
+    row b's pages IN LOGICAL ORDER through a third grid axis (pages per
+    superblock): each step's BlockSpec index_map dereferences the table,
+    DMA-ing one whole page's leading r* columns; scores accumulate in a
+    VMEM scratch until the superblock (= the dense kernel's seq block) is
+    complete, then the SAME per-block extraction runs over it.  Candidate
+    count, ordering, and tie-breaks are identical to the dense layout —
+    paged selection is bit-for-bit the dense selection.
+
 Validated on CPU via ``interpret=True`` against ``ref.latent_score_ref`` /
 ``ref.latent_topk_ref``.
 """
@@ -172,6 +183,157 @@ def _topk_kernel_scaled(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref,
                         idx_ref, **kw):
     _topk_body(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
                **kw)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: page-table scalar-prefetch, pages walked in logical order
+# ---------------------------------------------------------------------------
+
+def _topk_paged_body(pt_ref, pos_ref, base_ref, q_ref, k_ref, scale_ref,
+                     vals_ref, idx_ref, sc_ref, *, ps: int, ppb: int, bs: int,
+                     s: int, kb: int, n_sink: int, n_recent: int):
+    """Grid (B, n_superblocks, pages_per_superblock).  Step (b, i, j) scores
+    ONE page (logical page i·ppb+j, physical page pt[b, ·]) into scratch row
+    j; the last page of a superblock runs the SAME max-extract loop the
+    dense kernel runs over its (1, bs) block — flat scratch column order ==
+    logical order, so candidates (values, indices, tie-breaks) are
+    bit-identical to the dense layout."""
+    b_, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)                      # (1, r*)
+    k = k_ref[0].astype(jnp.float32)                        # (ps, r*)
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, ps)
+    if scale_ref is not None:
+        scores = scores * scale_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    posn = i * bs + j * ps + col                            # logical position
+    pglob = posn + base_ref[b_]
+    pos = pos_ref[b_]
+    ok = (pglob >= n_sink) & (pglob <= pos - n_recent) & (posn < s)
+    pl.store(sc_ref, (pl.dslice(j, 1), pl.dslice(0, ps)),
+             jnp.where(ok, scores, NEG_INF))
+
+    @pl.when(j == ppb - 1)
+    def _extract():
+        sc0 = sc_ref[...]                                   # (ppb, ps)
+        fcol = (jax.lax.broadcasted_iota(jnp.int32, (ppb, ps), 0) * ps
+                + jax.lax.broadcasted_iota(jnp.int32, (ppb, ps), 1))
+
+        def extract(t, sc):
+            m = jnp.max(sc)
+            a = jnp.min(jnp.where(sc == m, fcol, bs))       # first argmax
+            vals_ref[0, 0, t] = m
+            idx_ref[0, 0, t] = i * bs + a
+            return jnp.where(fcol == a, -jnp.inf, sc)
+
+        jax.lax.fori_loop(0, kb, extract, sc0)
+
+
+def _topk_paged_plain(pt_ref, pos_ref, base_ref, q_ref, k_ref, vals_ref,
+                      idx_ref, sc_ref, **kw):
+    _topk_paged_body(pt_ref, pos_ref, base_ref, q_ref, k_ref, None, vals_ref,
+                     idx_ref, sc_ref, **kw)
+
+
+def _topk_paged_scaled(pt_ref, pos_ref, base_ref, q_ref, k_ref, scale_ref,
+                       vals_ref, idx_ref, sc_ref, **kw):
+    _topk_paged_body(pt_ref, pos_ref, base_ref, q_ref, k_ref, scale_ref,
+                     vals_ref, idx_ref, sc_ref, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_critical", "n_sink",
+                                             "n_recent", "block_s",
+                                             "page_size"))
+def latent_topk_paged_pallas(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                             k_scale: Optional[jnp.ndarray], pos, *,
+                             page_table: jnp.ndarray, page_size: int,
+                             n_critical: int, n_sink: int, n_recent: int,
+                             block_s: int = DEFAULT_BLOCK_S,
+                             pos_base: Optional[jnp.ndarray] = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paged twin of :func:`latent_topk_pallas`.
+
+    q_lat: (B, r*); k_lat: (n_pages, page_size, r) physical page POOL
+    (k_scale: (n_pages, page_size) or None); page_table: (B, max_pages)
+    int32 — an additional scalar-prefetch operand whose rows map logical to
+    physical pages (unmapped entries may hold anything: the per-row
+    position mask keeps garbage pages unselectable).  The logical sequence
+    extent is ``max_pages · page_size``.  Returns (idx, valid) with idx in
+    LOGICAL positions — bit-identical to the dense kernel on the same
+    logical contents.
+    """
+    b, r_star = q_lat.shape
+    ps = page_size
+    mp = page_table.shape[1]
+    s = mp * ps
+    bs = min(block_s, s)
+    if bs % ps:
+        raise ValueError(f"superblock {bs} must be a multiple of page_size "
+                         f"{ps} (page_size must divide "
+                         f"min(block_s={block_s}, max_seq={s}))")
+    ppb = bs // ps
+    nb, kb = topk_candidate_shape(s, n_critical, block_s)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    base_arr = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+    pt = page_table.astype(jnp.int32)
+
+    def page_of(b_, i, j, pt_):
+        # clamp: the rectangular grid may run past the table on a ragged
+        # last superblock; those positions are masked (posn >= s)
+        lp = jnp.minimum(i * ppb + j, mp - 1)
+        return jnp.clip(pt_[b_, lp], 0, k_lat.shape[0] - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, r_star), lambda b_, i, j, pt_, p, bb: (b_, 0)),
+        pl.BlockSpec((1, ps, r_star),
+                     lambda b_, i, j, pt_, p, bb: (page_of(b_, i, j, pt_),
+                                                   0, 0)),
+    ]
+    args = [q_lat, k_lat]
+    kw = dict(ps=ps, ppb=ppb, bs=bs, s=s, kb=kb, n_sink=n_sink,
+              n_recent=n_recent)
+    if k_scale is not None:
+        in_specs.append(pl.BlockSpec(
+            (1, ps), lambda b_, i, j, pt_, p, bb: (page_of(b_, i, j, pt_),
+                                                   0)))
+        args.append(k_scale)
+        kernel = functools.partial(_topk_paged_scaled, **kw)
+    else:
+        kernel = functools.partial(_topk_paged_plain, **kw)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, nb, ppb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, kb), lambda b_, i, j, pt_, p, bb: (b_, i, 0)),
+            pl.BlockSpec((1, 1, kb), lambda b_, i, j, pt_, p, bb: (b_, i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((ppb, ps), jnp.float32)],
+    )
+    cand_v, cand_i = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, kb), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, kb), jnp.int32),
+        ],
+        interpret=_interpret(),
+    )(pt, pos_arr, base_arr, *args)
+
+    cand_v = cand_v.reshape(b, nb * kb)
+    cand_i = cand_i.reshape(b, nb * kb)
+    if nb * kb < n_critical:                 # tiny caches: pad the candidates
+        pad = n_critical - nb * kb
+        cand_v = jnp.concatenate(
+            [cand_v, jnp.full((b, pad), NEG_INF, jnp.float32)], axis=1)
+        cand_i = jnp.concatenate(
+            [cand_i, jnp.zeros((b, pad), jnp.int32)], axis=1)
+    vals, top = jax.lax.top_k(cand_v, n_critical)
+    idx = jnp.take_along_axis(cand_i, top, axis=1)
+    return idx, vals > NEG_INF / 2
 
 
 @functools.partial(jax.jit, static_argnames=("n_critical", "n_sink",

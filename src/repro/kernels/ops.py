@@ -261,6 +261,7 @@ def latent_topk(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
                 k_scale: Optional[jnp.ndarray], pos, *, n_critical: int,
                 n_sink: int, n_recent: int,
                 pos_base: Optional[jnp.ndarray] = None,
+                page_table: Optional[jnp.ndarray] = None, page_size: int = 0,
                 backend: Optional[str] = None):
     """Fused scoring + top-N_c selection over the raw latent cache.
 
@@ -270,8 +271,25 @@ def latent_topk(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
     sequence slab with the same kernel (indices stay slab-local).  The
     Pallas path emits per-seq-block candidates so the final ``lax.top_k``
     runs over (B, nb·k) instead of (B, S); indices match the oracle exactly
-    (including tie-breaks)."""
+    (including tie-breaks).
+
+    PAGED layout: ``page_table`` (B, max_pages) + ``page_size`` make
+    ``k_lat``/``k_scale`` physical page pools; the Pallas path walks pages
+    through the table (scalar prefetch), the xla/naive path materializes
+    the logical view (oracle-only dense copy).  Returned idx is LOGICAL
+    and bit-identical to the dense layout."""
     backend = backend or _DEFAULT_BACKEND
+    if page_table is not None:
+        if backend == "pallas":
+            from repro.kernels import latent_score as ls
+            return ls.latent_topk_paged_pallas(
+                q_lat, k_lat, k_scale, pos, page_table=page_table,
+                page_size=page_size, n_critical=n_critical, n_sink=n_sink,
+                n_recent=n_recent, pos_base=pos_base)
+        return _ref.latent_topk_paged_ref(
+            q_lat, k_lat, k_scale, pos, page_table=page_table,
+            page_size=page_size, n_critical=n_critical, n_sink=n_sink,
+            n_recent=n_recent, pos_base=pos_base)
     if backend == "pallas":
         from repro.kernels import latent_score as ls
         return ls.latent_topk_pallas(q_lat, k_lat, k_scale, pos,
@@ -291,6 +309,8 @@ def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
                            v_group: int = 64, theta: float = 10_000.0,
                            softcap: float = 0.0, use_rope: bool = True,
                            pos_base: Optional[jnp.ndarray] = None,
+                           page_table: Optional[jnp.ndarray] = None,
+                           page_size: int = 0,
                            backend: Optional[str] = None):
     """Selected-token decode attention over the RAW cache arrays.
 
@@ -300,9 +320,25 @@ def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
     ``take_along_axis``.  ``q_pos`` is a scalar or (B,) per-row decode
     positions (ragged batches).  ``pos_base`` (B,) offsets each row's RoPE
     positions (grouped layout: idx is slab-local, position is
-    ``pos_base[b] + idx[b, n]``).  See ref.sparse_recon_attention_fused_ref
-    for the full contract."""
+    ``pos_base[b] + idx[b, n]``).  ``page_table``/``page_size``: paged
+    layout — cache operands are page pools, ``idx`` stays logical, the
+    Pallas path DMAs whole pages through the table (sorted idx → one DMA
+    per page touched).  See ref.sparse_recon_attention_fused_ref for the
+    full contract."""
     backend = backend or _DEFAULT_BACKEND
+    if page_table is not None:
+        if backend == "pallas":
+            from repro.kernels import sparse_recon_attention as sra
+            return sra.sparse_recon_attention_paged_pallas(
+                q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid,
+                q_pos, page_table=page_table, page_size=page_size,
+                n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
+                softcap=softcap, use_rope=use_rope, pos_base=pos_base)
+        return _ref.sparse_recon_attention_paged_ref(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+            page_table=page_table, page_size=page_size, n_kv=n_kv,
+            v_bits=v_bits, v_group=v_group, theta=theta, softcap=softcap,
+            use_rope=use_rope, pos_base=pos_base)
     if backend == "pallas":
         from repro.kernels import sparse_recon_attention as sra
         return sra.sparse_recon_attention_pallas(

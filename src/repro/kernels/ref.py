@@ -83,6 +83,51 @@ def latent_topk_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
     return idx.astype(jnp.int32), vals > NEG_INF / 2
 
 
+def paged_logical_view(pool: jnp.ndarray, page_table: jnp.ndarray,
+                       page_size: int) -> jnp.ndarray:
+    """ORACLE-ONLY: materialize the logical (B, S, ...) view of a paged
+    field.  pool: (n_pages, page_size, ...); page_table: (B, max_pages)
+    int32.  S = max_pages · page_size.  The Pallas paged kernels never
+    build this array — it exists so the paged layout can reuse every dense
+    oracle (and so the "xla" CPU backend has a correct fallback)."""
+    b, mp = page_table.shape
+    pages = jnp.take(pool, page_table.reshape(-1), axis=0)     # (B·mp, ps, ·)
+    return pages.reshape(b, mp * page_size, *pool.shape[2:])
+
+
+def latent_topk_paged_ref(q_lat: jnp.ndarray, k_lat: jnp.ndarray,
+                          k_scale, pos, *, page_table: jnp.ndarray,
+                          page_size: int, n_critical: int, n_sink: int,
+                          n_recent: int, pos_base=None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paged selection oracle: gather the logical view, run the dense
+    oracle.  Same tie-breaks, so it is the bit-exactness target for
+    ``latent_topk_paged_pallas``."""
+    k_log = paged_logical_view(k_lat, page_table, page_size)
+    ks_log = None if k_scale is None else \
+        paged_logical_view(k_scale, page_table, page_size)
+    return latent_topk_ref(q_lat, k_log, ks_log, pos, n_critical=n_critical,
+                           n_sink=n_sink, n_recent=n_recent,
+                           pos_base=pos_base)
+
+
+def sparse_recon_attention_paged_ref(
+        q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos, *,
+        page_table: jnp.ndarray, page_size: int, n_kv: int, v_bits: int = 8,
+        v_group: int = 64, theta: float = 10_000.0, softcap: float = 0.0,
+        use_rope: bool = True, pos_base=None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged fused-attention oracle: gather logical views, delegate.  The
+    cache operands are page pools; ``idx`` stays logical."""
+    view = lambda a: None if a is None else \
+        paged_logical_view(a, page_table, page_size)
+    return sparse_recon_attention_fused_ref(
+        q, view(k_lat), view(k_scale), view(v_q), view(v_scale),
+        view(v_zero), u, idx, valid, q_pos, n_kv=n_kv, v_bits=v_bits,
+        v_group=v_group, theta=theta, softcap=softcap, use_rope=use_rope,
+        pos_base=pos_base)
+
+
 def dequantize_values_ref(code: jnp.ndarray, scale: jnp.ndarray,
                           zero: jnp.ndarray, v_bits: int, v_group: int
                           ) -> jnp.ndarray:

@@ -152,6 +152,212 @@ def _fused_kernel_scaled(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
                 o_ref, m_s, l_s, acc_s, q_s, **kw)
 
 
+# ---------------------------------------------------------------------------
+# paged variant (ISSUE 5): whole-page DMA, page table as scalar prefetch
+# ---------------------------------------------------------------------------
+
+def _fused_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref, q_ref,
+                      lat_ref, kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                      m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, *,
+                      n_kv: int, group: int, theta: float, softcap: float,
+                      use_rope: bool, nc: int, v_bits: int, v_group: int,
+                      ps: int):
+    """Identical math to :func:`_fused_step`, but each cache operand's block
+    is ONE WHOLE PAGE (``(1, ps, ·)``, physical page dereferenced from the
+    prefetched page table) and the kernel picks its token's in-page row.
+    With the selected indices sorted ascending (sparse_attention sorts the
+    top-k set before both layouts), consecutive grid steps that land on the
+    same page keep the same block index, so Pallas elides the re-DMA — the
+    page is fetched once per *page touched*, not once per token (the
+    ROADMAP page>1 open item)."""
+    b_, n_ = pl.program_id(0), pl.program_id(1)
+    h, dh = q_ref.shape[1], q_ref.shape[2]
+
+    @pl.when(n_ == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        q32 = q_ref[0].astype(jnp.float32)                  # (H, dh)
+        q_s[...] = _rope_one(q32, qpos_ref[b_], theta) if use_rope else q32
+
+    row = jax.lax.rem(idx_ref[b_, n_], ps)                  # in-page row
+    # ---- 1. dequantize latent (one row of the DMA'd page) -----------------
+    lat = jax.lax.dynamic_slice(lat_ref[0], (row, 0), (1, lat_ref.shape[2])) \
+        .astype(jnp.float32)                                # (1, r)
+    if kscale_ref is not None:
+        sc = jax.lax.dynamic_slice(kscale_ref[0], (row,), (1,))
+        lat = lat * sc.astype(jnp.float32)
+
+    # ---- 2. reconstruct: k = lat · Uᵀ --------------------------------------
+    k_flat = jax.lax.dot_general(
+        lat, u_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, kvd)
+    k_pre = k_flat.reshape(n_kv, dh)
+
+    # ---- 3. RoPE at the LOGICAL position (idx is logical) ------------------
+    pos = idx_ref[b_, n_] + base_ref[b_]
+    k_r = _rope_one(k_pre, pos, theta) if use_rope else k_pre
+
+    # ---- 4. GQA score vs the cached RoPE'd query ---------------------------
+    q_g = q_s[...].reshape(n_kv, group, dh)
+    logits = jnp.sum(q_g * k_r[:, None, :], axis=-1)
+    logits = logits.reshape(h) * (dh ** -0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(valid_ref[b_, n_] != 0, logits, NEG_INF)
+
+    # ---- 5. dequant value + online-softmax accumulate ----------------------
+    code = jax.lax.dynamic_slice(
+        vq_ref[0], (row, 0), (1, vq_ref.shape[2]))[0]
+    vsc = jax.lax.dynamic_slice(vs_ref[0], (row, 0), (1, vs_ref.shape[2]))[0]
+    vzr = jax.lax.dynamic_slice(vz_ref[0], (row, 0), (1, vz_ref.shape[2]))[0]
+    v_tok = _dequant_token(code, vsc, vzr, v_bits, v_group).reshape(n_kv, dh)
+    m_prev = m_s[:, 0]
+    m_new = jnp.maximum(m_prev, logits)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, jnp.exp(logits - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[:, 0] = l_s[:, 0] * alpha + p
+    p_g = p.reshape(n_kv, group)
+    acc_s[...] = acc_s[...] * alpha[:, None] \
+        + (p_g[:, :, None] * v_tok[:, None, :]).reshape(h, dh)
+    m_s[:, 0] = m_new
+
+    @pl.when(n_ == nc - 1)
+    def _finish():
+        m_ref[0] = m_s[:, 0]
+        l_ref[0] = l_s[:, 0]
+        o_ref[0] = acc_s[...]
+
+
+def _fused_paged_plain(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref, q_ref,
+                       lat_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                       o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref, q_ref,
+                      lat_ref, None, vq_ref, vs_ref, vz_ref, u_ref, m_ref,
+                      l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw)
+
+
+def _fused_paged_scaled(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref, q_ref,
+                        lat_ref, kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                        m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref, q_ref,
+                      lat_ref, kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                      m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "v_bits", "v_group",
+                                             "theta", "softcap", "use_rope",
+                                             "page_size"))
+def sparse_recon_attention_paged_pallas(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        page_table: jnp.ndarray, page_size: int,
+        n_kv: int, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged twin of :func:`sparse_recon_attention_pallas`.
+
+    Cache operands are physical page pools (``k_lat (n_pages, ps, r)``,
+    ``v_q (n_pages, ps, code_w)``, ...); ``idx`` holds LOGICAL positions;
+    ``page_table`` (B, max_pages) rides as a 5th scalar-prefetch operand
+    and every cache index_map resolves page ``idx // ps`` through it.  One
+    grid step still processes one selected token, but the DMA unit is the
+    whole page — sorted indices make consecutive same-page steps reuse the
+    resident block (no re-DMA), so the selected-token HBM traffic is per
+    page touched.  Bit-identical to the dense kernel given the same idx
+    order (per-token math is unchanged).
+    """
+    b, h, dh = q.shape
+    ps = page_size
+    mp = page_table.shape[1]
+    nc = idx.shape[1]
+    group = h // n_kv
+    r = k_lat.shape[2]
+    code_w = v_q.shape[2]
+    g = v_scale.shape[2]
+    kvd = u.shape[0]
+
+    idx_i = idx.astype(jnp.int32)
+    valid_i = valid.astype(jnp.int32)
+    qpos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    base_b = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+    pt = page_table.astype(jnp.int32)
+
+    def page_of(b_, n_, i_, pt_):
+        lp = jnp.minimum(i_[b_, n_] // ps, mp - 1)   # invalid idx: clamp
+        return jnp.clip(pt_[b_, lp], 0, k_lat.shape[0] - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, h, dh),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0)),
+        pl.BlockSpec((1, ps, r),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+    ]
+    args = [q, k_lat]
+    kw = dict(n_kv=n_kv, group=group, theta=theta, softcap=softcap,
+              use_rope=use_rope, nc=nc, v_bits=v_bits, v_group=v_group,
+              ps=ps)
+    if k_scale is not None:
+        in_specs.append(
+            pl.BlockSpec((1, ps),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_:
+                         (page_of(b_, n_, i_, pt_), 0)))
+        args.append(k_scale)
+        kernel = functools.partial(_fused_paged_scaled, **kw)
+    else:
+        kernel = functools.partial(_fused_paged_plain, **kw)
+    in_specs += [
+        pl.BlockSpec((1, ps, code_w),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((1, ps, g),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((1, ps, g),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((kvd, r),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_: (0, 0)),
+    ]
+    args += [v_q, v_scale, v_zero, u]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, h),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0)),
+            pl.BlockSpec((1, h),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0)),
+            pl.BlockSpec((1, h, dh),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(idx_i, valid_i, qpos_b, base_b, pt, *args)
+    return m, l, o
+
+
 @functools.partial(jax.jit, static_argnames=("n_kv", "v_bits", "v_group",
                                              "theta", "softcap", "use_rope"))
 def sparse_recon_attention_pallas(

@@ -94,6 +94,21 @@ def main() -> None:
                     help="prefill tokens the continuous scheduler spends "
                          "between decode steps (bounds resident inter-token "
                          "latency while long prompts are admitted)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged latent cache (ISSUE 5): tokens per physical "
+                         "page; 0 = dense slot arena.  Must divide "
+                         "--max-seq and be a multiple of --prefill-chunk; "
+                         "admission reserves pages, same-prefix prompts "
+                         "share them copy-on-write")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool size (0 = auto: max-batch·max-seq/"
+                         "page-size, the dense-equivalent capacity; smaller "
+                         "pools admit on pages-available and evict-to-"
+                         "requeue on exhaustion)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false", default=True,
+                    help="disable COW prefix sharing (paged mode): every "
+                         "request prefills and stores its full prompt")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
@@ -128,12 +143,21 @@ def main() -> None:
         print(f"[serve] calibrated projectors in {time.time()-t0:.1f}s "
               f"(rank {sals.rank(cfg.kv_dim)}/{cfg.kv_dim})")
 
+    if args.page_size and (sals is None or not cfg.has_attention):
+        raise SystemExit("--page-size needs SALS latent segments "
+                         "(--sals 0.25|0.125 on an attention family)")
+    # ServeConfig.__post_init__ validates the paging geometry at PARSE time
+    # (max_seq % page_size, page_size % prefill_chunk, pool ≥ one max-seq
+    # sequence) so misconfigurations fail here with a clear message instead
+    # of as shape errors inside jit
     scfg = ServeConfig(max_seq_len=args.max_seq, max_batch=args.max_batch,
                        max_new_tokens=args.max_new_tokens,
                        temperature=args.temperature,
                        scheduler=args.scheduler,
                        prefill_chunk=args.prefill_chunk,
                        prefill_token_budget=args.prefill_budget,
+                       page_size=args.page_size, n_pages=args.n_pages,
+                       prefix_cache=args.prefix_cache,
                        sals=sals or SALSConfig(enabled=False))
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility
@@ -152,6 +176,14 @@ def main() -> None:
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"-> {total_new / dt:.1f} tok/s "
           f"(sals={args.sals}, arch={args.arch}, scheduler={sched.mode})")
+    if sched.paged:
+        hw = max((g["pages_in_use"] for g in sched.pool_gauges), default=0)
+        print(f"[serve] paged pool: {sched.pool.n_pages - 1} pages × "
+              f"{args.page_size} tokens, high-water {hw} pages, "
+              f"prefix_hits={sched.prefix_hits} "
+              f"cow_copies={sched.cow_copies} "
+              f"stalls={sched.admission_stalls} "
+              f"evictions={sched.evictions}")
     for r in done[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")

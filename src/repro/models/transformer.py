@@ -304,12 +304,20 @@ def forward_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
-               max_seq: int, dtype=None, n_groups: int = 1) -> dict:
+               max_seq: int, dtype=None, n_groups: int = 1,
+               page_size: int = 0, n_pages: int = 0) -> dict:
     """``n_groups`` is the SALS decode selection layout (see LatentKVCache):
-    it rides as static metadata on the latent segments."""
+    it rides as static metadata on the latent segments.  ``page_size`` > 0
+    backs the SALS segments with ``n_pages`` physical pages instead of the
+    dense ``(B, max_seq, ·)`` slot arena (ISSUE 5; full-precision segments
+    keep their dense per-slot cache — the paged pool holds the compressed
+    latent fields, which dominate steady-state HBM)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     if not cfg.is_decoder:
         raise ValueError("encoder family has no decode cache")
+    if page_size and cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"{cfg.family} state is recurrent — the paged "
+                         "latent cache needs an attention family")
     segs = segment_plan(cfg, sals)
     cache: Dict[str, Any] = {}
     for si, (i0, i1, mode) in enumerate(segs):
@@ -321,6 +329,10 @@ def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
             kv = attn.init_full_cache(cfg, batch, max_seq, dtype)
             seg = {k: jnp.zeros((ls, *v.shape), v.dtype)
                    for k, v in kv.items()}
+        elif page_size:
+            seg = lc.LatentKVCache.init_paged(
+                cfg, sals, ls, batch, max_seq, n_pages, page_size, dtype,
+                n_groups=n_groups)
         else:
             seg = lc.LatentKVCache.init(cfg, sals, ls, batch, max_seq, dtype,
                                         n_groups=n_groups)

@@ -74,6 +74,10 @@ class PrefillTask:
     n_chunks: int
     next_chunk: int = 0
     logits: Optional[jnp.ndarray] = None
+    start_chunk: int = 0         # >0: prefix-cache resume (shared pages
+    #                              skipped — chunks [0, start_chunk) were
+    #                              paid for once, by the prefix registrant)
+    boundary_rings: Optional[dict] = None  # {n_pages -> SALS ring snapshot}
 
     @property
     def done(self) -> bool:
@@ -109,13 +113,56 @@ class ServeEngine:
                 raise ValueError(
                     f"max_seq_len {scfg.max_seq_len} must be a multiple of "
                     f"prefill_chunk {scfg.prefill_chunk}")
+        if scfg.page_size > 0 and self.sals is None:
+            # refuse rather than silently fall back to the dense arena:
+            # the caller configured a page pool (capacity bound, prefix
+            # cache) that would otherwise be ignored without a message
+            raise ValueError("page_size > 0 needs SALS latent segments "
+                             "(sals enabled on an attention family) — the "
+                             "page pool backs the compressed cache")
+        if self.paged:
+            if not self.ragged_ok:
+                raise ValueError(f"{cfg.family} state is recurrent — the "
+                                 "paged latent cache needs chunked prefill "
+                                 "(attention families)")
+            from repro.kernels.latent_score import DEFAULT_BLOCK_S
+            bs = min(DEFAULT_BLOCK_S, scfg.max_seq_len)
+            if bs % scfg.page_size:
+                # the paged score kernel walks pages_per_superblock grid
+                # steps per seq block — catch the geometry HERE, not as a
+                # ValueError inside the first jitted decode step
+                raise ValueError(
+                    f"page_size {scfg.page_size} must divide the score "
+                    f"kernel's seq block min(block_s={DEFAULT_BLOCK_S}, "
+                    f"max_seq_len={scfg.max_seq_len}) = {bs}")
+            mp = scfg.max_seq_len // scfg.page_size
+            if n_groups > 1 and mp % n_groups:
+                raise ValueError(
+                    f"pages per sequence {mp} must be divisible by "
+                    f"n_groups {n_groups} (the grouped fold splits the "
+                    "page table per slab)")
+            if scfg.pool_pages * scfg.page_size < scfg.max_seq_len:
+                raise ValueError(
+                    f"pool of {scfg.pool_pages} pages cannot hold one "
+                    f"max_seq_len {scfg.max_seq_len} sequence")
         self._prefill = jax.jit(self._prefill_impl)
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
                                       donate_argnums=(1, 2))
         self._init_prefill = jax.jit(self._init_prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._admit_paged = jax.jit(self._admit_paged_impl,
+                                    donate_argnums=(0,))
+        self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
+        self._release_slot = jax.jit(self._release_slot_impl,
+                                     donate_argnums=(0,))
         self._init_slots = jax.jit(self._init_slots_impl)
+
+    @property
+    def paged(self) -> bool:
+        """Paged latent cache active (ISSUE 5): SALS segments backed by the
+        refcounted page pool instead of the dense slot arena."""
+        return self.sals is not None and self.scfg.page_size > 0
 
     @property
     def ragged_ok(self) -> bool:
@@ -163,8 +210,147 @@ class ServeEngine:
         return {k: splice(seg, one[k]) for k, seg in cache.items()}
 
     def _init_slots_impl(self):
+        # +1: physical page 0 is the reserved TRASH page (unmapped table
+        # entries and idle-slot parked writes land there — see core/pager)
+        page_size = self.scfg.page_size if self.paged else 0
         return tf.init_cache(self.cfg, self.sals, self.scfg.max_batch,
-                             self.scfg.max_seq_len, n_groups=self.n_groups)
+                             self.scfg.max_seq_len, n_groups=self.n_groups,
+                             page_size=page_size,
+                             n_pages=self.scfg.pool_pages + 1)
+
+    # -- paged-cache device ops (host bookkeeping lives in core/pager.py) ----
+
+    def _latent_segs(self, cache):
+        return {k: seg for k, seg in cache.items()
+                if isinstance(seg, LatentKVCache)}
+
+    def _admit_paged_impl(self, cache, one, slot, pt_row, start_page, plen):
+        """Splice a finished single-request prefill into the PAGED arena.
+
+        ``one`` is the task's DENSE single-request cache; its SALS
+        per-token rows for pages [start_page, ceil(plen/ps)) are scattered
+        into the pool pages named by ``pt_row`` (shared prefix pages
+        [0, start_page) are NOT written — their bytes already live in the
+        pool, stored once).  Windows/lengths splice per slot as in the
+        dense arena; the slot's page-table row is installed.  ``slot``,
+        ``start_page`` and ``plen`` are traced — one compiled admission
+        HLO for every slot / prompt length / share depth.
+        """
+        ps = self.scfg.page_size
+        mp = self.scfg.max_seq_len // ps
+        n_pages = self.scfg.pool_pages + 1     # device pool incl. trash page
+        n_req_pages = (plen + ps - 1) // ps
+        page_idx = jnp.arange(mp)
+        # out-of-range target -> OOB -> mode="drop": pages outside
+        # [start_page, n_req_pages) must not touch the pool (their pt_row
+        # entries are unallocated or SHARED)
+        tgt = jnp.where((page_idx >= start_page) & (page_idx < n_req_pages),
+                        pt_row[:mp], n_pages)
+
+        def splice(seg, one_seg):
+            if isinstance(seg, LatentKVCache):
+                out = {}
+                for name in ("k_lat", "k_scale", "v_q", "v_scale", "v_zero"):
+                    pool = getattr(seg, name)
+                    dense = getattr(one_seg, name)
+                    if pool is None:
+                        continue
+                    ls = dense.shape[0]
+                    vals = dense.reshape(ls, mp, ps, *dense.shape[3:])
+                    out[name] = pool.at[:, tgt].set(
+                        vals.astype(pool.dtype), mode="drop")
+                for name in ("sink_k", "sink_v", "recent_k", "recent_v"):
+                    arr = getattr(seg, name)
+                    out[name] = jax.lax.dynamic_update_slice_in_dim(
+                        arr, getattr(one_seg, name).astype(arr.dtype), slot,
+                        axis=1)
+                out["lengths"] = jax.lax.dynamic_update_slice_in_dim(
+                    seg.lengths, jnp.broadcast_to(
+                        jnp.int32(plen), (seg.lengths.shape[0], 1)),
+                    slot, axis=1)
+                row = jnp.broadcast_to(pt_row[None, None, :mp],
+                                       (seg.page_table.shape[0], 1, mp))
+                out["page_table"] = jax.lax.dynamic_update_slice(
+                    seg.page_table, row, (0, slot, 0))
+                return seg.replace(**out)
+            return jax.tree.map(
+                lambda a, o: jax.lax.dynamic_update_slice_in_dim(
+                    a, o.astype(a.dtype), slot, axis=1),
+                seg, one_seg)
+
+        return {k: splice(seg, one[k]) for k, seg in cache.items()}
+
+    def _copy_page_impl(self, cache, src, dst):
+        """Copy-on-write worker: duplicate physical page ``src`` into
+        ``dst`` across every SALS segment/layer (windows are per-slot, not
+        paged).  Traced page ids — one compiled HLO."""
+        def cow(seg):
+            if not isinstance(seg, LatentKVCache):
+                return seg
+            out = {}
+            for name in ("k_lat", "k_scale", "v_q", "v_scale", "v_zero"):
+                pool = getattr(seg, name)
+                if pool is None:
+                    continue
+                row = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    pool, row, dst, axis=1)
+            return seg.replace(**out)
+
+        return {k: cow(seg) for k, seg in cache.items()}
+
+    def _release_slot_impl(self, cache, slot):
+        """Metadata-only slot release: per-slot lengths (+ page-table row)
+        reset; NO payload zeroing (ISSUE 5 — freeing is O(1), and per-row
+        position masks keep recycled bytes unselectable)."""
+        def rel(seg):
+            if isinstance(seg, LatentKVCache):
+                return seg.free_slot(slot)
+            return seg
+        return {k: rel(seg) for k, seg in cache.items()}
+
+    def with_page_tables(self, cache, table: np.ndarray):
+        """Install the host page table ((B, max_pages) int32) into every
+        SALS segment (broadcast over its layer axis).  Pure leaf swap — no
+        jit, no copy of the pools."""
+        row = jnp.asarray(table, jnp.int32)
+
+        def upd(seg):
+            if isinstance(seg, LatentKVCache) and seg.paged:
+                ls = seg.page_table.shape[0]
+                return seg.replace(page_table=jnp.broadcast_to(
+                    row[None], (ls, *row.shape)))
+            return seg
+        return {k: upd(seg) for k, seg in cache.items()}
+
+    def sals_ring_state(self, cache) -> dict:
+        """Deep-copied (recent_k, recent_v) of every SALS segment — the
+        page-boundary snapshot a prefix-cache entry stores (the ring is the
+        one non-append-only piece of prefill state).  Copies are explicit:
+        the next chunk step DONATES the cache, which would invalidate bare
+        references."""
+        return {k: (jnp.copy(seg.recent_k), jnp.copy(seg.recent_v))
+                for k, seg in self._latent_segs(cache).items()}
+
+    def resume_seed(self, entry, n_shared_pages: int):
+        """Build (cache, scratch) to resume a chunked prefill at page
+        boundary ``n_shared_pages`` from a prefix-cache entry.
+
+        Everything append-only (latent rows, sink, scratch K/V, full-layer
+        K/V) is taken from the entry's final state — positions >= the
+        resume offset are either masked (history reads test ``< off``) or
+        overwritten by the suffix chunks.  The ring is restored from the
+        entry's snapshot AT the boundary.  Deep copies throughout: the
+        chunk loop donates its cache/scratch, and the entry must outlive
+        this request.
+        """
+        cache = jax.tree.map(jnp.copy, entry.cache)
+        scratch = jax.tree.map(jnp.copy, entry.scratch)
+        rings = entry.boundary_rings[n_shared_pages]
+        for name, (rk, rv) in rings.items():
+            cache[name] = cache[name].replace(recent_k=jnp.copy(rk),
+                                              recent_v=jnp.copy(rv))
+        return cache, scratch
 
     # -- sampling ------------------------------------------------------------
 
@@ -180,13 +366,22 @@ class ServeEngine:
         """Zeroed slot-arena decode cache with ``max_batch`` slots."""
         return self._init_slots()
 
-    def start_prefill(self, prompt: np.ndarray) -> PrefillTask:
+    def start_prefill(self, prompt: np.ndarray,
+                      resume: Optional[Tuple] = None) -> PrefillTask:
         """Begin a chunked prefill for ONE request.
 
         The prompt is right-padded to a whole number of ``prefill_chunk``
         tokens; every :meth:`prefill_chunk_step` then re-executes the SAME
         compiled chunk HLO (fixed (1, chunk) shape, traced offset) — no
         per-length buckets, no recompiles across heterogeneous prompts.
+
+        ``resume`` (paged mode, prefix-cache hit): ``(entry,
+        n_shared_pages)`` — the task's cache/scratch are seeded from the
+        entry (:meth:`resume_seed`) and the chunk loop starts at the page
+        boundary: only the SUFFIX chunks run.  The page boundary is
+        chunk-aligned by config validation, so the suffix chunks execute
+        the exact same HLO sequence an unshared run would execute from
+        that offset — greedy outputs are identical.
         """
         if not self.ragged_ok:
             raise ValueError(f"{self.cfg.family} prefill is recurrent — "
@@ -200,6 +395,16 @@ class ServeEngine:
         n = max(1, -(-plen // c))
         toks = np.full((1, n * c), self.scfg.pad_id, np.int32)
         toks[0, :plen] = prompt
+        if resume is not None:
+            entry, n_shared = resume
+            start = n_shared * self.scfg.page_size // c
+            if not 0 < start < n:
+                raise ValueError(f"resume boundary {n_shared} pages does "
+                                 f"not leave a suffix chunk (prompt {plen})")
+            cache, scratch = self.resume_seed(entry, n_shared)
+            return PrefillTask(tokens=toks, prompt_len=plen, cache=cache,
+                               scratch=scratch, n_chunks=n,
+                               next_chunk=start, start_chunk=start)
         cache, scratch = self._init_prefill()
         return PrefillTask(tokens=toks, prompt_len=plen, cache=cache,
                            scratch=scratch, n_chunks=n)
@@ -215,6 +420,22 @@ class ServeEngine:
             chunk, task.cache, task.scratch, jnp.int32(j * c),
             jnp.asarray([task.prompt_len], jnp.int32))
         task.next_chunk += 1
+        if self.paged and self.scfg.prefix_cache:
+            # page-boundary ring snapshot: the resume state a prefix-cache
+            # entry needs (everything else about prefill is append-only).
+            # Bounded to the first prefix_share_pages boundaries — shared
+            # prefixes are prompt HEADS (system prompts), and each
+            # snapshot is a deep copy (the next chunk step donates the
+            # cache), so the cap is what keeps per-task snapshot bytes
+            # independent of prompt length.
+            ps = self.scfg.page_size
+            off_end = task.next_chunk * c
+            if off_end % ps == 0 and off_end <= task.prompt_len \
+                    and off_end // ps <= self.scfg.prefix_share_pages:
+                if task.boundary_rings is None:
+                    task.boundary_rings = {}
+                task.boundary_rings[off_end // ps] = \
+                    self.sals_ring_state(task.cache)
         return task.done
 
     def prefill_one(self, prompt: np.ndarray) -> Tuple[jnp.ndarray, dict]:
@@ -231,6 +452,27 @@ class ServeEngine:
         """Splice a prefilled single-request cache into batch row ``slot``
         of a running slot arena (same compiled HLO for every slot)."""
         return self._admit(cache, one_cache, jnp.int32(slot))
+
+    def admit_paged(self, cache, one_cache, slot: int, page_ids, start_page:
+                    int, prompt_len: int):
+        """Paged admission: scatter the task's pages [start_page, ·) into
+        the pool pages ``page_ids`` (host list, padded to a table row) and
+        install the slot's metadata.  Shared prefix pages are never
+        rewritten."""
+        mp = self.scfg.max_seq_len // self.scfg.page_size
+        row = np.zeros((mp,), np.int32)
+        row[:len(page_ids)] = page_ids
+        return self._admit_paged(cache, one_cache, jnp.int32(slot),
+                                 jnp.asarray(row), jnp.int32(start_page),
+                                 jnp.int32(prompt_len))
+
+    def copy_page(self, cache, src: int, dst: int):
+        """Device half of copy-on-write: duplicate pool page src -> dst."""
+        return self._copy_page(cache, jnp.int32(src), jnp.int32(dst))
+
+    def release_slot(self, cache, slot: int):
+        """Metadata-only slot free (paged): lengths + page-table row."""
+        return self._release_slot(cache, jnp.int32(slot))
 
     # -- public API ----------------------------------------------------------
 

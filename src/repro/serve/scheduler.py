@@ -17,6 +17,33 @@ a finished request's slot is recycled immediately, and the jitted decode /
 chunk / splice HLOs are each compiled once and reused across all
 admissions — no recompiles, no cache compaction, no drain barrier.
 
+PAGED mode (ISSUE 5, ``ServeConfig.page_size > 0``): the SALS segments'
+backing store is a refcounted page pool (``core/pager.py``) instead of the
+dense slot arena, and this scheduler is its MEMORY MANAGER:
+
+  * admission is a PAGE RESERVATION — a request is admitted when the pool
+    has pages for its prompt (suffix), not when a slot index frees up; on
+    shortfall it stalls at the head of the queue (``admission_stalls``)
+    until residents release pages, after LRU prefix-cache entries have
+    been evicted;
+  * prompts sharing a registered prefix map their leading page-table
+    entries to the SAME physical pages (refcount bump, ``prefix_hits``)
+    and resume their chunked prefill at the page boundary — N concurrent
+    same-system-prompt requests cost one prefill and one stored copy of
+    the prefix;
+  * decode growth allocates one page per ``page_size`` generated tokens;
+    a write landing on a still-shared page triggers copy-on-write
+    (``cow_copies``) — structurally the cache is append-only and sharing
+    is whole-page, so this is a guarded safety net, not a hot path;
+  * pool exhaustion mid-decode evicts the resident that could not map its
+    write page back onto the queue (``evictions``; greedy decoding makes
+    the re-run deterministic).  SELF-eviction is the anti-livelock policy:
+    survivors keep every page they own, so at least one resident always
+    runs to completion between evictions — no steal-back ping-pong;
+  * every decode step appends a gauge row to ``pool_gauges``
+    (pages_in_use / pages_free / cumulative counters) — the capacity
+    ledger tests and benchmarks read.
+
 "static" mode survives as the GPT-fast-style baseline (and the fallback for
 recurrent-state families, whose prefill can neither right-pad nor chunk):
 fixed-size batches, length-bucketed FIFO, monolithic prefill →
@@ -28,12 +55,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.pager import PagePool, PageTable, PrefixIndex
 from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
 
 _req_ids = itertools.count()
@@ -60,10 +89,18 @@ class _Slot:
 
 @dataclasses.dataclass
 class _Admission:
-    """Head-of-queue request being chunk-prefilled into a reserved slot."""
+    """Head-of-queue request being chunk-prefilled into a reserved slot.
+
+    Paged mode: ``ptab`` holds the request's reserved page table (shared
+    prefix pages + fresh suffix pages — the reservation IS the admission
+    criterion) and ``shared_pages`` how many leading pages came from a
+    prefix-cache entry (``entry``)."""
     req: Request
     slot: int
     task: PrefillTask
+    ptab: Optional[PageTable] = None
+    shared_pages: int = 0
+    entry: object = None
 
 
 class RequestScheduler:
@@ -89,6 +126,10 @@ class RequestScheduler:
             raise ValueError(f"unknown scheduler mode {mode!r}")
         if not engine.ragged_ok:
             mode = "static"        # recurrent state can't right-pad or chunk
+        if engine.paged and mode != "continuous":
+            raise ValueError("the paged latent cache requires the "
+                             "continuous scheduler (admission = page "
+                             "reservation)")
         self.mode = mode
         self.pending: List[Request] = []
         self.completed: Dict[int, Request] = {}
@@ -96,6 +137,25 @@ class RequestScheduler:
         # (step, req_id, chunk_idx, n_resident) — see class docstring
         self.prefill_chunks: List[tuple] = []
         self.steps: int = 0                     # decode steps executed
+        # --- paged-pool observability (ISSUE 5 satellite) ------------------
+        # one gauge row per decode step: the capacity ledger for tests +
+        # benchmarks (pages_in_use ≈ prefix + Σ unique suffixes under
+        # prefix sharing, high-water = peak live tokens, ...)
+        self.pool_gauges: List[dict] = []
+        self.prefix_hits: int = 0               # admissions reusing pages
+        self.cow_copies: int = 0                # copy-on-write page dups
+        self.admission_stalls: int = 0          # sweeps blocked on pages
+        self.evictions: int = 0                 # evict-to-requeue events
+        self.paged = engine.paged and mode == "continuous"
+        self.pool: Optional[PagePool] = None
+        self.prefix_index: Optional[PrefixIndex] = None
+        if self.paged:
+            scfg = engine.scfg
+            # +1 / n_reserved=1: physical page 0 is the trash page
+            self.pool = PagePool(scfg.pool_pages + 1, scfg.page_size,
+                                 n_reserved=1)
+            if scfg.prefix_cache:
+                self.prefix_index = PrefixIndex(self.pool)
 
     def submit(self, req: Request) -> int:
         if req.max_new_tokens < 1:
@@ -108,6 +168,13 @@ class RequestScheduler:
                 f"req {req.req_id}: prompt {len(req.prompt)} + new "
                 f"{req.max_new_tokens} exceeds max_seq "
                 f"{self.engine.scfg.max_seq_len}")
+        if self.paged:
+            ps = self.engine.scfg.page_size
+            need = -(-(len(req.prompt) + req.max_new_tokens) // ps)
+            if need > self.engine.scfg.pool_pages:
+                raise ValueError(
+                    f"req {req.req_id}: needs {need} pages at its longest; "
+                    f"the pool has {self.engine.scfg.pool_pages}")
         self.pending.append(req)
         return req.req_id
 
@@ -137,6 +204,8 @@ class RequestScheduler:
                              f"engine {eng.scfg.max_batch}")
         b = self.max_batch
         chunk = eng.scfg.prefill_chunk
+        ps = eng.scfg.page_size
+        mp = eng.scfg.max_seq_len // ps if self.paged else 0
         chunks_per_sweep = max(1, eng.scfg.prefill_token_budget // chunk)
         cache = eng.init_slot_cache()
         slots: List[Optional[_Slot]] = [None] * b
@@ -145,6 +214,22 @@ class RequestScheduler:
         positions = np.zeros((b,), np.int32)
         key = jax.random.PRNGKey(eng.scfg.seed)
         issued: List[Request] = []
+        # paged state: per-slot page tables + the host mirror of the device
+        # table (pushed when dirty — decode writes need the page mapped)
+        tables: List[Optional[PageTable]] = [None] * b
+        host_table = np.zeros((b, mp), np.int32) if self.paged else None
+        dirty = [False]
+
+        def release_pages(i: int):
+            nonlocal cache
+            if not self.paged:
+                return
+            if tables[i] is not None:
+                tables[i].release_all()
+                tables[i] = None
+            host_table[i] = 0
+            dirty[0] = True
+            cache = eng.release_slot(cache, i)   # metadata-only (lengths/pt)
 
         def finish(i: int):
             slot = slots[i]
@@ -155,8 +240,126 @@ class RequestScheduler:
             issued.append(slot.req)
             slots[i] = None        # recycled on the next admission sweep
             tokens[i] = 0          # park the dead row at position 0: its
-            positions[i] = 0       # writes stay in-bounds and the slot row
-            #                        is fully overwritten at admission anyway
+            positions[i] = 0       # writes stay in-bounds (paged: page 0 is
+            #                        the trash page) and the slot is fully
+            #                        re-admitted before reuse anyway
+            release_pages(i)
+
+        def drop_entries(n_needed: int, protect_entry=None) -> bool:
+            """Evict least-recently-USED prefix-cache entries until
+            >= n_needed pages are free (``protect_entry`` shields the
+            entry an in-flight reservation is about to share — and a hot
+            system-prompt entry naturally outlives one-shot prefixes).
+            Entries are pure caches — always droppable, never
+            correctness-bearing."""
+            while self.pool.pages_free < n_needed and self.prefix_index:
+                victim_e = self.prefix_index.lru_entry(exclude=protect_entry)
+                if victim_e is None:
+                    break
+                self.prefix_index.evict(victim_e)
+            return self.pool.pages_free >= n_needed
+
+        def evict_to_requeue(i: int):
+            """Pool exhausted and row ``i`` cannot map its next write page:
+            evict THE ROW ITSELF back onto the queue head (releasing its
+            pages) and let it restart later — greedy decoding makes the
+            re-run produce identical tokens.  Self-eviction is what makes
+            exhaustion livelock-free: the surviving residents keep every
+            page they own, so at least one request always runs to
+            completion between evictions (monotonic progress, no
+            steal-back ping-pong)."""
+            if eng.scfg.temperature > 0.0:
+                # sampled decoding: the restart draws from an advanced key
+                # stream, so the regenerated completion WILL differ — size
+                # the pool for the workload (or run greedy) if that matters
+                warnings.warn(
+                    "paged pool exhausted: evicting a resident under "
+                    "temperature > 0 — its re-run resamples and may "
+                    "produce different tokens", RuntimeWarning,
+                    stacklevel=2)
+            req = slots[i].req
+            slots[i] = None
+            tokens[i] = 0
+            positions[i] = 0
+            release_pages(i)
+            self.pending.insert(0, req)       # restarts from scratch
+            self.evictions += 1
+
+        def try_reserve(req: Request) -> Optional[_Admission]:
+            """Paged admission = page reservation: shared prefix pages +
+            fresh suffix pages, or None (stall) if the pool can't cover
+            the suffix right now.  The caller has POPPED ``req`` already —
+            eviction-to-requeue inserts victims at the queue head, so the
+            request being reserved must not still occupy that position."""
+            prompt = np.asarray(req.prompt, np.int32)
+            plen = len(prompt)
+            entry, shared = (None, 0)
+            if self.prefix_index is not None:
+                entry, shared = self.prefix_index.match(prompt)
+                # always leave >= 1 suffix token (the resumed chunk loop
+                # must produce the prompt's next-token logits itself), and
+                # never deeper than the boundary-ring snapshot cap
+                shared = min(shared, (plen - 1) // ps,
+                             self.engine.scfg.prefix_share_pages)
+            n_new = -(-plen // ps) - shared
+            if self.pool.pages_free < n_new and \
+                    not drop_entries(n_new, protect_entry=entry):
+                if entry is not None:
+                    # sharing is an optimization, never an obligation: if
+                    # protecting the matched entry is what starves the
+                    # reservation, retry UNSHARED so that entry becomes
+                    # evictable too — otherwise an entry pinning the pool
+                    # with no residents left would stall admission forever
+                    entry, shared = None, 0
+                    n_new = -(-plen // ps)
+                if self.pool.pages_free < n_new and not drop_entries(n_new):
+                    # a new request never steals pages from running
+                    # residents: it stalls at the queue head until they
+                    # release pages
+                    self.admission_stalls += 1
+                    return None
+            free = next(i for i in range(b) if slots[i] is None)
+            ptab = PageTable(self.pool, mp)
+            for j in range(shared):
+                ptab.append_shared(entry.page_ids[j])
+            for _ in range(n_new):
+                ptab.append_page()
+            if shared:
+                self.prefix_hits += 1
+                self.prefix_index.touch(entry)
+                task = eng.start_prefill(prompt, resume=(entry, shared))
+            else:
+                task = eng.start_prefill(prompt)
+            return _Admission(req, free, task, ptab=ptab,
+                              shared_pages=shared, entry=entry)
+
+        def ensure_writable(i: int):
+            """Pre-decode page upkeep for resident row i: map the page its
+            next write lands in (allocating on page crossings) and COW any
+            still-shared target (structurally unreachable — sharing is
+            whole-page and the cache append-only — but guarded so a future
+            sharing policy cannot silently corrupt a shared page).  If the
+            pool is exhausted even after dropping cache entries, the row
+            evicts ITSELF to the queue (see evict_to_requeue)."""
+            nonlocal cache
+            p = int(positions[i]) // ps
+            ptab = tables[i]
+            if p >= ptab.n_pages:
+                if self.pool.pages_free < 1 and not drop_entries(1):
+                    evict_to_requeue(i)
+                    return
+                ptab.ensure_for_position(int(positions[i]))
+                host_table[i, :ptab.n_pages] = ptab.pages
+                dirty[0] = True
+            elif self.pool.refcount(ptab.pages[p]) > 1:
+                if self.pool.pages_free < 1 and not drop_entries(1):
+                    evict_to_requeue(i)
+                    return
+                old, new = ptab.ensure_exclusive(p)
+                cache = eng.copy_page(cache, old, new)
+                host_table[i, p] = new
+                dirty[0] = True
+                self.cow_copies += 1
 
         while self.pending or active or any(s is not None for s in slots):
             # ---- prefill sweep: ≤ budget tokens of chunk work, FIFO -------
@@ -167,9 +370,17 @@ class RequestScheduler:
                                 None)
                     if free is None or not self.pending:
                         break
-                    req = self.pending.pop(0)
-                    active = _Admission(req, free,
-                                        eng.start_prefill(req.prompt))
+                    if self.paged:
+                        req = self.pending.pop(0)
+                        active = try_reserve(req)
+                        if active is None:    # stalled on pages, not slots:
+                            # back to the head, BEFORE any evicted victims
+                            self.pending.insert(0, req)
+                            break
+                    else:
+                        req = self.pending.pop(0)
+                        active = _Admission(req, free,
+                                            eng.start_prefill(req.prompt))
                 self.prefill_chunks.append(
                     (self.steps, active.req.req_id, active.task.next_chunk,
                      sum(s is not None for s in slots)))
@@ -177,7 +388,18 @@ class RequestScheduler:
                 spent += 1
                 if active.task.done:
                     i = active.slot
-                    cache = eng.admit(cache, active.task.cache, i)
+                    if self.paged:
+                        cache = eng.admit_paged(
+                            cache, active.task.cache, i, active.ptab.pages,
+                            active.shared_pages, active.task.prompt_len)
+                        tables[i] = active.ptab
+                        host_table[i] = 0
+                        host_table[i, :active.ptab.n_pages] = \
+                            active.ptab.pages
+                        dirty[0] = True
+                        self._register_prefix(active)
+                    else:
+                        cache = eng.admit(cache, active.task.cache, i)
                     key, sub = jax.random.split(key)
                     tok0 = int(np.asarray(
                         eng._sample(active.task.logits, sub))[0])
@@ -194,10 +416,20 @@ class RequestScheduler:
                     break
                 continue            # nothing resident yet: keep prefilling
 
+            # ---- paged upkeep: map/COW every row's write page, then push
+            # the host table to the device cache in one leaf swap ----------
+            if self.paged:
+                for i in range(b):
+                    if slots[i] is not None:
+                        ensure_writable(i)
+                if dirty[0]:
+                    cache = eng.with_page_tables(cache, host_table)
+                    dirty[0] = False
+
             # ---- one ragged decode step for the whole arena ---------------
             # (empty slots idle at position 0, harmlessly rewriting their
-            # own row's slot-0 cache line; the SAME compiled HLO serves
-            # every step and every admission pattern)
+            # own row's slot-0 cache line — paged: the trash page; the SAME
+            # compiled HLO serves every step and every admission pattern)
             logits, cache = eng._decode(
                 jnp.asarray(tokens), cache, jnp.asarray(positions))
             key, sub = jax.random.split(key)
@@ -211,9 +443,53 @@ class RequestScheduler:
                 positions[i] += 1
                 if len(slots[i].out) >= slots[i].req.max_new_tokens:
                     finish(i)
+            if self.paged:
+                self.pool_gauges.append({
+                    "step": self.steps,
+                    "pages_in_use": self.pool.pages_in_use,
+                    "pages_free": self.pool.pages_free,
+                    "prefix_hits": self.prefix_hits,
+                    "cow_copies": self.cow_copies,
+                    "admission_stalls": self.admission_stalls,
+                    "evictions": self.evictions,
+                    "prefix_entries": len(self.prefix_index.entries)
+                    if self.prefix_index else 0,
+                })
             if on_step:
                 on_step(self, self.steps)
         return issued
+
+    def _register_prefix(self, adm: _Admission) -> None:
+        """Register a finished prefill's whole-page prefix for sharing.
+
+        The entry retains the task's final cache/scratch (append-only
+        resume state) and its page-boundary ring snapshots; a resumed
+        registrant inherits the boundary rings it skipped from ITS entry
+        (same tokens, same rings)."""
+        if self.prefix_index is None:
+            return
+        task = adm.task
+        if task.prompt_len < self.engine.scfg.page_size:
+            return
+        rings = dict(task.boundary_rings or {})
+        if adm.entry is not None:
+            for d, snap in adm.entry.boundary_rings.items():
+                if d <= adm.shared_pages:
+                    rings.setdefault(d, snap)
+        prompt = np.asarray(task.tokens[0, :task.prompt_len], np.int32)
+        entry = self.prefix_index.insert(prompt, list(adm.ptab.pages), rings,
+                                         task.cache, task.scratch)
+        if entry is None:
+            return                # duplicate / sub-page: nothing to cap
+        # entry cap: each entry retains a dense (L, 1, max_seq, ·) resume
+        # snapshot beyond its pinned pages — LRU-evict past the budget so
+        # entry HBM stays bounded however many distinct prompts arrive.
+        # Cap AFTER the (possibly no-op) insert: a duplicate registration
+        # must never cost an unrelated live entry its cache slot.
+        cap = max(1, self.engine.scfg.prefix_cache_entries)
+        while len(self.prefix_index.entries) > cap:
+            self.prefix_index.evict(self.prefix_index.lru_entry(
+                exclude=entry))
 
     # ---------------------------------------------------------------- static
 

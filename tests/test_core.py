@@ -324,7 +324,11 @@ def test_prefill_into_slot_leaves_other_slots_byte_identical():
                                       err_msg=name)
 
 
-def test_free_slot_zeroes_only_target_slot():
+def test_free_slot_is_metadata_only():
+    """ISSUE 5: freeing a slot resets its LENGTH (and, paged, its
+    page-table row) and touches nothing else — no O(max_seq) payload
+    zeroing.  Safety of the retained bytes is pinned by
+    test_paged.py::test_recycled_pages_never_leak_into_topk."""
     cfg = get_config("qwen2-1.5b").reduced()
     sals = _slot_sals()
     cache = _filled_cache(cfg, sals)
@@ -335,8 +339,22 @@ def test_free_slot_zeroes_only_target_slot():
         name = jax.tree_util.keystr(path)
         got, before = np.asarray(got), np.asarray(before)
         np.testing.assert_array_equal(got[:, :2], before[:, :2], err_msg=name)
-        assert np.all(got[:, 2] == 0), name
+        if "lengths" not in name:              # payload rows: untouched
+            np.testing.assert_array_equal(got[:, 2], before[:, 2],
+                                          err_msg=name)
     assert np.all(np.asarray(freed.lengths)[:, 2] == 0)
+    # paged: the page-table row resets too (host releases the pages)
+    paged = lc.LatentKVCache.init_paged(cfg, sals, 2, 3, 16, n_pages=13,
+                                        page_size=4)
+    paged = paged.replace(page_table=paged.page_table + 5,
+                          lengths=paged.lengths + 9)
+    pfreed = paged.free_slot(jnp.int32(1))
+    assert np.all(np.asarray(pfreed.page_table)[:, 1] == 0)
+    assert np.all(np.asarray(pfreed.lengths)[:, 1] == 0)
+    np.testing.assert_array_equal(np.asarray(pfreed.page_table)[:, 0],
+                                  np.asarray(paged.page_table)[:, 0])
+    np.testing.assert_array_equal(np.asarray(pfreed.k_lat),
+                                  np.asarray(paged.k_lat))
 
 
 def test_slot_roundtrip_matches_direct_prefill():

@@ -1,0 +1,699 @@
+"""Paged latent KV cache (ISSUE 5): allocator invariants, paged-kernel
+bit-parity with the dense slot arena, the no-dense-copy jaxpr guarantee
+through the page-table path, and end-to-end prefix sharing / COW /
+eviction behavior of the paged continuous scheduler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:                       # optional dev extra (pip install .[dev]) — guarded
+    from hypothesis import given, settings, strategies as st
+    from hypothesis import stateful
+    HAVE_HYPOTHESIS = True
+except ImportError:        # property tests skip; everything else still runs
+    from conftest import given, settings, st  # noqa: F401
+    HAVE_HYPOTHESIS = False
+
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.core import quantization as qz
+from repro.core.pager import PagePool, PageTable, PoolExhausted, PrefixIndex
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.serve import Request, RequestScheduler, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_refcounts():
+    pool = PagePool(5, 8, n_reserved=1)
+    a, b = pool.alloc(), pool.alloc()
+    assert a != b and pool.pages_in_use == 2
+    pool.share(a)
+    pool.free(a)
+    assert pool.refcount(a) == 1 and pool.pages_in_use == 2
+    pool.free(a)
+    assert pool.pages_in_use == 1 and pool.pages_free == 3
+    with pytest.raises(ValueError):
+        pool.free(a)                           # double free
+    pool.check()
+
+
+def test_pool_exhaustion_and_reserved_page():
+    pool = PagePool(3, 4, n_reserved=1)
+    got = {pool.alloc(), pool.alloc()}
+    assert 0 not in got                        # trash page never circulates
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    assert pool.try_alloc() is None
+
+
+def test_page_table_cow_semantics():
+    pool = PagePool(8, 4)
+    ta, tb = PageTable(pool, 4), PageTable(pool, 4)
+    pid = ta.append_page()
+    tb.append_shared(pid)
+    assert pool.refcount(pid) == 2
+    # tb COWs: fresh page, old ref drops
+    res = tb.ensure_exclusive(0)
+    assert res is not None
+    old, new = res
+    assert old == pid and new != pid
+    assert pool.refcount(pid) == 1 and pool.refcount(new) == 1
+    ta.release_all()
+    tb.release_all()
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_prefix_index_match_and_evict():
+    pool = PagePool(16, 4)
+    idx = PrefixIndex(pool)
+    toks = np.arange(10, dtype=np.int32)       # 2 whole pages of 4
+    t = PageTable(pool, 8)
+    for _ in range(3):
+        t.append_page()
+    e = idx.insert(toks, list(t.pages), {1: None, 2: None}, None, None)
+    assert e is not None and len(e.page_ids) == 2
+    assert pool.refcount(t.pages[0]) == 2      # entry holds its own ref
+    m, n = idx.match(np.concatenate([toks[:8], [99, 98]]).astype(np.int32))
+    assert m is e and n == 2
+    # ANCESTOR-depth match: a prompt diverging after 1 whole page still
+    # shares that page via the deeper entry (same tokens -> same bytes)
+    m, n = idx.match(np.concatenate([toks[:4],
+                                     [77, 76, 75, 74]]).astype(np.int32))
+    assert m is e and n == 1
+    m, n = idx.match(np.array([1, 2, 3, 4], np.int32))
+    assert m is None and n == 0
+    # sub-page prompts never register
+    assert idx.insert(np.array([5], np.int32), [], {}, None, None) is None
+    idx.evict(e)
+    t.release_all()
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_prefix_index_lru_order():
+    """Eviction under pool pressure drops the least-recently-USED entry —
+    a hot shared system prompt outlives one-shot prefixes."""
+    pool = PagePool(16, 4)
+    idx = PrefixIndex(pool)
+    t1, t2 = PageTable(pool, 8), PageTable(pool, 8)
+    t1.append_page()
+    t2.append_page()
+    e1 = idx.insert(np.arange(4, dtype=np.int32), list(t1.pages), {1: None},
+                    None, None)
+    e2 = idx.insert(np.arange(4, 8, dtype=np.int32), list(t2.pages),
+                    {1: None}, None, None)
+    assert idx.lru_entry() is e1               # older insert
+    idx.touch(e1)
+    assert idx.lru_entry() is e2 and e1.hits == 1
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_allocator_state_machine():
+    """Hypothesis state machine over alloc/share/COW/free sequences: no
+    leak, no double-free, refcounts consistent, and live-token capacity
+    always equals the pool accounting."""
+
+    class PoolMachine(stateful.RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.pool = PagePool(12, 4, n_reserved=1)
+            self.tables = [PageTable(self.pool, 16) for _ in range(3)]
+            self.model_refs = {}               # pid -> expected refcount
+
+        @stateful.rule(t=st.integers(0, 2))
+        def alloc(self, t):
+            tab = self.tables[t]
+            if self.pool.pages_free == 0 or tab.n_pages >= tab.max_pages:
+                return
+            pid = tab.append_page()
+            self.model_refs[pid] = self.model_refs.get(pid, 0) + 1
+
+        @stateful.rule(src=st.integers(0, 2), dst=st.integers(0, 2))
+        def share(self, src, dst):
+            ts, td = self.tables[src], self.tables[dst]
+            if not ts.pages or td.n_pages >= td.max_pages:
+                return
+            pid = ts.pages[-1]
+            td.append_shared(pid)
+            self.model_refs[pid] += 1
+
+        @stateful.rule(t=st.integers(0, 2), j=st.integers(0, 15))
+        def cow(self, t, j):
+            tab = self.tables[t]
+            if j >= tab.n_pages:
+                return
+            pid = tab.pages[j]
+            shared = self.pool.refcount(pid) > 1
+            if shared and self.pool.pages_free == 0:
+                return
+            res = tab.ensure_exclusive(j)
+            if shared:
+                old, new = res
+                self.model_refs[old] -= 1
+                self.model_refs[new] = self.model_refs.get(new, 0) + 1
+            else:
+                assert res is None
+
+        @stateful.rule(t=st.integers(0, 2))
+        def release(self, t):
+            tab = self.tables[t]
+            for pid in tab.pages:
+                self.model_refs[pid] -= 1
+            tab.release_all()
+
+        @stateful.invariant()
+        def consistent(self):
+            self.pool.check()
+            for pid, refs in self.model_refs.items():
+                assert self.pool.refcount(pid) == refs, (pid, refs)
+            live = sum(1 for r in self.model_refs.values() if r > 0)
+            assert self.pool.pages_in_use == live
+            total_mapped = sum(t.n_pages for t in self.tables)
+            total_refs = sum(r for r in self.model_refs.values())
+            assert total_mapped == total_refs   # every mapping is one ref
+            assert self.pool.token_capacity_free == \
+                self.pool.pages_free * self.pool.page_size
+
+    stateful.run_state_machine_as_test(
+        PoolMachine, settings=settings(max_examples=30,
+                                       stateful_step_count=40,
+                                       deadline=None))
+
+
+def test_allocator_invariants_deterministic():
+    """Hypothesis-free fallback of the state-machine test: a scripted
+    alloc/share/COW/free torture sequence with full accounting."""
+    rng = np.random.default_rng(7)
+    pool = PagePool(12, 4, n_reserved=1)
+    tables = [PageTable(pool, 16) for _ in range(3)]
+    refs = {}
+    for step in range(400):
+        op = rng.integers(0, 4)
+        t = tables[rng.integers(0, 3)]
+        if op == 0 and pool.pages_free and t.n_pages < t.max_pages:
+            pid = t.append_page()
+            refs[pid] = refs.get(pid, 0) + 1
+        elif op == 1:
+            src = tables[rng.integers(0, 3)]
+            if src.pages and t.n_pages < t.max_pages:
+                pid = src.pages[int(rng.integers(0, src.n_pages))]
+                t.append_shared(pid)
+                refs[pid] += 1
+        elif op == 2 and t.n_pages:
+            j = int(rng.integers(0, t.n_pages))
+            pid = t.pages[j]
+            if pool.refcount(pid) > 1 and pool.pages_free:
+                old, new = t.ensure_exclusive(j)
+                refs[old] -= 1
+                refs[new] = refs.get(new, 0) + 1
+            elif pool.refcount(pid) == 1:
+                assert t.ensure_exclusive(j) is None
+        elif op == 3:
+            for pid in t.pages:
+                refs[pid] -= 1
+            t.release_all()
+        pool.check()
+        live = sum(1 for r in refs.values() if r > 0)
+        assert pool.pages_in_use == live
+        assert sum(tb.n_pages for tb in tables) == sum(refs.values())
+    for t in tables:
+        t.release_all()
+    assert pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# paged kernels: bit-parity with the dense slot arena
+# ---------------------------------------------------------------------------
+
+def _paged_setup(b, s, ps, r, r_star, nc, n_kv, dh, k_int8, seed=0, vg=16):
+    mp = s // ps
+    n_pages = mp * b + 3
+    h = n_kv * 2
+    kvd = n_kv * dh
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 6)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    lat = jax.random.normal(ks[1], (b, s, r))
+    if k_int8:
+        k_lat, k_scale = qz.quantize_latent_int8(lat)
+    else:
+        k_lat, k_scale = lat.astype(jnp.bfloat16), None
+    v = jax.random.normal(ks[2], (b, s, kvd))
+    vq = qz.quantize(v, 8, vg)
+    u = jax.random.normal(ks[3], (kvd, r), jnp.float32)
+    q_lat = jax.random.normal(ks[4], (b, r_star))
+    # scatter the dense rows into a randomly permuted page pool
+    rng = np.random.default_rng(seed)
+    pt = rng.permutation(n_pages - 1)[: b * mp].reshape(b, mp) + 1
+    pt = pt.astype(np.int32)                   # page 0 = trash, never mapped
+
+    def pool_of(dense):
+        pool = np.zeros((n_pages, ps, *dense.shape[2:]),
+                        np.asarray(dense).dtype)
+        dnp = np.asarray(dense).reshape(b, mp, ps, *dense.shape[2:])
+        for bb in range(b):
+            for j in range(mp):
+                pool[pt[bb, j]] = dnp[bb, j]
+        return jnp.asarray(pool)
+
+    pools = dict(
+        k_lat=pool_of(k_lat),
+        k_scale=None if k_scale is None else pool_of(k_scale),
+        v_q=pool_of(vq["q"]), v_scale=pool_of(vq["scale"]),
+        v_zero=pool_of(vq["zero"]))
+    dense = dict(k_lat=k_lat, k_scale=k_scale, v_q=vq["q"],
+                 v_scale=vq["scale"], v_zero=vq["zero"])
+    return q, q_lat, u, dense, pools, jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("k_int8", [False, True])
+@pytest.mark.parametrize("ps,s,pos_rows", [
+    (8, 64, [63, 30]),            # ragged rows
+    (16, 96, [95, 40, 7]),        # almost-nothing-selectable row
+    (16, 48, [47]),               # single row, ragged page tail
+])
+def test_paged_kernels_bit_identical_to_dense(k_int8, ps, s, pos_rows):
+    """The RAGGED-PARITY suite on the paged backing store: both paged
+    kernels must return bit-identical results to the dense slot arena on
+    the same logical contents — per backend (pallas vs pallas, oracle vs
+    oracle), with selection ALSO bit-equal across backends."""
+    b = len(pos_rows)
+    n_kv, dh, r, r_star, nc, vg = 2, 32, 16, 8, 12, 16
+    q, q_lat, u, dense, pools, pt = _paged_setup(
+        b, s, ps, r, r_star, nc, n_kv, dh, k_int8, vg=vg)
+    pos = jnp.asarray(pos_rows, jnp.int32)
+    out = {}
+    for be in ("pallas", "xla"):
+        for layout in ("paged", "dense"):
+            kw = dict(page_table=pt, page_size=ps) if layout == "paged" \
+                else {}
+            src = pools if layout == "paged" else dense
+            idx, valid = ops.latent_topk(
+                q_lat, src["k_lat"], src["k_scale"], pos, n_critical=nc,
+                n_sink=2, n_recent=8, backend=be, **kw)
+            m, l, o = ops.sparse_recon_attention(
+                q, src["k_lat"], src["k_scale"], src["v_q"], src["v_scale"],
+                src["v_zero"], u, idx, valid, pos, n_kv=n_kv, v_bits=8,
+                v_group=vg, backend=be, **kw)
+            out[layout, be] = tuple(np.asarray(x)
+                                    for x in (idx, valid, m, l, o))
+    for be in ("pallas", "xla"):
+        for i in range(5):        # paged == dense BIT-FOR-BIT per backend
+            assert np.array_equal(out["paged", be][i], out["dense", be][i]), \
+                (be, i)
+    for i in (0, 1):              # selection bit-equal across backends too
+        assert np.array_equal(out["paged", "pallas"][i],
+                              out["paged", "xla"][i])
+
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_paged_grouped_fold_matches_dense_grouped(g):
+    """GROUPED-PARITY on the paged store: the grouped fold reshapes the
+    page TABLE per slab (pools untouched); per-slab selection and partials
+    must be bit-identical to the dense grouped fold."""
+    b, s, ps = 2, 128, 16
+    n_kv, dh, r, r_star, nc, vg = 2, 32, 16, 8, 16, 16
+    q, q_lat, u, dense, pools, pt = _paged_setup(
+        b, s, ps, r, r_star, nc, n_kv, dh, k_int8=True, seed=3, vg=vg)
+    pos = jnp.int32(s - 1)
+    s_loc = s // g
+    k_loc = -(-nc // g)
+    mp = s // ps
+    base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+    qg = jnp.repeat(q, g, axis=0)
+    qlg = jnp.repeat(q_lat, g, axis=0)
+
+    def fold(a):
+        return None if a is None else a.reshape(b * g, s_loc, *a.shape[2:])
+
+    out = {}
+    for layout in ("paged", "dense"):
+        if layout == "paged":
+            kw = dict(page_table=pt.reshape(b * g, mp // g), page_size=ps)
+            src = pools
+            args = (src["k_lat"], src["k_scale"], src["v_q"],
+                    src["v_scale"], src["v_zero"])
+        else:
+            kw = {}
+            src = dense
+            args = tuple(fold(src[k]) for k in
+                         ("k_lat", "k_scale", "v_q", "v_scale", "v_zero"))
+        idx, valid = ops.latent_topk(
+            qlg, args[0], args[1], pos, n_critical=k_loc, n_sink=2,
+            n_recent=8, pos_base=base, backend="pallas", **kw)
+        m, l, o = ops.sparse_recon_attention(
+            qg, *args, u, idx, valid, pos, n_kv=n_kv, v_bits=8, v_group=vg,
+            pos_base=base, backend="pallas", **kw)
+        out[layout] = tuple(np.asarray(x) for x in (idx, valid, m, l, o))
+    for i in range(5):
+        assert np.array_equal(out["paged"][i], out["dense"][i]), i
+
+
+def test_paged_fused_path_materializes_no_dense_buffers():
+    """The jaxpr no-dense-copy invariant THROUGH THE PAGE-TABLE PATH: no
+    (B, S, ·)-scale gather/dequant buffer may materialize — the paged
+    kernels dereference the table in their index maps, they never build
+    the logical view."""
+    from test_kernels import _walk_eqns
+    b, s, ps = 2, 512, 32
+    n_kv, dh, r, r_star, nc, vg = 2, 64, 32, 16, 64, 32
+    kvd = n_kv * dh
+    h = n_kv * 2
+    q, q_lat, u, dense, pools, pt = _paged_setup(
+        b, s, ps, r, r_star, nc, n_kv, dh, k_int8=True, seed=11, vg=vg)
+    pos = jnp.int32(s - 1)
+
+    def fused(q, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pt):
+        idx, valid = ops.latent_topk(
+            q_lat, k_lat, k_scale, pos, n_critical=nc, n_sink=4,
+            n_recent=16, page_table=pt, page_size=ps, backend="pallas")
+        return ops.sparse_recon_attention(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+            n_kv=n_kv, v_bits=8, v_group=vg, page_table=pt, page_size=ps,
+            backend="pallas")
+
+    jaxpr = jax.make_jaxpr(fused)(
+        q, q_lat, pools["k_lat"], pools["k_scale"], pools["v_q"],
+        pools["v_scale"], pools["v_zero"], u, pt)
+    limit = min(b * s * r_star,              # dense score slice/pad copy
+                b * s * r,                   # dense dequant pass
+                b * nc * kvd)                # gathered value buffer
+    offenders = []
+    for eqn in _walk_eqns(jaxpr.jaxpr, []):
+        for ov in eqn.outvars:
+            size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if size >= limit:
+                offenders.append((eqn.primitive.name, ov.aval.shape))
+    assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: paged serving == dense serving; prefix sharing; COW; eviction
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _engine(model, page_size=0, n_pages=0, prefix_cache=True, max_batch=3,
+            max_seq=128, chunk=8):
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=max_seq, max_new_tokens=8,
+                       max_batch=max_batch, sals=sals, prefill_chunk=chunk,
+                       page_size=page_size, n_pages=n_pages,
+                       prefix_cache=prefix_cache)
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def _run(eng, prompts, mnt=5):
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs = [Request(np.asarray(p, np.int32), max_new_tokens=mnt)
+            for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return [r.result.tokens for r in reqs], sched
+
+
+def test_paged_decode_token_exact_vs_dense_arena(model):
+    """Acceptance: paged decode is bit-identical to the dense slot arena —
+    the same request stream produces the same greedy tokens through the
+    page-pool backing store as through the dense ``(B, max_seq, ·)``
+    arena, including slot recycling and mid-stream admissions."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 128, size=int(n)).astype(np.int32)
+               for n in (6, 19, 30, 11, 25, 9)]
+    out_d, _ = _run(_engine(model, page_size=0), prompts)
+    out_p, sp = _run(_engine(model, page_size=16), prompts)
+    for a, b in zip(out_d, out_p):
+        np.testing.assert_array_equal(a, b)
+    assert sp.pool_gauges, "paged run must emit pool gauges"
+    # no page leak: once the prefix-cache entries release their pins, the
+    # pool drains to exactly zero live pages
+    for e in sp.prefix_index.entries:
+        sp.prefix_index.evict(e)
+    assert sp.pool.pages_in_use == 0
+    sp.pool.check()
+
+
+def test_prefix_sharing_one_prefill_one_copy(model):
+    """Acceptance: N requests sharing a long prompt prefix -> the shared
+    pages are prefilled ONCE, pages_in_use ≈ prefix + Σ unique suffixes
+    (not N·prompt), and greedy outputs equal unshared execution."""
+    rng = np.random.default_rng(5)
+    ps = 16
+    prefix = rng.integers(1, 128, size=48).astype(np.int32)   # 3 pages
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, 128, size=k).astype(np.int32)])
+               for k in (5, 9, 13)]
+    out_s, ss = _run(_engine(model, page_size=ps), prompts)
+    out_n, sn = _run(_engine(model, page_size=ps, prefix_cache=False),
+                     prompts)
+    out_d, _ = _run(_engine(model, page_size=0), prompts)
+    for a, b, c in zip(out_s, out_n, out_d):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert ss.prefix_hits == 2                 # requests 2 and 3 hit
+    # shared-page chunks run once: later requests' chunk ledgers start at
+    # the resume offset, so the shared run executes fewer chunk HLOs
+    assert len(ss.prefill_chunks) < len(sn.prefill_chunks)
+    first_chunks = {}
+    for _, rid, cidx, _ in ss.prefill_chunks:
+        first_chunks.setdefault(rid, cidx)
+    resumed = [c for c in first_chunks.values() if c > 0]
+    assert len(resumed) == 2                   # 2 requests resumed mid-chunk
+    # capacity: high-water ≈ prefix + Σ suffix pages, far below N·prompt
+    hw_s = max(g["pages_in_use"] for g in ss.pool_gauges)
+    hw_n = max(g["pages_in_use"] for g in sn.pool_gauges)
+    shared_expect = 3 + sum(-(-(len(p) + 5 - 48) // ps) for p in prompts)
+    assert hw_s <= shared_expect + 1
+    assert hw_s < hw_n
+
+
+def test_prefix_sharing_with_multipage_suffixes(model):
+    """Regression for ancestor-depth matching: suffixes that span whole
+    pages themselves must not defeat sharing — followers share exactly the
+    common whole pages of the FIRST request's registered (longer) prefix,
+    with outputs identical to the dense arena."""
+    rng = np.random.default_rng(23)
+    ps = 16
+    prefix = rng.integers(1, 128, size=48).astype(np.int32)   # 3 pages
+    prompts = [np.concatenate([prefix,
+                               rng.integers(1, 128, size=k).astype(np.int32)])
+               for k in (20, 24, 33)]          # suffixes span >= 1 page
+    out_s, ss = _run(_engine(model, page_size=ps), prompts)
+    out_d, _ = _run(_engine(model, page_size=0), prompts)
+    for a, b in zip(out_s, out_d):
+        np.testing.assert_array_equal(a, b)
+    assert ss.prefix_hits == 2                 # followers share 3 pages
+
+
+def test_recycled_pages_never_leak_into_topk(model):
+    """ISSUE 5 satellite: ``free_slot`` is metadata-only, so a recycled
+    slot/page still holds the previous request's bytes — a later request
+    in the same pages must decode exactly as if the pool were pristine
+    (per-row positions gate selection; stale rows are unreachable)."""
+    rng = np.random.default_rng(9)
+    # prefix_cache off so wave 1's pages actually return to the free stack
+    # (entries would otherwise pin them) — LIFO alloc then hands wave 2 the
+    # dirtiest pages
+    eng = _engine(model, page_size=16, max_batch=2, prefix_cache=False)
+    # wave 1 fills pages with distinctive content, then finishes
+    wave1 = [rng.integers(1, 128, size=60).astype(np.int32)
+             for _ in range(2)]
+    # wave 2 is SHORTER: its pages recycle wave 1's, with stale tail bytes
+    wave2 = [rng.integers(1, 128, size=12).astype(np.int32)
+             for _ in range(2)]
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs1 = [Request(p, max_new_tokens=4) for p in wave1]
+    reqs2 = [Request(p, max_new_tokens=6) for p in wave2]
+    for r in reqs1:
+        sched.submit(r)
+    for r in reqs2:
+        sched.submit(r)
+    sched.run()
+    # reference: wave 2 alone on a pristine engine
+    ref, _ = _run(_engine(model, page_size=16, max_batch=2,
+                          prefix_cache=False), wave2, mnt=6)
+    for r, expect in zip(reqs2, ref):
+        np.testing.assert_array_equal(r.result.tokens, expect)
+
+
+def test_cow_page_copy_preserves_shared_content(model):
+    """COW mechanism (engine + allocator): after ensure_exclusive +
+    copy_page, the new page is byte-identical to the shared original and
+    the original's other owner is untouched."""
+    eng = _engine(model, page_size=16)
+    cache = eng.init_slot_cache()
+    pool = PagePool(eng.scfg.pool_pages + 1, 16, n_reserved=1)
+    ta, tb = PageTable(pool, 4), PageTable(pool, 4)
+    pid = ta.append_page()
+    tb.append_shared(pid)
+    # write recognizable bytes into the shared page of every latent seg
+    segs = eng._latent_segs(cache)
+    name, seg = next(iter(segs.items()))
+    marked = seg.replace(k_lat=seg.k_lat.at[:, pid].set(7))
+    cache[name] = marked
+    old, new = tb.ensure_exclusive(0)
+    cache = eng.copy_page(cache, old, new)
+    got = eng._latent_segs(cache)[name]
+    np.testing.assert_array_equal(np.asarray(got.k_lat[:, new]),
+                                  np.asarray(got.k_lat[:, old]))
+    assert pool.refcount(old) == 1 and pool.refcount(new) == 1
+
+
+def test_pool_exhaustion_evicts_to_requeue(model):
+    """Decode growth past the pool evicts the LATEST-admitted resident
+    back onto the queue; every request still completes with the tokens a
+    roomy pool produces (greedy determinism)."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 128, size=30).astype(np.int32)
+               for _ in range(2)]
+    # tight pool: 9 usable pages of 8 -> both residents fit their prompts
+    # (4 pages each) but the second growth page cannot be satisfied
+    eng = _engine(model, page_size=8, n_pages=9, max_batch=2, max_seq=64)
+    out_tight, st_ = _run(eng, prompts, mnt=8)
+    assert st_.evictions >= 1
+    roomy = _engine(model, page_size=8, max_batch=2, max_seq=64)
+    out_roomy, _ = _run(roomy, prompts, mnt=8)
+    for a, b in zip(out_tight, out_roomy):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_admission_stall_gauge_on_pool_pressure(model):
+    """A prompt whose pages don't fit while residents hold the pool must
+    stall (gauge ticks) and admit once pages free up — not crash, not
+    starve."""
+    rng = np.random.default_rng(13)
+    # 3 slots but only 10 pages: the third prompt has a slot available and
+    # must still wait for PAGES — admission is a page reservation now
+    eng = _engine(model, page_size=8, n_pages=10, max_batch=3, max_seq=64)
+    prompts = [rng.integers(1, 128, size=30).astype(np.int32),
+               rng.integers(1, 128, size=30).astype(np.int32),
+               rng.integers(1, 128, size=30).astype(np.int32)]
+    out, sched = _run(eng, prompts, mnt=3)
+    assert all(len(t) == 3 for t in out)
+    assert sched.admission_stalls >= 1
+
+
+def test_protected_entry_cannot_deadlock_admission(model):
+    """Regression: a matched prefix entry whose pinned pages starve the
+    reservation must NOT stall admission forever — sharing falls back to
+    an unshared reservation, making the entry itself evictable."""
+    rng = np.random.default_rng(29)
+    head = rng.integers(1, 128, size=16).astype(np.int32)     # 2 pages
+    prompt_a = np.concatenate([head,
+                               rng.integers(1, 128, size=40).astype(np.int32)])
+    prompt_b = np.concatenate([head,
+                               rng.integers(1, 128, size=24).astype(np.int32)])
+    # pool of 8 pages: A (56 tokens = 7 pages + 1 growth) fills it; its
+    # entry then pins 7 pages, so B (5 pages, 2 shared) cannot reserve its
+    # 3 fresh pages while the matched entry is protected
+    eng = _engine(model, page_size=8, n_pages=8, max_batch=2, max_seq=64)
+    sched = RequestScheduler(eng, mode="continuous")
+    ra = Request(prompt_a, max_new_tokens=4)
+    rb = Request(prompt_b, max_new_tokens=4)
+    sched.submit(ra)
+    sched.submit(rb)
+    sched.run()                               # must terminate
+    assert ra.done and rb.done
+    # and B's tokens still match a roomy-pool run
+    roomy = _engine(model, page_size=8, max_batch=2, max_seq=64)
+    ref, _ = _run(roomy, [prompt_a, prompt_b], mnt=4)
+    np.testing.assert_array_equal(rb.result.tokens, ref[1])
+
+
+def test_prefix_entry_count_is_capped(model):
+    """Each entry retains a dense resume snapshot — the LRU cap
+    (ServeConfig.prefix_cache_entries) bounds how many accumulate."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=4, max_batch=2,
+                       sals=sals, prefill_chunk=8, page_size=16,
+                       prefix_cache_entries=2)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    rng = np.random.default_rng(31)
+    prompts = [rng.integers(1, 128, size=20).astype(np.int32)
+               for _ in range(5)]
+    _, sched = _run_sched(eng, prompts)
+    assert len(sched.prefix_index.entries) <= 2
+    assert sched.pool_gauges[-1]["prefix_entries"] <= 2
+
+
+def _run_sched(eng, prompts, mnt=3):
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs = [Request(np.asarray(p, np.int32), max_new_tokens=mnt)
+            for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return [r.result.tokens for r in reqs], sched
+
+
+def test_paged_config_validation():
+    """ISSUE 5 satellite: paging misconfigurations fail at PARSE time with
+    clear errors, not as shape failures inside jit."""
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        ServeConfig(max_seq_len=100, page_size=16)
+    with pytest.raises(ValueError, match="multiple of prefill_chunk"):
+        ServeConfig(max_seq_len=128, page_size=16, prefill_chunk=12)
+    with pytest.raises(ValueError, match="cannot hold one"):
+        ServeConfig(max_seq_len=128, page_size=16, n_pages=4,
+                    prefill_chunk=16)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeConfig(max_seq_len=128, page_size=16, prefill_chunk=16,
+                    scheduler="static")
+    # n_groups compatibility is an engine-time check (needs the model)
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3)
+    sals = SALSConfig(skip_layers_front=1, skip_layers_back=1)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    scfg = ServeConfig(max_seq_len=96, page_size=32, prefill_chunk=32,
+                       sals=sals)
+    with pytest.raises(ValueError, match="divisible by n_groups"):
+        ServeEngine(params, None, cfg, scfg, n_groups=2)
+    # page size must divide the score kernel's seq block (engine-time, not
+    # a ValueError inside the first jitted decode)
+    with pytest.raises(ValueError, match="divide the score"):
+        ServeEngine(params, None, cfg,
+                    ServeConfig(max_seq_len=1536, page_size=48,
+                                prefill_chunk=16, sals=sals))
+    # page_size without SALS segments: refuse, don't silently run dense
+    with pytest.raises(ValueError, match="needs SALS"):
+        ServeEngine(params, None, cfg,
+                    ServeConfig(max_seq_len=128, page_size=16,
+                                prefill_chunk=16,
+                                sals=SALSConfig(enabled=False)))
+
+
+def test_paged_grouped_engine_token_exact(model):
+    """Grouped selection (n_groups > 1) over the paged store: same greedy
+    tokens as the grouped dense arena (the fold reshapes the page table)."""
+    cfg, params, sals, proj = model
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(1, 128, size=int(n)).astype(np.int32)
+               for n in (9, 21)]
+
+    def eng(page_size):
+        scfg = ServeConfig(max_seq_len=128, max_new_tokens=6, max_batch=2,
+                           sals=sals, prefill_chunk=8, page_size=page_size)
+        return ServeEngine(params, proj, cfg, scfg, n_groups=2)
+
+    out_d, _ = _run(eng(0), prompts, mnt=4)
+    out_p, _ = _run(eng(16), prompts, mnt=4)
+    for a, b in zip(out_d, out_p):
+        np.testing.assert_array_equal(a, b)
