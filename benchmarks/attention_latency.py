@@ -26,6 +26,7 @@ from repro.models import attention as attn
 from repro.models import transformer as tf
 from benchmarks import common
 from benchmarks.memory_access import (decode_stage_bytes,
+                                      fault_degradation_model,
                                       paged_capacity_model,
                                       prefill_chunk_bytes, traffic_ratio)
 
@@ -158,6 +159,21 @@ def paged_capacity_rows():
     return rows
 
 
+def fault_degradation_rows():
+    """ISSUE 6 ledger: modeled graceful degradation of the fault-tolerant
+    scheduler — committed-step throughput, expected per-request attempts,
+    residual failure probability, and goodput at the chaos-suite fault
+    rates.  The measured counterpart (same rates, wall clock on the tiny
+    CPU model) lives in ``benchmarks/throughput.py``."""
+    rows = []
+    for f, q in ((0.0, 0.0), (0.01, 0.0), (0.05, 0.0),
+                 (0.0, 0.001), (0.0, 0.005), (0.01, 0.001), (0.05, 0.005)):
+        for t in (64, 256):
+            rows.append({"scheduler": "continuous",
+                         **fault_degradation_model(f, q, t, max_retries=2)})
+    return rows
+
+
 def run() -> list:
     cpu_rows = measured_rows()
     v5e_rows = projected_rows()
@@ -187,6 +203,14 @@ def run() -> list:
           r["prefix_sharing_gain"]) for r in paged_rows],
         ["sals", "page", "lat_B_tok", "table_frac", "capacity_x",
          "prefix_x"])
+    fault_rows = fault_degradation_rows()
+    common.emit(
+        [(r["step_fault_rate"], r["request_fault_rate"],
+          r["mean_decode_steps"], r["step_throughput_x"],
+          r["request_attempts"], r["request_fail_prob"], r["goodput_x"])
+         for r in fault_rows],
+        ["step_f", "req_f", "steps", "step_x", "attempts", "p_fail",
+         "goodput_x"])
     cols = ["table", "batch", "seq", "full_us", "sals_us", "speedup"]
     payload = {
         "bench": "attention",
@@ -196,6 +220,7 @@ def run() -> list:
         "traffic_model": model_rows,
         "prefill_traffic_model": prefill_rows,
         "paged_capacity_model": paged_rows,
+        "fault_degradation_model": fault_rows,
     }
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")

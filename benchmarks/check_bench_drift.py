@@ -22,7 +22,9 @@ from __future__ import annotations
 import json
 import sys
 
-from benchmarks.attention_latency import (BENCH_JSON, paged_capacity_rows,
+from benchmarks.attention_latency import (BENCH_JSON,
+                                          fault_degradation_rows,
+                                          paged_capacity_rows,
                                           prefill_traffic_rows,
                                           traffic_model_rows)
 
@@ -30,6 +32,7 @@ MODELED_SECTIONS = {
     "traffic_model": traffic_model_rows,
     "prefill_traffic_model": prefill_traffic_rows,
     "paged_capacity_model": paged_capacity_rows,
+    "fault_degradation_model": fault_degradation_rows,
 }
 
 

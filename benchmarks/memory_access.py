@@ -190,6 +190,52 @@ def paged_capacity_model(cfg, sals: SALSConfig, page_size: int,
     }
 
 
+def fault_degradation_model(step_fault_rate: float, req_fault_rate: float,
+                            mean_decode_steps: int,
+                            max_retries: int = 2) -> dict:
+    """ISSUE 6: closed-form graceful-degradation model of the fault-
+    tolerant scheduler (no wall clock — drift-checkable).
+
+    Two fault classes, matching the injection points:
+
+    * STEP faults (``decode_step``) at per-step rate ``f``: the whole
+      decode step retries and nobody pays tokens — committed-step
+      throughput scales by ``1 - f`` (expected attempts per committed
+      step is ``1/(1-f)``).
+    * REQUEST faults (``page_alloc``/``admit``/``nan_logits``) at
+      per-step rate ``q``: the victim request alone retries FROM SCRATCH
+      (greedy re-run), up to ``max_retries`` times.  An attempt over
+      ``T`` decode steps survives with ``p = (1-q)^T``; a failed attempt
+      wastes on average ``~T/2`` steps (fault position is uniform over
+      the attempt).  Goodput is committed tokens over total steps spent;
+      the residual failure probability is ``(1-p)^(R+1)``.
+
+    The measured counterpart (same rates, wall clock) is
+    ``benchmarks/throughput.py::fault_degradation_rows``.
+    """
+    f, q, t, r = step_fault_rate, req_fault_rate, mean_decode_steps, \
+        max_retries
+    step_throughput = 1.0 - f
+    p_attempt = (1.0 - q) ** t
+    # truncated-geometric expected attempts started: Σ_{i=0..R} (1-p)^i
+    attempts = sum((1.0 - p_attempt) ** i for i in range(r + 1))
+    p_fail = (1.0 - p_attempt) ** (r + 1)
+    # each attempt spends T steps if it survives, ~T/2 if it faults;
+    # committed tokens only arrive when the request ultimately completes
+    spent = attempts * (p_attempt * t + (1.0 - p_attempt) * t / 2.0)
+    goodput = ((1.0 - p_fail) * t / spent) if spent else 1.0
+    return {
+        "step_fault_rate": f,
+        "request_fault_rate": q,
+        "mean_decode_steps": t,
+        "max_retries": r,
+        "step_throughput_x": round(step_throughput, 4),
+        "request_attempts": round(attempts, 4),
+        "request_fail_prob": round(p_fail, 6),
+        "goodput_x": round(goodput * step_throughput, 4),
+    }
+
+
 def accuracy_proxy():
     """Next-token agreement + logit MSE of SALS vs full on a trained model."""
     cfg, params, corpus = common.trained_model()

@@ -198,6 +198,54 @@ def prefix_sharing_rows():
     return rows
 
 
+def fault_degradation_rows():
+    """ISSUE 6: measured graceful degradation — drain the same request
+    stream through the PAGED engine under seeded fault schedules at
+    increasing per-step rates (page-alloc + decode-step + one-row NaN
+    faults).  Columns: goodput (committed tok/s counting only DONE
+    requests), p99 inter-token gap for surviving residents, and the
+    retry/failure ledger.  The deterministic counterpart (closed-form
+    attempts/goodput at the same rates) is
+    ``benchmarks/memory_access.py::fault_degradation_model`` in
+    ``BENCH_attention.json["fault_degradation_model"]``."""
+    from repro.serve import faults
+    cfg, params, corpus = common.trained_model()
+    sals = common.sals_settings(cfg, "25")
+    proj = common.projectors_for(cfg, params, corpus, sals)
+    eng = ServeEngine(params, proj, cfg,
+                      ServeConfig(max_seq_len=256, max_batch=4, sals=sals,
+                                  prefill_chunk=16, page_size=32,
+                                  max_request_retries=2))
+    rows = []
+    for rate in (0.0, 0.01, 0.05):
+        sched = RequestScheduler(eng, mode="continuous")
+        rng = np.random.default_rng(17)
+        reqs = [Request(corpus.batch(97_000 + i, 1,
+                                     int(rng.integers(16, 48)))["tokens"][0],
+                        max_new_tokens=int(rng.integers(8, 24)))
+                for i in range(8)]
+        for r in reqs:
+            sched.submit(r)
+        times = []
+        schedule = faults.FaultSchedule(
+            seed=17, rates={"page_alloc": rate, "decode_step": rate,
+                            "nan_logits": rate / 2})
+        t0 = time.perf_counter()
+        with faults.injected(schedule):
+            sched.run(on_step=lambda s, step: times.append(
+                time.perf_counter()))
+        dt = time.perf_counter() - t0
+        done = [r for r in reqs if r.done]
+        toks = sum(r.result.steps for r in done)
+        gaps = np.diff(np.asarray(times)) * 1e3 if len(times) > 1 else \
+            np.zeros(1)
+        rows.append(("fault-degradation-cpu", rate, f"{len(done)}/8",
+                     round(toks / dt, 1),
+                     round(float(np.percentile(gaps, 99)), 1),
+                     sched.retries, sched.step_faults, sched.failures))
+    return rows
+
+
 def run() -> list:
     rows = measured_rows() + projected_rows()
     common.emit(rows, ["table", "batch", "seq", "full_tok_s", "sals_tok_s",
@@ -214,7 +262,11 @@ def run() -> list:
     common.emit(sharing, ["table", "mode", "requests", "last_ttft_ms",
                           "pages_high_water", "prefix_hits", "chunk_hlos",
                           "tok_s"])
-    return rows + sched + interleave + sharing
+    degradation = fault_degradation_rows()
+    common.emit(degradation, ["table", "fault_rate", "done", "good_tok_s",
+                              "p99_intertoken_ms", "retries", "step_faults",
+                              "failures"])
+    return rows + sched + interleave + sharing + degradation
 
 
 if __name__ == "__main__":

@@ -105,6 +105,26 @@ def list_checkpoints(directory: str) -> List[int]:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest COMPLETE checkpoint step.
+
+    Fast path: the ``LATEST`` pointer (one read instead of a directory
+    scan).  The pointer is advisory, never trusted: if it is missing,
+    unparseable (torn write despite the tmp+rename protocol — e.g. a
+    truncating filesystem), or DANGLING (it names a step dir that was
+    pruned or never completed its manifest), fall back to scanning
+    ``list_checkpoints`` — the manifest-verified ground truth.
+    """
+    pointer = os.path.join(directory, "LATEST")
+    try:
+        with open(pointer) as f:
+            name = f.read().strip()
+        if name.startswith("step_"):
+            step = int(name[5:])
+            if os.path.exists(os.path.join(directory, name,
+                                           "manifest.json")):
+                return step
+    except (OSError, ValueError):
+        pass                      # missing/corrupt pointer: scan instead
     steps = list_checkpoints(directory)
     return steps[-1] if steps else None
 

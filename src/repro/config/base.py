@@ -370,7 +370,37 @@ class ServeConfig:
     # arbitrarily deep prompt bodies.
     prefix_share_pages: int = 8
 
+    # --- fault tolerance (ISSUE 6) -----------------------------------------
+    # Bounded admission queue: 0 = unbounded (legacy).  When full, "reject"
+    # makes submit() raise QueueFull; "shed-oldest" cancels the OLDEST
+    # pending request to admit the new one (freshness-biased shedding).
+    max_queue: int = 0
+    queue_policy: str = "reject"      # reject | shed-oldest
+    # Per-request deadline in SCHEDULER STEPS from submission (0 = none).
+    # Steps — not wall-clock — keep chaos tests deterministic; one step is
+    # one decode iteration of the continuous loop.
+    request_timeout_steps: int = 0
+    # Transient per-request faults (injected faults, NaN logits, torn
+    # admissions) retry up to this many times with exponential backoff in
+    # scheduler steps: retry i waits retry_backoff_steps · 2^(i-1), capped.
+    max_request_retries: int = 2
+    retry_backoff_steps: int = 1
+    retry_backoff_cap_steps: int = 16
+    # Run audit_serving_state() every N scheduler steps (0 = off outside
+    # teardowns; chaos tests set 1).  The audit is host-side bookkeeping —
+    # O(pages + residents) — so small N is affordable even in production.
+    audit_every: int = 0
+
     def __post_init__(self):
+        if self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+        if self.queue_policy not in ("reject", "shed-oldest"):
+            raise ValueError(f"unknown queue_policy {self.queue_policy!r}")
+        if self.request_timeout_steps < 0 or self.audit_every < 0:
+            raise ValueError("request_timeout_steps / audit_every >= 0")
+        if (self.max_request_retries < 0 or self.retry_backoff_steps < 0
+                or self.retry_backoff_cap_steps < 0):
+            raise ValueError("retry knobs must be >= 0")
         if self.page_size < 0 or self.n_pages < 0:
             raise ValueError("page_size / n_pages must be >= 0")
         if self.page_size == 0:

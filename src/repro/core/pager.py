@@ -59,6 +59,20 @@ class PoolExhausted(RuntimeError):
     """No free page: admission must stall or a resident must be evicted."""
 
 
+class PagerInvariantError(RuntimeError):
+    """A pager bookkeeping invariant is broken (page leak, double free,
+    refcount drift, gauge mismatch).  Typed — unlike the ``assert``-based
+    checks it replaces, it survives ``python -O`` and can be caught and
+    reported by the serving loop's auditor."""
+
+
+# Fault-injection callback, wired by ``repro.serve.faults.install`` (the
+# pager must not import that module — the import would be cyclic through
+# ``serve.__init__``).  None when injection is off: alloc pays one ``is
+# not None`` check and nothing else.
+_fault_hook = None
+
+
 class PagePool:
     """Refcounted block-pool allocator (host-side bookkeeping only)."""
 
@@ -83,10 +97,14 @@ class PagePool:
 
     def alloc(self) -> int:
         """Pop a free page (refcount 1).  O(1).  Raises PoolExhausted."""
+        if _fault_hook is not None:
+            _fault_hook("page_alloc")
         if not self._free:
             raise PoolExhausted(f"all {self.n_pages} pages in use")
         pid = self._free.pop()
-        assert self._ref[pid] == 0
+        if self._ref[pid] != 0:
+            raise PagerInvariantError(f"free-stack page {pid} has refcount "
+                                      f"{int(self._ref[pid])}")
         self._ref[pid] = 1
         return pid
 
@@ -128,17 +146,23 @@ class PagePool:
         return self.pages_free * self.page_size
 
     def check(self) -> None:
-        """Internal consistency (tests): refcounts vs the free list."""
+        """Internal consistency: refcounts vs the free list.  Raises
+        :class:`PagerInvariantError` (not ``assert`` — ``python -O`` must
+        not strip the serving loop's safety net)."""
         free = set(self._free)
-        assert len(free) == len(self._free), "free list has duplicates"
+        if len(free) != len(self._free):
+            raise PagerInvariantError("free list has duplicates")
         for pid in range(self.n_reserved, self.n_pages):
             if pid in free:
-                assert self._ref[pid] == 0, f"free page {pid} has refs"
-            else:
-                assert self._ref[pid] > 0, f"live page {pid} has no refs"
+                if self._ref[pid] != 0:
+                    raise PagerInvariantError(
+                        f"free page {pid} has {int(self._ref[pid])} refs")
+            elif self._ref[pid] <= 0:
+                raise PagerInvariantError(f"live page {pid} has no refs")
         for pid in range(self.n_reserved):
-            assert self._ref[pid] == 0 and pid not in free, \
-                f"reserved page {pid} leaked into circulation"
+            if self._ref[pid] != 0 or pid in free:
+                raise PagerInvariantError(
+                    f"reserved page {pid} leaked into circulation")
 
 
 class PageTable:
@@ -212,9 +236,16 @@ class PageTable:
 # Prefix sharing: page-granular token-id radix trie
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class PrefixEntry:
     """One registered prompt prefix (inserted at admission).
+
+    ``eq=False``: entries are IDENTITY objects.  Field-wise dataclass
+    equality would compare the numpy ``tokens`` arrays elementwise —
+    ``PrefixIndex.evict``'s ``list.remove`` walks the entry list comparing
+    candidates, and two entries with different prefix lengths would raise
+    a broadcast ValueError before the victim is even reached (found by
+    the chaos census in tests/test_chaos.py).
 
     ``page_ids``       physical pages of the whole-page prefix; the entry
                        holds its OWN refcount on each (released on evict).
@@ -356,3 +387,69 @@ class PrefixIndex:
         for parent, key in reversed(path):    # prune childless nodes
             if not parent[key]:
                 parent.pop(key)
+
+
+# ---------------------------------------------------------------------------
+# Cross-structure invariant auditor (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def audit_pager(pool: PagePool, tables, entries, gauges=None) -> None:
+    """Prove page conservation across every structure that holds pages.
+
+    ``tables``   iterable of live :class:`PageTable` (one per resident or
+                 in-flight admission);
+    ``entries``  iterable of live :class:`PrefixEntry` (each pins its
+                 ``page_ids`` with its own refcounts);
+    ``gauges``   optional dict with ``pages_in_use`` / ``pages_free`` as
+                 exported by the scheduler's ``pool_gauges`` rows.
+
+    Invariants (each failure raises :class:`PagerInvariantError`):
+      1. pool-internal: free stack vs refcounts (:meth:`PagePool.check`);
+      2. per-page conservation: for every non-reserved page, the pool
+         refcount equals (table references) + (prefix-entry pins) — no
+         orphaned refs (leak) and no structure referencing a freed page
+         (use-after-free);
+      3. global conservation: free + live == n_pages − n_reserved (implied
+         by 1, restated over the external census so a drifted gauge or a
+         table row pointing at a reserved page is caught here);
+      4. gauge consistency with the pool.
+    """
+    pool.check()
+    held = np.zeros((pool.n_pages,), np.int64)
+    for t in tables:
+        for pid in t.pages:
+            if not (0 <= pid < pool.n_pages):
+                raise PagerInvariantError(f"table maps bogus page {pid}")
+            if pid < pool.n_reserved:
+                raise PagerInvariantError(
+                    f"table maps reserved/trash page {pid}")
+            held[pid] += 1
+    for e in entries:
+        for pid in e.page_ids:
+            if not (pool.n_reserved <= pid < pool.n_pages):
+                raise PagerInvariantError(
+                    f"prefix entry pins bogus page {pid}")
+            held[pid] += 1
+    free = set(pool._free)
+    for pid in range(pool.n_reserved, pool.n_pages):
+        ref = pool.refcount(pid)
+        if held[pid] != ref:
+            kind = "leaked (pool ref without owner)" if ref > held[pid] \
+                else "over-referenced (owner without pool ref)"
+            raise PagerInvariantError(
+                f"page {pid} {kind}: pool refcount {ref}, "
+                f"table refs + prefix pins {int(held[pid])}")
+        if held[pid] > 0 and pid in free:
+            raise PagerInvariantError(
+                f"page {pid} is on the free stack but referenced")
+    n_live = int(np.count_nonzero(held[pool.n_reserved:]))
+    if pool.pages_free + n_live != pool.n_pages - pool.n_reserved:
+        raise PagerInvariantError(
+            f"conservation broken: {pool.pages_free} free + {n_live} live "
+            f"!= {pool.n_pages} - {pool.n_reserved} reserved")
+    if gauges is not None:
+        for key, want in (("pages_in_use", pool.pages_in_use),
+                          ("pages_free", pool.pages_free)):
+            if key in gauges and gauges[key] != want:
+                raise PagerInvariantError(
+                    f"gauge {key}={gauges[key]} drifted from pool {want}")

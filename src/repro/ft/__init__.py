@@ -1,4 +1,5 @@
-from repro.ft.supervisor import Supervisor, run_with_restarts
+from repro.ft.supervisor import RestartsExhausted, Supervisor, run_with_restarts
 from repro.ft.straggler import StragglerMonitor
 
-__all__ = ["StragglerMonitor", "Supervisor", "run_with_restarts"]
+__all__ = ["RestartsExhausted", "StragglerMonitor", "Supervisor",
+           "run_with_restarts"]

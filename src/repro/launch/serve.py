@@ -110,6 +110,26 @@ def main() -> None:
                     help="disable COW prefix sharing (paged mode): every "
                          "request prefills and stores its full prompt")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (ISSUE 6): submit past "
+                         "this depth applies --queue-policy; 0 = unbounded")
+    ap.add_argument("--queue-policy", default="reject",
+                    choices=("reject", "shed-oldest"),
+                    help="full-queue backpressure: reject raises QueueFull "
+                         "at the client; shed-oldest cancels the stalest "
+                         "pending request to admit the new one")
+    ap.add_argument("--request-timeout-steps", type=int, default=0,
+                    help="per-request deadline in scheduler steps (0 = "
+                         "none); expiry tears the request down as "
+                         "TIMED_OUT through the standard teardown path")
+    ap.add_argument("--max-request-retries", type=int, default=2,
+                    help="transient per-request faults retry this many "
+                         "times with exponential backoff in steps before "
+                         "the request fails")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the cross-structure pager invariant audit "
+                         "every N scheduler steps (0 = off); host-side "
+                         "O(pages + residents) per run")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -158,6 +178,11 @@ def main() -> None:
                        prefill_token_budget=args.prefill_budget,
                        page_size=args.page_size, n_pages=args.n_pages,
                        prefix_cache=args.prefix_cache,
+                       max_queue=args.max_queue,
+                       queue_policy=args.queue_policy,
+                       request_timeout_steps=args.request_timeout_steps,
+                       max_request_retries=args.max_request_retries,
+                       audit_every=args.audit_every,
                        sals=sals or SALSConfig(enabled=False))
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility
@@ -172,10 +197,15 @@ def main() -> None:
     t0 = time.time()
     done = sched.run()
     dt = time.time() - t0
-    total_new = sum(r.result.steps for r in done)
-    print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
-          f"-> {total_new / dt:.1f} tok/s "
+    ok = [r for r in done if r.done]
+    total_new = sum(r.result.steps for r in ok)
+    print(f"[serve] {len(ok)}/{len(done)} requests ok, {total_new} tokens "
+          f"in {dt:.2f}s -> {total_new / dt:.1f} tok/s "
           f"(sals={args.sals}, arch={args.arch}, scheduler={sched.mode})")
+    bad = [r for r in done if not r.done]
+    if bad:
+        print(f"[serve] terminal non-success: "
+              + ", ".join(f"req {r.req_id}={r.state.value}" for r in bad))
     if sched.paged:
         hw = max((g["pages_in_use"] for g in sched.pool_gauges), default=0)
         print(f"[serve] paged pool: {sched.pool.n_pages - 1} pages × "
@@ -184,7 +214,7 @@ def main() -> None:
               f"cow_copies={sched.cow_copies} "
               f"stalls={sched.admission_stalls} "
               f"evictions={sched.evictions}")
-    for r in done[:3]:
+    for r in ok[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")
 

@@ -1,4 +1,12 @@
+from repro.serve import faults
 from repro.serve.engine import ServeEngine
+from repro.serve.lifecycle import (LifecycleError, NanLogitsError, QueueFull,
+                                   RequestCancelled, RequestState,
+                                   RequestTimeout, ServingError)
 from repro.serve.scheduler import Request, RequestScheduler
 
-__all__ = ["Request", "RequestScheduler", "ServeEngine"]
+__all__ = [
+    "LifecycleError", "NanLogitsError", "QueueFull", "Request",
+    "RequestCancelled", "RequestScheduler", "RequestState", "RequestTimeout",
+    "ServeEngine", "ServingError", "faults",
+]

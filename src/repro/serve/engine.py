@@ -44,6 +44,7 @@ import numpy as np
 from repro.config import ModelConfig, SALSConfig, ServeConfig
 from repro.core.latent_cache import LatentKVCache
 from repro.models import transformer as tf
+from repro.serve.faults import maybe_fault
 
 
 @dataclasses.dataclass
@@ -360,6 +361,19 @@ class ServeEngine:
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
+    def sample_checked(self, logits: jnp.ndarray, key
+                       ) -> Tuple[jnp.ndarray, np.ndarray]:
+        """Sample plus a per-row validity verdict: ``ok[i]`` is False when
+        row i's logits contain NaN/inf or the sampled id falls outside the
+        vocab.  The scheduler fails ONLY the flagged rows (NanLogitsError,
+        transient) — the other residents' tokens are taken as-is, which is
+        what confines a poisoned row to its own request."""
+        tok = self._sample(logits, key)
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        in_vocab = (tok >= 0) & (tok < self.cfg.vocab_size)
+        ok = np.asarray(finite & in_vocab)
+        return tok, ok
+
     # -- continuous-batching primitives (used by RequestScheduler) -----------
 
     def init_slot_cache(self):
@@ -396,6 +410,7 @@ class ServeEngine:
         toks = np.full((1, n * c), self.scfg.pad_id, np.int32)
         toks[0, :plen] = prompt
         if resume is not None:
+            maybe_fault("prefix_resume")
             entry, n_shared = resume
             start = n_shared * self.scfg.page_size // c
             if not 0 < start < n:
@@ -415,6 +430,10 @@ class ServeEngine:
         and ``task.cache`` the finished single-slot cache)."""
         c = self.scfg.prefill_chunk
         j = task.next_chunk
+        # fault point BEFORE the jitted call: _prefill_chunk donates
+        # cache/scratch, so an injection after it would leave the task
+        # holding dead buffers — firing here keeps the task retryable
+        maybe_fault("prefill_chunk")
         chunk = jnp.asarray(task.tokens[:, j * c:(j + 1) * c])
         task.logits, task.cache, task.scratch = self._prefill_chunk(
             chunk, task.cache, task.scratch, jnp.int32(j * c),
@@ -451,6 +470,7 @@ class ServeEngine:
     def admit(self, cache, one_cache, slot: int):
         """Splice a prefilled single-request cache into batch row ``slot``
         of a running slot arena (same compiled HLO for every slot)."""
+        maybe_fault("admit")        # before the donate: arena stays alive
         return self._admit(cache, one_cache, jnp.int32(slot))
 
     def admit_paged(self, cache, one_cache, slot: int, page_ids, start_page:
@@ -459,6 +479,7 @@ class ServeEngine:
         the pool pages ``page_ids`` (host list, padded to a table row) and
         install the slot's metadata.  Shared prefix pages are never
         rewritten."""
+        maybe_fault("admit")        # before the donate: arena stays alive
         mp = self.scfg.max_seq_len // self.scfg.page_size
         row = np.zeros((mp,), np.int32)
         row[:len(page_ids)] = page_ids
@@ -468,6 +489,7 @@ class ServeEngine:
 
     def copy_page(self, cache, src: int, dst: int):
         """Device half of copy-on-write: duplicate pool page src -> dst."""
+        maybe_fault("cow_copy")     # before the donate: arena stays alive
         return self._copy_page(cache, jnp.int32(src), jnp.int32(dst))
 
     def release_slot(self, cache, slot: int):

@@ -44,12 +44,45 @@ dense slot arena, and this scheduler is its MEMORY MANAGER:
     (pages_in_use / pages_free / cumulative counters) — the capacity
     ledger tests and benchmarks read.
 
+FAULT TOLERANCE (ISSUE 6).  Every request carries the terminal state
+machine of ``serve/lifecycle.py`` (QUEUED → PREFILLING → DECODING →
+{DONE, FAILED, CANCELLED, TIMED_OUT}); all mutations go through
+``lifecycle.transition``.  The guarantees:
+
+  * ISOLATION — a fault in any per-request phase (prefill chunk, admission
+    splice, page alloc / COW during upkeep, NaN/inf logits or out-of-vocab
+    sample on one row) fails THAT request only; its pages, prefix pins and
+    slot are released through one idempotent teardown and the remaining
+    residents keep decoding.  The engine's injection points fire BEFORE
+    each donating jitted call, so an injected fault never strands donated
+    buffers — a real fault after donation is unrecoverable by design and
+    propagates.
+  * BOUNDED RETRY — faults marked ``transient`` requeue the request with
+    exponential backoff in scheduler steps (``retry_backoff_steps · 2^i``
+    capped at ``retry_backoff_cap_steps``) up to ``max_request_retries``;
+    greedy decoding makes every re-run token-exact.  Batch-wide
+    ``decode_step`` faults retry the step itself under the same bound.
+  * DEADLINES & CANCELLATION — ``request_timeout_steps`` (per-request
+    override on ``Request.timeout_steps``) and ``Request.cancel()`` both
+    route through the same teardown at the next step boundary, whatever
+    phase the request is in.
+  * BACKPRESSURE — ``max_queue`` bounds the pending queue; ``submit``
+    raises ``QueueFull`` ("reject") or cancels the oldest pending request
+    ("shed-oldest").
+  * AUDIT — ``audit_serving_state()`` proves page conservation across
+    pool / page tables / prefix pins / gauges (``core.pager.audit_pager``)
+    plus slot↔state coherence; it runs every ``audit_every`` steps and on
+    every teardown when auditing is enabled.
+
 "static" mode survives as the GPT-fast-style baseline (and the fallback for
 recurrent-state families, whose prefill can neither right-pad nor chunk):
 fixed-size batches, length-bucketed FIFO, monolithic prefill →
 decode-until-drained per batch.
 
-Results are delivered on the ``Request`` objects in both modes.
+Results are delivered on the ``Request`` objects in both modes; ``run``
+returns every request that reached a terminal state during the call, in
+completion order — check ``Request.state`` / ``Request.error`` to tell
+DONE apart from FAILED / CANCELLED / TIMED_OUT.
 """
 from __future__ import annotations
 
@@ -62,8 +95,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pager import PagePool, PageTable, PrefixIndex
+from repro.core.pager import (PagePool, PageTable, PagerInvariantError,
+                              PrefixIndex, audit_pager)
+from repro.serve import faults
 from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
+from repro.serve.lifecycle import (NanLogitsError, QueueFull,
+                                   RequestCancelled, RequestState,
+                                   RequestTimeout, transition)
 
 _req_ids = itertools.count()
 
@@ -74,10 +112,30 @@ class Request:
     max_new_tokens: int = 32
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
     result: Optional[GenerationResult] = None
+    # --- lifecycle (ISSUE 6) ------------------------------------------------
+    state: RequestState = RequestState.QUEUED
+    error: Optional[BaseException] = None
+    timeout_steps: Optional[int] = None   # None = ServeConfig default
+    retries: int = 0                      # transient-fault retries consumed
+    deadline_step: Optional[int] = None   # set at submit
+    not_before_step: int = 0              # retry backoff gate
+    cancel_requested: bool = False
+
+    def cancel(self) -> None:
+        """Client cancellation: honored at the next scheduler step
+        boundary via the same teardown path as faults and timeouts."""
+        self.cancel_requested = True
 
     @property
     def done(self) -> bool:
-        return self.result is not None
+        """Completed successfully (full budget generated)."""
+        return self.state is RequestState.DONE
+
+    @property
+    def finished(self) -> bool:
+        """Reached ANY terminal state (done / failed / cancelled / timed
+        out) — the request owns no serving resources anymore."""
+        return self.state.terminal
 
 
 @dataclasses.dataclass
@@ -146,6 +204,13 @@ class RequestScheduler:
         self.cow_copies: int = 0                # copy-on-write page dups
         self.admission_stalls: int = 0          # sweeps blocked on pages
         self.evictions: int = 0                 # evict-to-requeue events
+        # --- fault-tolerance observability (ISSUE 6) -----------------------
+        self.failures: int = 0                  # requests ending FAILED
+        self.timeouts: int = 0                  # requests ending TIMED_OUT
+        self.cancellations: int = 0             # requests ending CANCELLED
+        self.retries: int = 0                   # transient requeues granted
+        self.step_faults: int = 0               # batch-wide decode retries
+        self.shed: int = 0                      # queue-policy sheds
         self.paged = engine.paged and mode == "continuous"
         self.pool: Optional[PagePool] = None
         self.prefix_index: Optional[PrefixIndex] = None
@@ -156,6 +221,11 @@ class RequestScheduler:
                                  n_reserved=1)
             if scfg.prefix_cache:
                 self.prefix_index = PrefixIndex(self.pool)
+        # live loop state, mirrored on self so audit_serving_state can see
+        # it mid-run (tests also call it after run: drained == empty)
+        self._slots: List[Optional[_Slot]] = []
+        self._tables: List[Optional[PageTable]] = []
+        self._active: Optional[_Admission] = None
 
     def submit(self, req: Request) -> int:
         if req.max_new_tokens < 1:
@@ -175,15 +245,70 @@ class RequestScheduler:
                 raise ValueError(
                     f"req {req.req_id}: needs {need} pages at its longest; "
                     f"the pool has {self.engine.scfg.pool_pages}")
+        scfg = self.engine.scfg
+        if scfg.max_queue and len(self.pending) >= scfg.max_queue:
+            if scfg.queue_policy == "reject":
+                raise QueueFull(
+                    f"pending queue at max_queue={scfg.max_queue}")
+            # shed-oldest: the stalest pending request makes room — its
+            # submitter sees state CANCELLED with a QueueFull error
+            victim = self.pending.pop(0)
+            self._terminate(victim, RequestState.CANCELLED,
+                            QueueFull("shed for newer request"))
+            self.shed += 1
+        timeout = (req.timeout_steps if req.timeout_steps is not None
+                   else scfg.request_timeout_steps)
+        if timeout:
+            req.deadline_step = self.steps + timeout
         self.pending.append(req)
         return req.req_id
+
+    # ----------------------------------------------------------- lifecycle
+
+    def _terminate(self, req: Request, state: RequestState,
+                   error: Optional[BaseException] = None,
+                   issued: Optional[List[Request]] = None) -> None:
+        """Move ``req`` to a terminal state and record it.  The caller has
+        already released every resource the request held."""
+        transition(req, state, error)
+        if state is RequestState.FAILED:
+            self.failures += 1
+        elif state is RequestState.TIMED_OUT:
+            self.timeouts += 1
+        elif state is RequestState.CANCELLED:
+            self.cancellations += 1
+        self.completed[req.req_id] = req
+        if issued is not None:
+            issued.append(req)
+
+    def _backoff(self, retries: int) -> int:
+        scfg = self.engine.scfg
+        return min(scfg.retry_backoff_steps * (2 ** max(0, retries - 1)),
+                   scfg.retry_backoff_cap_steps)
+
+    def _fail_or_retry(self, req: Request, exc: BaseException,
+                       issued: List[Request]) -> None:
+        """Supervisor policy for one faulted request (resources already
+        released): transient faults requeue with exponential backoff in
+        scheduler steps; anything else — or an exhausted retry budget —
+        terminates the request as FAILED with the fault attached."""
+        scfg = self.engine.scfg
+        if getattr(exc, "transient", False) \
+                and req.retries < scfg.max_request_retries:
+            req.retries += 1
+            req.not_before_step = self.steps + self._backoff(req.retries)
+            transition(req, RequestState.QUEUED)
+            self.retries += 1
+            self.pending.append(req)
+        else:
+            self._terminate(req, RequestState.FAILED, exc, issued)
 
     # ------------------------------------------------------------------ run
 
     def run(self, on_batch: Optional[Callable[[List[Request]], None]] = None,
             on_step: Optional[Callable[["RequestScheduler", int], None]] = None
             ) -> List[Request]:
-        """Drain the queue; returns completed requests in completion order.
+        """Drain the queue; returns terminal requests in completion order.
 
         ``on_step`` (continuous mode) fires after every decode step — tests
         and clients use it to submit requests mid-generation; their prefill
@@ -207,9 +332,11 @@ class RequestScheduler:
         ps = eng.scfg.page_size
         mp = eng.scfg.max_seq_len // ps if self.paged else 0
         chunks_per_sweep = max(1, eng.scfg.prefill_token_budget // chunk)
+        audit_on = bool(eng.scfg.audit_every)
         cache = eng.init_slot_cache()
         slots: List[Optional[_Slot]] = [None] * b
-        active: Optional[_Admission] = None   # its slot stays reserved
+        self._slots = slots
+        self._active = None        # in-flight admission; its slot reserved
         tokens = np.zeros((b,), np.int32)
         positions = np.zeros((b,), np.int32)
         key = jax.random.PRNGKey(eng.scfg.seed)
@@ -217,8 +344,10 @@ class RequestScheduler:
         # paged state: per-slot page tables + the host mirror of the device
         # table (pushed when dirty — decode writes need the page mapped)
         tables: List[Optional[PageTable]] = [None] * b
+        self._tables = tables
         host_table = np.zeros((b, mp), np.int32) if self.paged else None
         dirty = [False]
+        fault_streak = 0           # consecutive batch-wide decode faults
 
         def release_pages(i: int):
             nonlocal cache
@@ -231,19 +360,45 @@ class RequestScheduler:
             dirty[0] = True
             cache = eng.release_slot(cache, i)   # metadata-only (lengths/pt)
 
+        def clear_slot(i: int):
+            """The idempotent slot teardown every exit path shares: frees
+            the row (parked at position 0 — paged: the trash page — so its
+            idle writes stay harmless), its pages, and its table entry.
+            Request-state bookkeeping is the CALLER's job."""
+            slots[i] = None        # recycled on the next admission sweep
+            tokens[i] = 0
+            positions[i] = 0
+            release_pages(i)
+            if audit_on:
+                self.audit_serving_state()
+
+        def teardown_admission(adm: _Admission):
+            """Release an in-flight admission's reservation (pages incl.
+            shared-prefix refcounts).  Idempotent: a torn reservation has
+            ptab=None already, release_all on an empty table is a no-op,
+            and no prefix entry exists yet (registration happens strictly
+            after a successful splice), so nothing can leak a pin."""
+            if adm.ptab is not None:
+                adm.ptab.release_all()
+                adm.ptab = None
+            if audit_on:
+                self.audit_serving_state()
+
         def finish(i: int):
             slot = slots[i]
             slot.req.result = GenerationResult(
                 np.asarray(slot.out, np.int32), len(slot.req.prompt),
                 len(slot.out))
-            self.completed[slot.req.req_id] = slot.req
-            issued.append(slot.req)
-            slots[i] = None        # recycled on the next admission sweep
-            tokens[i] = 0          # park the dead row at position 0: its
-            positions[i] = 0       # writes stay in-bounds (paged: page 0 is
-            #                        the trash page) and the slot is fully
-            #                        re-admitted before reuse anyway
-            release_pages(i)
+            clear_slot(i)
+            self._terminate(slot.req, RequestState.DONE, issued=issued)
+
+        def fail_resident(i: int, exc: BaseException):
+            """Per-request fault isolation: row ``i`` alone pays for its
+            fault — teardown, then retry-or-fail; every other resident
+            keeps decoding untouched."""
+            req = slots[i].req
+            clear_slot(i)
+            self._fail_or_retry(req, exc, issued)
 
         def drop_entries(n_needed: int, protect_entry=None) -> bool:
             """Evict least-recently-USED prefix-cache entries until
@@ -278,19 +433,30 @@ class RequestScheduler:
                     "produce different tokens", RuntimeWarning,
                     stacklevel=2)
             req = slots[i].req
-            slots[i] = None
-            tokens[i] = 0
-            positions[i] = 0
-            release_pages(i)
-            self.pending.insert(0, req)       # restarts from scratch
+            clear_slot(i)
+            transition(req, RequestState.QUEUED)   # eviction != a retry:
+            req.not_before_step = 0                # no fault, no backoff
+            self.pending.insert(0, req)            # restarts from scratch
             self.evictions += 1
+
+        def pop_eligible() -> Optional[Request]:
+            """First pending request whose retry backoff has elapsed (FIFO
+            among the eligible — a backing-off head must not block a fresh
+            arrival behind it)."""
+            for idx, r in enumerate(self.pending):
+                if r.not_before_step <= self.steps:
+                    return self.pending.pop(idx)
+            return None
 
         def try_reserve(req: Request) -> Optional[_Admission]:
             """Paged admission = page reservation: shared prefix pages +
             fresh suffix pages, or None (stall) if the pool can't cover
             the suffix right now.  The caller has POPPED ``req`` already —
             eviction-to-requeue inserts victims at the queue head, so the
-            request being reserved must not still occupy that position."""
+            request being reserved must not still occupy that position.
+            A fault mid-reservation (page_alloc, prefix_resume) releases
+            the partial table before propagating — reservation is
+            all-or-nothing."""
             prompt = np.asarray(req.prompt, np.int32)
             plen = len(prompt)
             entry, shared = (None, 0)
@@ -320,16 +486,21 @@ class RequestScheduler:
                     return None
             free = next(i for i in range(b) if slots[i] is None)
             ptab = PageTable(self.pool, mp)
-            for j in range(shared):
-                ptab.append_shared(entry.page_ids[j])
-            for _ in range(n_new):
-                ptab.append_page()
+            try:
+                for j in range(shared):
+                    ptab.append_shared(entry.page_ids[j])
+                for _ in range(n_new):
+                    ptab.append_page()
+                if shared:
+                    task = eng.start_prefill(prompt, resume=(entry, shared))
+                else:
+                    task = eng.start_prefill(prompt)
+            except BaseException:
+                ptab.release_all()         # all-or-nothing reservation
+                raise
             if shared:
                 self.prefix_hits += 1
                 self.prefix_index.touch(entry)
-                task = eng.start_prefill(prompt, resume=(entry, shared))
-            else:
-                task = eng.start_prefill(prompt)
             return _Admission(req, free, task, ptab=ptab,
                               shared_pages=shared, entry=entry)
 
@@ -361,59 +532,150 @@ class RequestScheduler:
                 dirty[0] = True
                 self.cow_copies += 1
 
-        while self.pending or active or any(s is not None for s in slots):
+        def sweep_deadlines_and_cancels():
+            """Honor cancel() and expired deadlines in EVERY phase through
+            the one teardown path.  Runs at each iteration boundary — a
+            request is never torn down mid-splice."""
+            for idx in range(len(self.pending) - 1, -1, -1):
+                req = self.pending[idx]
+                state = _overdue(req)
+                if state is not None:
+                    del self.pending[idx]
+                    self._terminate(req, state, _overdue_error(req, state),
+                                    issued)
+            adm = self._active
+            if adm is not None:
+                state = _overdue(adm.req)
+                if state is not None:
+                    teardown_admission(adm)
+                    self._active = None
+                    self._terminate(adm.req, state,
+                                    _overdue_error(adm.req, state), issued)
+            for i in range(b):
+                if slots[i] is None:
+                    continue
+                req = slots[i].req
+                state = _overdue(req)
+                if state is not None:
+                    clear_slot(i)
+                    self._terminate(req, state, _overdue_error(req, state),
+                                    issued)
+
+        def _overdue(req: Request) -> Optional[RequestState]:
+            if req.cancel_requested:
+                return RequestState.CANCELLED
+            if req.deadline_step is not None \
+                    and self.steps >= req.deadline_step:
+                return RequestState.TIMED_OUT
+            return None
+
+        def _overdue_error(req: Request, state: RequestState):
+            if state is RequestState.CANCELLED:
+                return RequestCancelled(f"req {req.req_id} cancelled")
+            return RequestTimeout(
+                f"req {req.req_id} missed deadline step {req.deadline_step}")
+
+        while self.pending or self._active \
+                or any(s is not None for s in slots):
+            sweep_deadlines_and_cancels()
+
             # ---- prefill sweep: ≤ budget tokens of chunk work, FIFO -------
             spent = 0
             while spent < chunks_per_sweep:
-                if active is None:
+                if self._active is None:
                     free = next((i for i in range(b) if slots[i] is None),
                                 None)
-                    if free is None or not self.pending:
+                    if free is None:
+                        break
+                    req = pop_eligible()
+                    if req is None:
                         break
                     if self.paged:
-                        req = self.pending.pop(0)
-                        active = try_reserve(req)
-                        if active is None:    # stalled on pages, not slots:
-                            # back to the head, BEFORE any evicted victims
+                        try:
+                            self._active = try_reserve(req)
+                        except Exception as exc:   # torn reservation
+                            self._fail_or_retry(req, exc, issued)
+                            continue
+                        if self._active is None:  # stalled on pages, not
+                            # slots: back to the head, BEFORE any evicted
+                            # victims
                             self.pending.insert(0, req)
                             break
                     else:
-                        req = self.pending.pop(0)
-                        active = _Admission(req, free,
-                                            eng.start_prefill(req.prompt))
+                        self._active = _Admission(req, free,
+                                                  eng.start_prefill(
+                                                      req.prompt))
+                    transition(req, RequestState.PREFILLING)
+                active = self._active
                 self.prefill_chunks.append(
                     (self.steps, active.req.req_id, active.task.next_chunk,
                      sum(s is not None for s in slots)))
-                eng.prefill_chunk_step(active.task)
+                try:
+                    eng.prefill_chunk_step(active.task)
+                except Exception as exc:
+                    # the task's own cache/scratch are lost (donated or
+                    # torn) but the ARENA is untouched: release the
+                    # reservation, retry-or-fail this request alone
+                    teardown_admission(active)
+                    self._active = None
+                    self._fail_or_retry(active.req, exc, issued)
+                    spent += 1
+                    continue
                 spent += 1
                 if active.task.done:
                     i = active.slot
+                    try:
+                        if self.paged:
+                            cache = eng.admit_paged(
+                                cache, active.task.cache, i,
+                                active.ptab.pages, active.shared_pages,
+                                active.task.prompt_len)
+                        else:
+                            cache = eng.admit(cache, active.task.cache, i)
+                    except Exception as exc:     # torn splice (pre-donate)
+                        teardown_admission(active)
+                        self._active = None
+                        self._fail_or_retry(active.req, exc, issued)
+                        continue
                     if self.paged:
-                        cache = eng.admit_paged(
-                            cache, active.task.cache, i, active.ptab.pages,
-                            active.shared_pages, active.task.prompt_len)
                         tables[i] = active.ptab
                         host_table[i] = 0
                         host_table[i, :active.ptab.n_pages] = \
                             active.ptab.pages
                         dirty[0] = True
                         self._register_prefix(active)
-                    else:
-                        cache = eng.admit(cache, active.task.cache, i)
+                    # ownership of ptab just moved to tables[i]: drop the
+                    # admission NOW so a teardown audit below cannot count
+                    # the same table twice (resident + in-flight)
+                    self._active = None
+                    transition(active.req, RequestState.DECODING)
                     key, sub = jax.random.split(key)
-                    tok0 = int(np.asarray(
-                        eng._sample(active.task.logits, sub))[0])
+                    tok_arr, ok = eng.sample_checked(active.task.logits, sub)
+                    if not ok[0]:
+                        # poisoned prompt logits: this request alone fails
+                        slots[i] = _Slot(active.req, out=[])
+                        fail_resident(i, NanLogitsError(
+                            f"req {active.req.req_id}: non-finite prefill "
+                            "logits"))
+                        continue
+                    tok0 = int(np.asarray(tok_arr)[0])
                     slots[i] = _Slot(active.req, out=[tok0])
                     tokens[i] = tok0
                     positions[i] = len(active.req.prompt)
                     self.admissions.append((self.steps, i, active.req.req_id))
                     if len(slots[i].out) >= active.req.max_new_tokens:
                         finish(i)
-                    active = None
 
             if not any(s is not None for s in slots):
-                if not (self.pending or active):
+                if not (self.pending or self._active):
                     break
+                if self._active is None and self.pending:
+                    # arena idle and every pending request is backing off:
+                    # fast-forward the step clock to the earliest gate so
+                    # retry waits cannot busy-livelock an empty arena
+                    nxt = min(r.not_before_step for r in self.pending)
+                    if nxt > self.steps:
+                        self.steps = nxt
                 continue            # nothing resident yet: keep prefilling
 
             # ---- paged upkeep: map/COW every row's write page, then push
@@ -421,22 +683,51 @@ class RequestScheduler:
             if self.paged:
                 for i in range(b):
                     if slots[i] is not None:
-                        ensure_writable(i)
+                        try:
+                            ensure_writable(i)
+                        except Exception as exc:   # alloc/COW fault: only
+                            fail_resident(i, exc)  # row i pays
                 if dirty[0]:
                     cache = eng.with_page_tables(cache, host_table)
                     dirty[0] = False
+                if not any(s is not None for s in slots):
+                    continue       # upkeep evicted/failed every resident
 
             # ---- one ragged decode step for the whole arena ---------------
             # (empty slots idle at position 0, harmlessly rewriting their
             # own row's slot-0 cache line — paged: the trash page; the SAME
             # compiled HLO serves every step and every admission pattern)
+            try:
+                # batch-wide fault point; BEFORE _decode donates the cache
+                faults.maybe_fault("decode_step")
+            except faults.InjectedFault:
+                # nothing ran: retry the whole step, bounded so a rate-1.0
+                # schedule cannot spin forever
+                self.step_faults += 1
+                fault_streak += 1
+                if fault_streak > self.engine.scfg.max_request_retries:
+                    raise
+                continue
+            fault_streak = 0
             logits, cache = eng._decode(
                 jnp.asarray(tokens), cache, jnp.asarray(positions))
+            live = [i for i in range(b) if slots[i] is not None]
+            pick = faults.maybe_pick("nan_logits", len(live))
+            if pick is not None:
+                # poison ONE live row's logits — the blast radius the
+                # sample_checked verdict must confine to that row
+                logits = logits.at[live[pick]].set(jnp.nan)
             key, sub = jax.random.split(key)
-            new_toks = np.asarray(eng._sample(logits, sub))
+            tok_arr, ok = eng.sample_checked(logits, sub)
+            new_toks = np.asarray(tok_arr)
             self.steps += 1
             for i in range(b):
                 if slots[i] is None:
+                    continue
+                if not ok[i]:
+                    fail_resident(i, NanLogitsError(
+                        f"req {slots[i].req.req_id}: non-finite logits or "
+                        f"out-of-vocab token at step {self.steps}"))
                     continue
                 slots[i].out.append(int(new_toks[i]))
                 tokens[i] = new_toks[i]
@@ -455,9 +746,39 @@ class RequestScheduler:
                     "prefix_entries": len(self.prefix_index.entries)
                     if self.prefix_index else 0,
                 })
+            if audit_on and self.steps % self.engine.scfg.audit_every == 0:
+                self.audit_serving_state(
+                    self.pool_gauges[-1] if self.pool_gauges else None)
             if on_step:
                 on_step(self, self.steps)
         return issued
+
+    # ---------------------------------------------------------------- audit
+
+    def audit_serving_state(self, gauges: Optional[dict] = None) -> None:
+        """Cross-structure invariant audit (ISSUE 6): prove the pool, every
+        live page table (residents + in-flight admission), the prefix
+        index's pins, and the exported gauges agree — conservation of
+        pages, no use-after-free, no leak — plus slot↔request-state
+        coherence.  Raises :class:`PagerInvariantError`.  Host-side only:
+        O(pages + residents), no device sync."""
+        for i, s in enumerate(self._slots):
+            if s is not None and s.req.state is not RequestState.DECODING:
+                raise PagerInvariantError(
+                    f"slot {i} resident req {s.req.req_id} in state "
+                    f"{s.req.state.value}, expected decoding")
+            if self.paged and s is None and i < len(self._tables) \
+                    and self._tables[i] is not None:
+                raise PagerInvariantError(
+                    f"slot {i} is empty but still owns a page table")
+        if not self.paged:
+            return
+        tables = [t for t in self._tables if t is not None]
+        adm = self._active
+        if adm is not None and adm.ptab is not None:
+            tables.append(adm.ptab)
+        entries = self.prefix_index.entries if self.prefix_index else []
+        audit_pager(self.pool, tables, entries, gauges=gauges)
 
     def _register_prefix(self, adm: _Admission) -> None:
         """Register a finished prefill's whole-page prefix for sharing.
@@ -494,13 +815,29 @@ class RequestScheduler:
     # ---------------------------------------------------------------- static
 
     def _run_static(self, on_batch) -> List[Request]:
-        """GPT-fast-style: drain fixed batches back to back."""
+        """GPT-fast-style: drain fixed batches back to back.  Lifecycle
+        support is minimal but honest: cancellations requested before a
+        batch starts are honored; states move QUEUED → PREFILLING →
+        DECODING → DONE around each monolithic generate."""
         issued: List[Request] = []
         # length-bucket inside the admission window
         self.pending.sort(key=lambda r: len(r.prompt))
         while self.pending:
+            for idx in range(len(self.pending) - 1, -1, -1):
+                req = self.pending[idx]
+                if req.cancel_requested:
+                    del self.pending[idx]
+                    self._terminate(req, RequestState.CANCELLED,
+                                    RequestCancelled(
+                                        f"req {req.req_id} cancelled"),
+                                    issued)
             batch = self.pending[:self.max_batch]
             del self.pending[:len(batch)]
+            if not batch:
+                break
+            for req in batch:
+                transition(req, RequestState.PREFILLING)
+                transition(req, RequestState.DECODING)
             mnt = max(r.max_new_tokens for r in batch)
             results = self.engine.generate(
                 [r.prompt for r in batch], max_new_tokens=mnt)
@@ -508,8 +845,7 @@ class RequestScheduler:
                 req.result = GenerationResult(
                     res.tokens[:req.max_new_tokens], res.prompt_len,
                     min(res.steps, req.max_new_tokens))
-                self.completed[req.req_id] = req
-            issued.extend(batch)
+                self._terminate(req, RequestState.DONE, issued=issued)
             if on_batch:
                 on_batch(batch)
         return issued

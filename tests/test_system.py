@@ -158,6 +158,93 @@ def test_checkpoint_ignores_partial_tmp(tmp_path, trained):
     assert step == 5
 
 
+def test_checkpoint_latest_survives_torn_pointer(tmp_path, trained):
+    """ISSUE 6 satellite: the LATEST pointer is advisory.  A torn write
+    (garbage content) or truncation must fall back to the manifest-verified
+    directory scan, not crash or return None."""
+    cfg, params, _ = trained
+    state = {"params": params}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 5, state)
+    ckpt.save(d, 7, state)
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_garbage\x00\x00")          # torn/corrupt pointer
+    assert ckpt.latest_step(d) == 7
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("")                              # truncated to empty
+    assert ckpt.latest_step(d) == 7
+    _, step = ckpt.restore(d, state)
+    assert step == 7
+
+
+def test_checkpoint_latest_survives_dangling_pointer(tmp_path, trained):
+    """A pointer naming a pruned (or never-completed) step dir must not be
+    trusted: scan wins.  Also: pointer at a dir whose manifest is missing
+    counts as incomplete."""
+    import shutil
+    cfg, params, _ = trained
+    state = {"params": params}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, state)
+    ckpt.save(d, 9, state)
+    shutil.rmtree(os.path.join(d, "step_000000009"))   # pruned behind LATEST
+    assert ckpt.latest_step(d) == 3
+    _, step = ckpt.restore(d, state)
+    assert step == 3
+    # dir exists but manifest never landed -> still not trusted
+    os.makedirs(os.path.join(d, "step_000000011"))
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_000000011")
+    assert ckpt.latest_step(d) == 3
+    # no checkpoints at all: None, not an exception
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    with open(os.path.join(empty, "LATEST"), "w") as f:
+        f.write("step_000000001")
+    assert ckpt.latest_step(empty) is None
+
+
+def test_supervisor_passes_resume_step_through(tmp_path):
+    """ISSUE 6 satellite: ``work(resume_step)`` receives the RESTORED step
+    from the ``resume`` callable on retries (None on the first attempt) —
+    the old contract passed a ``-1`` flag and made work re-derive it."""
+    seen = []
+    attempts = {"n": 0}
+
+    def work(resume_step):
+        seen.append(resume_step)
+        attempts["n"] += 1
+        if attempts["n"] < 3:
+            raise RuntimeError(f"boom {attempts['n']}")
+        return "done"
+
+    sup = Supervisor(max_restarts=3, log=lambda *_: None)
+    out = sup.run(work, resume=lambda: 40 + attempts["n"] * 2)
+    assert out == "done"
+    assert seen == [None, 42, 44]       # fresh start, then restored steps
+    assert sup.restarts == 2
+
+
+def test_supervisor_backoff_exponential_with_cap(monkeypatch):
+    """Retry i sleeps min(backoff · 2^(i-1), cap) — and exhaustion raises
+    RestartsExhausted chained to the last worker fault."""
+    import time as _time
+    from repro.ft import RestartsExhausted
+    sleeps = []
+    monkeypatch.setattr(_time, "sleep", sleeps.append)
+
+    def work(_):
+        raise RuntimeError("always down")
+
+    sup = Supervisor(max_restarts=4, backoff_s=1.0, backoff_cap_s=5.0,
+                     log=lambda *_: None)
+    with pytest.raises(RestartsExhausted) as ei:
+        sup.run(work)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert sleeps == [1.0, 2.0, 4.0, 5.0]   # doubling, then capped
+    assert sup.restarts == 5                # 4 retries + the fatal attempt
+
+
 def test_supervisor_restarts_and_resumes(tmp_path):
     """Crash mid-training; supervisor resumes from the checkpoint and the
     final state matches an uninterrupted run (deterministic data)."""
