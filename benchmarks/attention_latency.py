@@ -28,7 +28,8 @@ from benchmarks import common
 from benchmarks.memory_access import (decode_stage_bytes,
                                       fault_degradation_model,
                                       paged_capacity_model,
-                                      prefill_chunk_bytes, traffic_ratio)
+                                      prefill_chunk_bytes,
+                                      tiered_capacity_model, traffic_ratio)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
 
@@ -159,6 +160,36 @@ def paged_capacity_rows():
     return rows
 
 
+def tiered_capacity_rows():
+    """ISSUE 7 ledger: two-tier page pool at the paper config — HBM bytes
+    single-tier vs tiered (score slices for every live page + ``hbm_pages``
+    payload slots), host-mirror footprint, and the PCIe bytes/step the
+    selection working set demands at representative cold-miss rates (the
+    measured step-to-step selection-stability cell bounds the miss rate:
+    a stable selection prefetches itself)."""
+    cfg = get_config("paper-llama2-7b")
+    rows = []
+    for variant, v_bits, ratio in (("25", 8, 0.25), ("12.5", 4, 0.125)):
+        sals = SALSConfig(rank_ratio=ratio, v_bits=v_bits, n_critical=512,
+                          n_sink=16, n_recent=64, v_group=64)
+        # 8 residents × 4k live tokens at page 64 = 512 live pages; the
+        # per-step working set is the sorted whole-page burst bound
+        # n_critical/ps per row
+        page_size = 64
+        live = 8 * 4096 // page_size
+        touched = 8 * (sals.n_critical // page_size)
+        for hbm_pages in (live // 4, live // 2):
+            for miss in (0.02, 0.10):
+                m = tiered_capacity_model(cfg, sals, page_size,
+                                          live_pages=live,
+                                          hbm_pages=hbm_pages,
+                                          pages_touched=touched,
+                                          cold_miss_rate=miss)
+                rows.append({"model": "paper-llama2-7b",
+                             "sals": f"SALS-{variant}%", **m})
+    return rows
+
+
 def fault_degradation_rows():
     """ISSUE 6 ledger: modeled graceful degradation of the fault-tolerant
     scheduler — committed-step throughput, expected per-request attempts,
@@ -203,6 +234,14 @@ def run() -> list:
           r["prefix_sharing_gain"]) for r in paged_rows],
         ["sals", "page", "lat_B_tok", "table_frac", "capacity_x",
          "prefix_x"])
+    tiered_rows = tiered_capacity_rows()
+    common.emit(
+        [(r["sals"], r["hbm_pages"], r["live_pages"],
+          r["hbm_savings_x"], r["host_mirror_bytes"],
+          r["cold_miss_rate"], r["pcie_bytes_per_step"])
+         for r in tiered_rows],
+        ["sals", "hbm_pages", "live_pages", "hbm_x", "host_B",
+         "miss_rate", "pcie_B_step"])
     fault_rows = fault_degradation_rows()
     common.emit(
         [(r["step_fault_rate"], r["request_fault_rate"],
@@ -220,8 +259,15 @@ def run() -> list:
         "traffic_model": model_rows,
         "prefill_traffic_model": prefill_rows,
         "paged_capacity_model": paged_rows,
+        "tiered_capacity_model": tiered_rows,
         "fault_degradation_model": fault_rows,
     }
+    # the measured selection-stability cell (benchmarks/overlap_score.py)
+    # lives in the same file — carry it across re-emits
+    if BENCH_JSON.exists():
+        prev = json.loads(BENCH_JSON.read_text())
+        if "selection_stability" in prev:
+            payload["selection_stability"] = prev["selection_stability"]
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")
     return rows + model_rows

@@ -26,14 +26,21 @@ from benchmarks.attention_latency import (BENCH_JSON,
                                           fault_degradation_rows,
                                           paged_capacity_rows,
                                           prefill_traffic_rows,
+                                          tiered_capacity_rows,
                                           traffic_model_rows)
 
 MODELED_SECTIONS = {
     "traffic_model": traffic_model_rows,
     "prefill_traffic_model": prefill_traffic_rows,
     "paged_capacity_model": paged_capacity_rows,
+    "tiered_capacity_model": tiered_capacity_rows,
     "fault_degradation_model": fault_degradation_rows,
 }
+
+# measured (not recomputable here) but REQUIRED: the step-to-step
+# selection-stability cell written by ``benchmarks/overlap_score.py`` is
+# the tiered prefetcher's hit-rate model — a re-emit must not drop it
+MEASURED_SECTIONS = ("selection_stability",)
 
 
 def _normalize(rows):
@@ -64,6 +71,15 @@ def main() -> int:
                       f"committed {len(got)}")
         else:
             print(f"ok: {section} ({len(want)} rows)")
+    for section in MEASURED_SECTIONS:
+        got = committed.get(section)
+        if not got:
+            bad = True
+            print(f"DRIFT: BENCH_attention.json[{section!r}] is missing/"
+                  "empty — run 'PYTHONPATH=src python -m "
+                  "benchmarks.overlap_score' to measure it")
+        else:
+            print(f"ok: {section} present ({len(got)} rows, measured)")
     if bad:
         print("re-run: PYTHONPATH=src python -m benchmarks.attention_latency")
         return 1

@@ -163,6 +163,16 @@ def paged_capacity_model(cfg, sals: SALSConfig, page_size: int,
     ``shared_prefix`` > 0 adds the prefix-sharing term: ``n_requests``
     same-prefix sequences store the prefix pages ONCE (plus per-sequence
     suffix pages) instead of ``n_requests`` full copies.
+
+    ISSUE 7 refinement: sharing is not free — each retained
+    ``PrefixEntry`` pins a RESUME SNAPSHOT beyond its pool pages (the
+    registrant's dense single-request cache sized ``max_seq``, its
+    prompt-lifetime full-precision K/V scratch, and one recent-ring
+    snapshot per page boundary), so the honest sharing gain divides by
+    ``shared + snapshot``, not ``shared`` alone.  The snapshot term is
+    per retained ENTRY (one here), amortized across every request that
+    resumes from it — the ledger shows both gains so the break-even
+    (``n_requests`` large, prefix long) stays visible.
     """
     bpt = lc.cache_bytes_per_token(cfg, sals)            # compressed B/token
     table_overhead = 4.0 / page_size                     # int32 entry/page
@@ -175,6 +185,14 @@ def paged_capacity_model(cfg, sals: SALSConfig, page_size: int,
     unshared_total = n_requests * pages_live * page_size * bpt
     shared_total = (-(-shared_prefix // page_size)
                     + n_requests * -(-suffix // page_size)) * page_size * bpt
+    # resume snapshot pinned by one retained PrefixEntry (core/pager.py):
+    # registrant's dense cache (max_seq slots) + windows, full-precision
+    # prompt K/V scratch, and a recent-ring snapshot per page boundary
+    prefix_pages = -(-shared_prefix // page_size)
+    snapshot_bytes = (max_seq * bpt + window_bytes
+                      + mean_live_tokens * 2 * cfg.kv_dim * 2
+                      + prefix_pages * sals.n_recent * 2 * cfg.kv_dim * 2)
+    shared_net = shared_total + snapshot_bytes
     return {
         "latent_bytes_per_token": round(bpt, 3),
         "page_table_bytes_per_token": round(table_overhead, 5),
@@ -187,6 +205,68 @@ def paged_capacity_model(cfg, sals: SALSConfig, page_size: int,
         "prefix_shared_bytes": shared_total,
         "prefix_sharing_gain": round(unshared_total / max(shared_total, 1),
                                      2),
+        "prefix_snapshot_bytes": snapshot_bytes,
+        "prefix_sharing_gain_net": round(
+            unshared_total / max(shared_net, 1), 2),
+    }
+
+
+def tiered_capacity_model(cfg, sals: SALSConfig, page_size: int,
+                          live_pages: int, hbm_pages: int,
+                          pages_touched: int,
+                          cold_miss_rate: float) -> dict:
+    """ISSUE 7: HBM / host / PCIe ledger of the two-tier page pool.
+
+    SALS splits each page's bytes into a SCORE slice (leading ``r*``
+    latent columns + per-token scale — read for EVERY live token by the
+    selection pass, so it must stay HBM-resident for every live page)
+    and a PAYLOAD (full-``r`` latent + quantized V — read only for the
+    ``N_c`` selected tokens, so only ``hbm_pages`` device slots exist and
+    the overflow lives in host mirrors).  Per decode step the PCIe/host
+    link moves only demand-missed payloads::
+
+        pcie_bytes_per_step = cold_miss_rate · pages_touched · ps
+                              · (r·b_lat + b_scale + v_code + v_meta)
+
+    where ``cold_miss_rate`` is the fraction of the step's touched pages
+    that were cold (1 − selection stability × prefetch coverage — the
+    measured step-to-step stability cell in ``benchmarks/overlap_score.py``
+    is its empirical bound) and ``pages_touched`` the selection working
+    set in pages.  HBM capacity stops scaling with live pages: the tiered
+    device footprint is ``live·score + hbm_pages·payload`` against the
+    single-tier ``live·(score-free) payload+latent`` — live-page capacity
+    is bounded by host RAM.
+    """
+    kvd = cfg.kv_dim
+    r_star = sals.score_rank(kvd)
+    int8 = sals.k_latent_dtype == "int8"
+    lat_b = 1 if int8 else 2
+    scale_b = 2 if int8 else 0
+    bpt = lc.cache_bytes_per_token(cfg, sals)
+    score_bpt = r_star * lat_b + scale_b          # device-resident, per page
+    # the score slice is a DUPLICATE of the leading r* latent columns (kept
+    # so latent_topk never depends on residency), so the spillable payload
+    # is the FULL stored per-token record, not ``bpt - score``
+    payload_bpt = float(bpt)
+    hbm_single = live_pages * page_size * bpt     # PR 5: everything hot
+    hbm_tiered = (live_pages * page_size * score_bpt
+                  + hbm_pages * page_size * payload_bpt
+                  + live_pages * 8)               # page- + hot-table entries
+    host_bytes = max(0, live_pages - hbm_pages) * page_size * payload_bpt
+    pcie = cold_miss_rate * pages_touched * page_size * payload_bpt
+    return {
+        "page_size": page_size,
+        "live_pages": live_pages,
+        "hbm_pages": hbm_pages,
+        "score_bytes_per_token": score_bpt,
+        "payload_bytes_per_token": round(payload_bpt, 3),
+        "hbm_bytes_single_tier": round(hbm_single),
+        "hbm_bytes_tiered": round(hbm_tiered),
+        "hbm_savings_x": round(hbm_single / hbm_tiered, 2),
+        "host_mirror_bytes": round(host_bytes),
+        "pages_touched_per_step": pages_touched,
+        "cold_miss_rate": cold_miss_rate,
+        "pcie_bytes_per_step": round(pcie, 1),
     }
 
 

@@ -1,19 +1,32 @@
 """Paper Figure 2 — overlap score across layers (pre-RoPE latent top-k vs
 full attention mass), measured on the repo-trained model with calibrated
 projectors.  The paper's claim: >90% for middle layers, <50% for layers 0-1
-(which motivates skip_layers_front=2)."""
+(which motivates skip_layers_front=2).
+
+ISSUE 7 adds the STEP-TO-STEP companion: the fraction of decode step t's
+selected PAGES already selected at step t-1, per layer.  Figure 2 is a
+cross-LAYER stability claim; the tiered prefetcher bets on the cross-STEP
+version (warm the previous step's selection before the next decode), so
+this cell — written into ``BENCH_attention.json[\"selection_stability\"]``
+— is the measured hit-rate model for ``tiered_capacity_model``'s
+``cold_miss_rate``."""
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.config import ServeConfig
 from repro.core import metrics
 from repro.launch.serve import collect_pre_rope_keys
 from repro.models import transformer as tf
 from repro.models.attention import qkv_proj
 from repro.models.layers import rmsnorm_apply
+from repro.serve import ServeEngine
 from benchmarks import common
+from benchmarks.attention_latency import BENCH_JSON
 
 
 def layer_overlap(cfg, params, proj, corpus, sals, pos: int = 63,
@@ -43,6 +56,68 @@ def layer_overlap(cfg, params, proj, corpus, sals, pos: int = 63,
     return per_layer
 
 
+def selection_stability(cfg, params, proj, corpus, sals, n_steps: int = 24,
+                        prompt_len: int = 56, batch: int = 2):
+    """Per-layer step-to-step page-selection stability: the fraction of
+    decode step t's selected pages that step t-1 already selected,
+    averaged over steps and batch rows.  Uses the PAGED decode path's own
+    selection-collection probe (``collect_selection`` — the same mask the
+    tiered fetch-and-rerun loop reads), so the measurement is exactly the
+    oracle the prefetcher consults."""
+    ps = 16
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=n_steps,
+                       max_batch=batch, sals=sals, prefill_chunk=8,
+                       page_size=ps, prefix_cache=False)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    mp = scfg.max_seq_len // ps
+    cache = eng.init_slot_cache()
+    host_table = np.zeros((batch, mp), np.int32)
+    tokens = np.zeros((batch,), np.int32)
+    positions = np.zeros((batch,), np.int32)
+    for i in range(batch):
+        prompt = corpus.batch(37_000 + i, 1, prompt_len)["tokens"][0]
+        task = eng.start_prefill(prompt)
+        while not task.done:
+            eng.prefill_chunk_step(task)
+        host_table[i] = np.arange(1 + i * mp, 1 + (i + 1) * mp)
+        cache = eng.admit_paged(cache, task.cache, i, list(host_table[i]),
+                                0, len(prompt))
+        tokens[i] = int(np.argmax(np.asarray(task.logits)[0]))
+        positions[i] = len(prompt)
+    cache = eng.with_page_tables(cache, host_table)
+
+    step = jax.jit(
+        lambda t, c, p: tf.decode_step(eng.params, eng.projectors, c, t, p,
+                                       cfg, eng.sals,
+                                       collect_selection=True),
+        donate_argnums=(1,))
+    front = sals.skip_layers_front
+    prev: dict = {}
+    overlap_sum: dict = {}
+    overlap_n: dict = {}
+    for _ in range(n_steps):
+        logits, cache, touched = step(jnp.asarray(tokens), cache,
+                                      jnp.asarray(positions))
+        layer = front
+        for seg in sorted(touched):
+            seg_touch = np.asarray(touched[seg])       # (ls, B, mp)
+            for li in range(seg_touch.shape[0]):
+                for bi in range(batch):
+                    sel = set(np.nonzero(seg_touch[li, bi])[0].tolist())
+                    key = (layer + li, bi)
+                    if key in prev and sel:
+                        hit = len(sel & prev[key]) / len(sel)
+                        overlap_sum[layer + li] = \
+                            overlap_sum.get(layer + li, 0.0) + hit
+                        overlap_n[layer + li] = \
+                            overlap_n.get(layer + li, 0) + 1
+                    prev[key] = sel
+            layer += seg_touch.shape[0]
+        tokens = np.argmax(np.asarray(logits), axis=-1).astype(np.int32)
+        positions += 1
+    return {l: overlap_sum[l] / overlap_n[l] for l in sorted(overlap_sum)}
+
+
 def run() -> list:
     cfg, params, corpus = common.trained_model(n_layers=4, steps=80)
     sals = common.sals_settings(cfg, "25")
@@ -53,7 +128,22 @@ def run() -> list:
     mid = per_layer[1:-1]
     print(f"# middle-layer mean overlap: {np.mean(mid):.3f} "
           f"(paper: >0.9 on 7B models; proxy model is tiny)")
-    return rows
+    stab = selection_stability(cfg, params, proj, corpus, sals)
+    stab_rows = [("selection-stability", l, round(v, 4))
+                 for l, v in stab.items()]
+    common.emit(stab_rows, ["figure", "layer", "page_stability"])
+    print(f"# mean page stability: {np.mean(list(stab.values())):.3f} "
+          "(tiered prefetch hit-rate bound; 1 - this feeds "
+          "tiered_capacity_model cold_miss_rate)")
+    # read-modify-write: the modeled sections of BENCH_attention.json are
+    # owned by benchmarks/attention_latency.py — only add our cell
+    payload = json.loads(BENCH_JSON.read_text()) if BENCH_JSON.exists() \
+        else {"bench": "attention"}
+    payload["selection_stability"] = [
+        {"layer": l, "page_stability": round(v, 4)} for l, v in stab.items()]
+    BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote selection_stability -> {BENCH_JSON}")
+    return rows + stab_rows
 
 
 if __name__ == "__main__":

@@ -341,7 +341,20 @@ class ServeConfig:
     Validated at construction (not inside jit): ``max_seq_len`` must be a
     multiple of ``page_size``; ``page_size`` a multiple of
     ``prefill_chunk`` (prefix-resume boundaries are chunk-aligned); the
-    pool must fit at least one max-length sequence."""
+    pool must fit at least one max-length sequence.
+
+    TWO-TIER pool (ISSUE 7).  ``hbm_pages`` > 0 splits the paged pool
+    into an HBM hot tier and a host-memory cold tier
+    (``core/tiering.py``): the device payload pools (full-r latents +
+    quantized V) shrink to ``hbm_pages`` slots (+ trash), while a
+    dedicated ``k_score`` device pool keeps the leading ``r*`` score
+    columns of EVERY live page HBM-resident (the score pass is oblivious
+    to tiering), so ``pool_pages`` — the LIVE capacity — is bounded by
+    host RAM.  Selected-but-cold pages are fetched before the
+    reconstruct kernel runs; ``tier_prefetch`` warms pages from the
+    previous decode step's selection (the paper's stability insight —
+    `benchmarks/overlap_score.py` measures the hit rate this predicts).
+    0 = untiered PR 5 behavior (every page's payload HBM-resident)."""
 
     max_seq_len: int = 4096
     max_batch: int = 8
@@ -356,6 +369,8 @@ class ServeConfig:
     page_size: int = 0                # >0: paged latent cache (tokens/page)
     n_pages: int = 0                  # pool size (0 = max_batch·max_seq/ps)
     prefix_cache: bool = True         # COW prefix sharing (paged mode only)
+    hbm_pages: int = 0                # >0: HBM hot-tier payload slots
+    tier_prefetch: bool = True        # warm prev-step selection (tiered)
     # Each prefix-cache entry retains its registrant's DENSE single-request
     # cache + prefill scratch ((L, 1, max_seq, ·) — the append-only resume
     # state) on top of its pinned pool pages, so the entry COUNT bounds
@@ -403,7 +418,12 @@ class ServeConfig:
             raise ValueError("retry knobs must be >= 0")
         if self.page_size < 0 or self.n_pages < 0:
             raise ValueError("page_size / n_pages must be >= 0")
+        if self.hbm_pages < 0:
+            raise ValueError("hbm_pages must be >= 0 (0 = untiered)")
         if self.page_size == 0:
+            if self.hbm_pages:
+                raise ValueError("hbm_pages needs the paged latent cache "
+                                 "(set page_size > 0)")
             return                            # dense slot arena: no paging
         if self.max_seq_len % self.page_size:
             raise ValueError(
@@ -424,6 +444,19 @@ class ServeConfig:
                 f"n_pages {self.n_pages} × page_size {self.page_size} = "
                 f"{self.n_pages * self.page_size} tokens cannot hold one "
                 f"max_seq_len {self.max_seq_len} sequence")
+        if self.hbm_pages:
+            # every resident row pins its write page hot, and a demand
+            # fetch needs at least one spillable slot on top of the pins
+            if self.hbm_pages < self.max_batch + 1:
+                raise ValueError(
+                    f"hbm_pages {self.hbm_pages} must be >= max_batch + 1 "
+                    f"= {self.max_batch + 1}: each resident pins its write "
+                    "page hot and demand fetches need one spillable slot")
+            if self.hbm_pages > self.pool_pages:
+                raise ValueError(
+                    f"hbm_pages {self.hbm_pages} exceeds the pool capacity "
+                    f"{self.pool_pages} — the hot tier cannot outgrow the "
+                    "pool (use the untiered pool instead)")
 
     @property
     def pool_pages(self) -> int:

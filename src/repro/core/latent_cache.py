@@ -48,6 +48,27 @@ Layout metadata rides with the arrays as static pytree aux data:
                    by per-row position, so a garbage page read is never
                    selectable.
 
+TWO-TIER paged layout (ISSUE 7, ``core/tiering.py``): when the payload
+pools are smaller than the logical pool (``hbm_pages`` device slots for
+``n_pages`` live pages), three extra arrays appear:
+
+  ``k_score``        — ``([L,] n_pages, ps, r*)`` device pool holding the
+                       leading ``r*`` latent columns of EVERY live page
+                       (k_lat's dtype).  The score kernel reads THIS pool
+                       through ``page_table`` — identical bytes to the
+                       untiered ``k_lat[..., :r*]`` slice, so selection is
+                       bit-equal and completely oblivious to tiering.
+  ``k_scale_score``  — ``([L,] n_pages, ps)`` per-token int8 scale twin
+                       (int8 latents only; the SAME scale as ``k_scale`` —
+                       quantization happens once in the write path).
+  ``hot_table``      — ``([L,] B, max_pages)`` int32 mapping row b's
+                       logical page j to its HBM payload SLOT (0 = cold /
+                       unmapped → the trash slot).  The reconstruct kernel
+                       takes this table instead of ``page_table`` — same
+                       kernel, different scalar-prefetch operand; the
+                       scheduler guarantees every page it can select is
+                       hot before the step commits (fetch-and-rerun).
+
 All arrays carry a leading layer axis L when built by :meth:`init` so the
 decode loop can ``lax.scan`` over layers (batch axis 1, sequence axis 2);
 :meth:`layer_view` / the scan slice drop L for single-layer use.  ``ssm``
@@ -87,6 +108,9 @@ class LatentKVCache:
     ssm: Any = None                        # hybrid-family recurrent state
     lengths: Optional[jnp.ndarray] = None  # ([L,] B) int32 tokens per slot
     page_table: Optional[jnp.ndarray] = None  # ([L,] B, max_pages) int32
+    k_score: Optional[jnp.ndarray] = None  # ([L,] n_pages, ps, r*) tiered
+    k_scale_score: Optional[jnp.ndarray] = None  # ([L,] n_pages, ps)
+    hot_table: Optional[jnp.ndarray] = None  # ([L,] B, max_pages) int32
     # --- static layout metadata (pytree aux data) --------------------------
     n_groups: int = 1
     shard_axis: str = "kv_seq"
@@ -95,6 +119,12 @@ class LatentKVCache:
     @property
     def paged(self) -> bool:
         return self.page_size > 0
+
+    @property
+    def tiered(self) -> bool:
+        """Two-tier paged layout: payload pools are HBM slots addressed
+        through ``hot_table``; scores live in the full-size ``k_score``."""
+        return self.hot_table is not None
 
     # ------------------------------------------------------------------ init
 
@@ -136,7 +166,8 @@ class LatentKVCache:
     @classmethod
     def init_paged(cls, cfg: ModelConfig, sals: SALSConfig, n_layers: int,
                    batch: int, max_seq: int, n_pages: int, page_size: int,
-                   dtype=jnp.bfloat16, n_groups: int = 1) -> "LatentKVCache":
+                   dtype=jnp.bfloat16, n_groups: int = 1,
+                   hbm_pages: int = 0) -> "LatentKVCache":
         """Zero-initialized PAGED cache: per-token fields are page pools.
 
         ``n_pages`` physical pages of ``page_size`` tokens back every
@@ -144,6 +175,13 @@ class LatentKVCache:
         (``max_seq // page_size`` entries).  The host-side allocator
         (``core/pager.PagePool``) owns which pages are live — this method
         just shapes the device arrays.
+
+        ``hbm_pages`` > 0 builds the TWO-TIER layout (ISSUE 7): the
+        payload pools shrink to ``hbm_pages + 1`` device slots (slot 0 =
+        trash, mirroring physical page 0), a full-size ``k_score``
+        (+ ``k_scale_score``) pool keeps every live page's leading ``r*``
+        score columns HBM-resident, and ``hot_table`` maps logical pages
+        to payload slots (0 = cold).
         """
         if max_seq % page_size:
             raise ValueError(f"max_seq {max_seq} must be a multiple of "
@@ -155,8 +193,12 @@ class LatentKVCache:
             raise ValueError(f"pages per sequence {max_seq // page_size} "
                              f"must be divisible by n_groups {n_groups} "
                              "(the grouped fold splits the page table)")
+        if hbm_pages and hbm_pages + 1 > n_pages:
+            raise ValueError(f"hbm_pages {hbm_pages} exceeds the pool "
+                             f"({n_pages} incl. trash)")
         dense = cls.init(cfg, sals, n_layers, 1, page_size, dtype,
                          n_groups=1)          # template: 1 page of rows
+        payload_pages = (hbm_pages + 1) if hbm_pages else n_pages
         out = {}
         for name in _PER_TOKEN_FIELDS:
             a = getattr(dense, name)
@@ -164,7 +206,17 @@ class LatentKVCache:
                 out[name] = None
                 continue
             # (L, 1, ps, ·) template -> (L, n_pages, ps, ·) pool
-            out[name] = jnp.zeros((n_layers, n_pages, *a.shape[2:]), a.dtype)
+            out[name] = jnp.zeros((n_layers, payload_pages, *a.shape[2:]),
+                                  a.dtype)
+        if hbm_pages:
+            r_star = sals.score_rank(cfg.kv_dim)
+            out["k_score"] = jnp.zeros(
+                (n_layers, n_pages, page_size, r_star), dense.k_lat.dtype)
+            if dense.k_scale is not None:
+                out["k_scale_score"] = jnp.zeros(
+                    (n_layers, n_pages, page_size), dense.k_scale.dtype)
+            out["hot_table"] = jnp.zeros(
+                (n_layers, batch, max_seq // page_size), jnp.int32)
         win = (n_layers, batch, sals.n_sink, cfg.n_kv_heads, cfg.head_dim)
         ring = (n_layers, batch, sals.n_recent, cfg.n_kv_heads, cfg.head_dim)
         return cls(
@@ -332,24 +384,46 @@ class LatentKVCache:
         """Write one token's latent K + quantized V at ``pos`` (scalar or
         (B,) per-row; no ring update — see :meth:`write_ring`)."""
         pos_v = _row_positions(pos, k_lat.shape[0])
+        upd_score = None
         if self.paged:
             # logical pos -> (physical page, in-page row); the page MUST
             # already be mapped (the scheduler reserves pages ahead of the
             # decode step — see RequestScheduler._ensure_pages)
-            pid = jnp.take_along_axis(
-                self.page_table, (pos_v // self.page_size)[:, None],
-                axis=1)[:, 0]                                    # (B,)
+            lp = (pos_v // self.page_size)[:, None]              # (B, 1)
+            pid = jnp.take_along_axis(self.page_table, lp, axis=1)[:, 0]
             row = pos_v % self.page_size
-            upd = lambda arr, val: arr.at[pid, row].set(val.astype(arr.dtype))
+            if self.tiered:
+                # payloads land in the HOT SLOT (the scheduler pins each
+                # row's write page hot, so slot > 0 whenever pos is real);
+                # scores land in the full-size pool at the physical page
+                slot = jnp.take_along_axis(self.hot_table, lp, axis=1)[:, 0]
+                upd = lambda arr, val: \
+                    arr.at[slot, row].set(val.astype(arr.dtype))
+                upd_score = lambda arr, val: \
+                    arr.at[pid, row].set(val.astype(arr.dtype))
+            else:
+                upd = lambda arr, val: \
+                    arr.at[pid, row].set(val.astype(arr.dtype))
         else:
             upd = lambda arr, val: _upd_rows(arr, val, pos_v)
         out = {}
         if sals.k_latent_dtype == "int8":
+            # quantize ONCE; the score pool gets the leading r* columns of
+            # the SAME int8 rows + the SAME per-token scale, so the tiered
+            # score pass is bit-identical to the untiered [..., :r*] read
             q, scale = qz.quantize_latent_int8(k_lat)
             out["k_lat"] = upd(self.k_lat, q)
             out["k_scale"] = upd(self.k_scale, scale)
+            if upd_score is not None:
+                r_star = self.k_score.shape[-1]
+                out["k_score"] = upd_score(self.k_score, q[..., :r_star])
+                out["k_scale_score"] = upd_score(self.k_scale_score, scale)
         else:
             out["k_lat"] = upd(self.k_lat, k_lat)
+            if upd_score is not None:
+                r_star = self.k_score.shape[-1]
+                out["k_score"] = upd_score(self.k_score,
+                                           k_lat[..., :r_star])
         vq = qz.quantize(v_flat, sals.v_bits, sals.v_group)
         out["v_q"] = upd(self.v_q, vq["q"])
         out["v_scale"] = upd(self.v_scale, vq["scale"])
@@ -508,6 +582,8 @@ class LatentKVCache:
             out["lengths"] = clr_meta(self.lengths)
         if self.page_table is not None:
             out["page_table"] = clr_meta(self.page_table)
+        if self.hot_table is not None:
+            out["hot_table"] = clr_meta(self.hot_table)
         return self.replace(**out)
 
     # --------------------------------------------------------------- oracles
@@ -566,7 +642,7 @@ jax.tree_util.register_dataclass(
     LatentKVCache,
     data_fields=["k_lat", "v_q", "v_scale", "v_zero", "sink_k", "sink_v",
                  "recent_k", "recent_v", "k_scale", "ssm", "lengths",
-                 "page_table"],
+                 "page_table", "k_score", "k_scale_score", "hot_table"],
     meta_fields=["n_groups", "shard_axis", "page_size"])
 
 

@@ -145,18 +145,44 @@ def _partial_attend(logits: jnp.ndarray, v: jnp.ndarray, cfg: ModelConfig
 # Selected-token partials (stages 2-4, fused kernels) per layout
 # ---------------------------------------------------------------------------
 
+def _touched_pages(idx, valid, page_size: int, max_pages: int):
+    """Selected logical indices -> (B, max_pages) bool touched-page mask.
+
+    idx/valid: (B, K) GLOBAL logical token indices (grouped callers fold
+    ``pos_base`` in first).  Invalid slots scatter out of range and drop.
+    """
+    b = idx.shape[0]
+    page = jnp.where(valid, idx // page_size, max_pages)
+    return jnp.zeros((b, max_pages), bool).at[
+        jnp.arange(b)[:, None], page].set(True, mode="drop")
+
+
 def _global_partials(q0, q_bar, u, cache: LatentKVCache, pos,
-                     cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan):
-    """Paper-faithful global top-N_c.  Returns (m, l, o) with a G=1 axis."""
+                     cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan,
+                     collect: bool = False):
+    """Paper-faithful global top-N_c.  Returns (m, l, o, touched) with a
+    G=1 axis on the partials; touched is None unless ``collect``."""
     r_star = sals.score_rank(cfg.kv_dim)
     k_lat, k_scale = cache.latent_views()
     pt, ps = cache.page_table, cache.page_size
+    if cache.tiered:
+        # two-table routing: scoring reads the always-hot r* score pool at
+        # PHYSICAL pages; reconstruction reads the payload pools at HOT
+        # SLOTS (the scheduler fetches every selected page hot before the
+        # step that gets consumed — see RequestScheduler)
+        score_k, score_scale = cache.k_score, cache.k_scale_score
+        recon_table = cache.hot_table
+    else:
+        score_k, score_scale = k_lat, k_scale
+        recon_table = pt
     if not cache.paged:
         k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+        score_k = k_lat
         if k_scale is not None:
             k_scale = constrain(k_scale, ("batch", "kv_seq"))
-    idx, valid = sel.topk_latent(q_bar, u, k_lat, k_scale, pos, sals, r_star,
-                                 page_table=pt, page_size=ps,
+            score_scale = k_scale
+    idx, valid = sel.topk_latent(q_bar, u, score_k, score_scale, pos, sals,
+                                 r_star, page_table=pt, page_size=ps,
                                  backend=plan.backend)
     # ascending-position order: page-bucketed DMA for the paged kernel,
     # same accumulation order for BOTH layouts (paged == dense bit-exact)
@@ -166,39 +192,56 @@ def _global_partials(q0, q_bar, u, cache: LatentKVCache, pos,
         valid, pos, n_kv=cfg.n_kv_heads, v_bits=sals.v_bits,
         v_group=sals.v_group, theta=cfg.rope_theta,
         softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope,
-        page_table=pt, page_size=ps, backend=plan.backend)
-    return m[:, None], l[:, None], o[:, None]
+        page_table=recon_table, page_size=ps, backend=plan.backend)
+    touched = None
+    if collect:
+        if not cache.paged:
+            raise ValueError("selection collection requires the paged cache")
+        touched = _touched_pages(idx, valid, ps, pt.shape[1])
+    return m[:, None], l[:, None], o[:, None], touched
 
 
 def _slab_partials(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u, pos,
                    base, cfg: ModelConfig, sals: SALSConfig, k_loc: int,
-                   backend, page_table=None, page_size=0):
+                   backend, page_table=None, page_size=0, score_k=None,
+                   score_scale=None, recon_table=None, collect: bool = False):
     """Fused top-k + recon-attend over sequence slabs (rows = slabs).
 
     All per-token arrays are (N, S_loc, ...) — or page pools with a
     per-slab ``page_table`` — ``pos`` is a scalar or (N,) per-row decode
     positions; ``base`` (N,) holds each row's global position offset.
-    Returns flash partials (N, H[, dh]).
+    Tiered pools route scoring through ``score_k``/``score_scale`` (full
+    physical pool, ``page_table`` ids) and reconstruction through
+    ``recon_table`` (hot slots); both default to the untiered operands.
+    Returns flash partials (N, H[, dh]), plus (idx, valid) if ``collect``.
     """
+    sk = k_lat if score_k is None else score_k
+    ss = k_scale if score_k is None else score_scale
+    rt = page_table if recon_table is None else recon_table
     idx, valid = ops.latent_topk(
-        q_lat, k_lat, k_scale, pos, n_critical=k_loc, n_sink=sals.n_sink,
+        q_lat, sk, ss, pos, n_critical=k_loc, n_sink=sals.n_sink,
         n_recent=sals.n_recent, pos_base=base, page_table=page_table,
         page_size=page_size, backend=backend)
     idx, valid = sel.sort_selected(idx, valid)
-    return ops.sparse_recon_attention(
+    m, l, o = ops.sparse_recon_attention(
         q0, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
         n_kv=cfg.n_kv_heads, v_bits=sals.v_bits, v_group=sals.v_group,
         theta=cfg.rope_theta, softcap=cfg.attn_logit_softcap,
-        use_rope=cfg.use_rope, pos_base=base, page_table=page_table,
+        use_rope=cfg.use_rope, pos_base=base, page_table=rt,
         page_size=page_size, backend=backend)
+    if collect:
+        return m, l, o, idx, valid
+    return m, l, o
 
 
 def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
-                      cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan):
+                      cfg: ModelConfig, sals: SALSConfig, plan: DecodePlan,
+                      collect: bool = False):
     """Per-group top-(N_c/G) through the SAME fused kernels.
 
     Group g covers slab [g·S/G, (g+1)·S/G); kernels see slab-local indices
-    and a per-row ``pos_base`` offset.  Returns (m, l, o) with a G axis.
+    and a per-row ``pos_base`` offset.  Returns (m, l, o, touched) with a
+    G axis on the partials; touched is None unless ``collect``.
     """
     g = plan.n_groups
     r_star = sals.score_rank(cfg.kv_dim)
@@ -206,6 +249,8 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
     k_loc = -(-sals.n_critical // g)
     q_lat = sel.latent_query(q_bar, u, r_star)                  # (B, r*)
     h = q0.shape[1]
+    if collect and not cache.paged:
+        raise ValueError("selection collection requires the paged cache")
 
     if cache.paged:
         # paged grouped fold: the POOLS are physical (no slab structure) —
@@ -217,17 +262,32 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
         ps = cache.page_size
         s_loc = (mp // g) * ps
         ptg = pt.reshape(b * g, mp // g)
+        htg = None
+        if cache.tiered:
+            htg = cache.hot_table.reshape(b * g, mp // g)
         base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
         qg = jnp.repeat(q0, g, axis=0)
         qlg = jnp.repeat(q_lat, g, axis=0)
         pos_g = jnp.repeat(jnp.broadcast_to(
             jnp.asarray(pos, jnp.int32).reshape(-1), (b,)), g)
-        m, l, o = _slab_partials(qg, qlg, k_lat, k_scale, cache.v_q,
-                                 cache.v_scale, cache.v_zero, u, pos_g, base,
-                                 cfg, sals, k_loc, plan.backend,
-                                 page_table=ptg, page_size=ps)
+        out = _slab_partials(qg, qlg, k_lat, k_scale, cache.v_q,
+                             cache.v_scale, cache.v_zero, u, pos_g, base,
+                             cfg, sals, k_loc, plan.backend,
+                             page_table=ptg, page_size=ps,
+                             score_k=cache.k_score if cache.tiered else None,
+                             score_scale=cache.k_scale_score,
+                             recon_table=htg, collect=collect)
+        touched = None
+        if collect:
+            m, l, o, idx, valid = out
+            # fold pos_base back in: slab-local -> global logical indices,
+            # then union the per-slab masks row-wise into (B, mp)
+            gidx = (base[:, None] + idx).reshape(b, -1)
+            touched = _touched_pages(gidx, valid.reshape(b, -1), ps, mp)
+        else:
+            m, l, o = out
         return (m.reshape(b, g, h), l.reshape(b, g, h),
-                o.reshape(b, g, h, cfg.head_dim))
+                o.reshape(b, g, h, cfg.head_dim), touched)
 
     b, s, r = k_lat.shape
     s_loc = s // g
@@ -236,9 +296,10 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
         # shard-LOCAL slabs: each kv_seq shard scores + gathers its own slab
         # (shard_map), so no latent, score, or selected-K/V collective —
         # only the (B,G,H)(+dh) partial merge leaves the shard (§Perf A3).
-        return _grouped_shardmap(q0, q_lat, k_lat, k_scale, cache.v_q,
-                                 cache.v_scale, cache.v_zero, u, pos, cfg,
-                                 sals, plan, s_loc, k_loc)
+        m, l, o = _grouped_shardmap(q0, q_lat, k_lat, k_scale, cache.v_q,
+                                    cache.v_scale, cache.v_zero, u, pos, cfg,
+                                    sals, plan, s_loc, k_loc)
+        return m, l, o, None
 
     # no matching mesh: fold the group axis into the kernel batch axis
     # (metadata-only reshapes of the raw cache — no copy, no dequant)
@@ -255,7 +316,7 @@ def _grouped_partials(q0, q_bar, u, cache: LatentKVCache, pos,
     m, l, o = _slab_partials(qg, qlg, kg, ksg, vqg, vsg, vzg, u, pos_g, base,
                              cfg, sals, k_loc, plan.backend)
     return (m.reshape(b, g, h), l.reshape(b, g, h),
-            o.reshape(b, g, h, cfg.head_dim))
+            o.reshape(b, g, h, cfg.head_dim), None)
 
 
 def _grouped_shardmap(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
@@ -306,8 +367,8 @@ def _grouped_shardmap(q0, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
 
 def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
                        x: jnp.ndarray, pos, cfg: ModelConfig,
-                       sals: SALSConfig, plan: Optional[DecodePlan] = None
-                       ) -> Tuple[jnp.ndarray, LatentKVCache]:
+                       sals: SALSConfig, plan: Optional[DecodePlan] = None,
+                       collect: bool = False):
     """One-token SALS attention for one layer.
 
     x: (B, 1, d); pos: traced scalar position of this token, or a (B,)
@@ -315,7 +376,10 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
     masks, RoPEs, and writes per row; a batch of heterogeneous positions is
     bit-identical to the same rows decoded alone).  The selection layout
     comes from ``cache.n_groups`` (via :func:`plan_decode`) unless an
-    explicit ``plan`` is given.  Returns (y (B,1,d), updated cache).
+    explicit ``plan`` is given.  Returns (y (B,1,d), updated cache), plus
+    a (B, max_pages) bool touched-page mask when ``collect`` (paged caches
+    only — the tiered fetch-and-rerun loop reads it to decide which cold
+    pages the NEXT run of this same step will reconstruct from).
     """
     if plan is None:
         plan = plan_decode(cache)
@@ -354,7 +418,8 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
 
     # ---- stages 2-4: fused selected-token partials, (B, G, H[, dh]) -------
     attend = _global_partials if plan.n_groups <= 1 else _grouped_partials
-    m_c, l_c, o_c = attend(q[:, 0], q_bar, u, cache, pos_v, cfg, sals, plan)
+    m_c, l_c, o_c, touched = attend(q[:, 0], q_bar, u, cache, pos_v, cfg,
+                                    sals, plan, collect)
 
     # ---- stage 5: flash-style LSE merge across groups + window ------------
     m_all = jnp.maximum(jnp.max(m_c, axis=1), m_sr)   # (B,H)
@@ -365,4 +430,6 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
     o = numer / jnp.maximum(denom, 1e-30)[..., None]
 
     y = out_proj(params, o[:, None].astype(x.dtype), cfg)
+    if collect:
+        return y, cache, touched
     return y, cache

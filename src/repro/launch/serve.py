@@ -105,6 +105,19 @@ def main() -> None:
                          "page-size, the dense-equivalent capacity; smaller "
                          "pools admit on pages-available and evict-to-"
                          "requeue on exhaustion)")
+    ap.add_argument("--hbm-pages", type=int, default=0,
+                    help="two-tier page pool (ISSUE 7): device payload "
+                         "slots for the hot tier; 0 = single-tier (every "
+                         "page HBM-resident).  Needs --page-size; must be "
+                         ">= max-batch + 1 (each resident pins its write "
+                         "page hot) and <= the pool size.  Score columns "
+                         "stay device-resident for EVERY page; overflow "
+                         "payloads spill to host mirrors")
+    ap.add_argument("--no-tier-prefetch", dest="tier_prefetch",
+                    action="store_false", default=True,
+                    help="disable selection-driven prefetch (two-tier "
+                         "mode): cold pages are then fetched on demand "
+                         "only, inside the fetch-and-rerun decode step")
     ap.add_argument("--no-prefix-cache", dest="prefix_cache",
                     action="store_false", default=True,
                     help="disable COW prefix sharing (paged mode): every "
@@ -177,6 +190,8 @@ def main() -> None:
                        prefill_chunk=args.prefill_chunk,
                        prefill_token_budget=args.prefill_budget,
                        page_size=args.page_size, n_pages=args.n_pages,
+                       hbm_pages=args.hbm_pages,
+                       tier_prefetch=args.tier_prefetch,
                        prefix_cache=args.prefix_cache,
                        max_queue=args.max_queue,
                        queue_policy=args.queue_policy,
@@ -214,6 +229,14 @@ def main() -> None:
               f"cow_copies={sched.cow_copies} "
               f"stalls={sched.admission_stalls} "
               f"evictions={sched.evictions}")
+        if sched.tiered:
+            hh = max((g["host_pages"] for g in sched.pool_gauges), default=0)
+            print(f"[serve] two-tier: {args.hbm_pages} hot slots, "
+                  f"host high-water {hh} pages, "
+                  f"spills={sched.pool.spills} "
+                  f"fetch_hits={sched.fetch_hits} "
+                  f"prefetch_hits={sched.prefetch_hits} "
+                  f"cold_misses={sched.cold_misses}")
     for r in ok[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")

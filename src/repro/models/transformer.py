@@ -305,13 +305,17 @@ def forward_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
 
 def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
                max_seq: int, dtype=None, n_groups: int = 1,
-               page_size: int = 0, n_pages: int = 0) -> dict:
+               page_size: int = 0, n_pages: int = 0,
+               hbm_pages: int = 0) -> dict:
     """``n_groups`` is the SALS decode selection layout (see LatentKVCache):
     it rides as static metadata on the latent segments.  ``page_size`` > 0
     backs the SALS segments with ``n_pages`` physical pages instead of the
     dense ``(B, max_seq, ·)`` slot arena (ISSUE 5; full-precision segments
     keep their dense per-slot cache — the paged pool holds the compressed
-    latent fields, which dominate steady-state HBM)."""
+    latent fields, which dominate steady-state HBM).  ``hbm_pages`` > 0
+    makes the pool TWO-TIER (ISSUE 7): payload pools shrink to that many
+    device slots (+1 trash) while the r* score pool and the page table keep
+    the full ``n_pages`` logical capacity."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     if not cfg.is_decoder:
         raise ValueError("encoder family has no decode cache")
@@ -332,7 +336,7 @@ def init_cache(cfg: ModelConfig, sals: Optional[SALSConfig], batch: int,
         elif page_size:
             seg = lc.LatentKVCache.init_paged(
                 cfg, sals, ls, batch, max_seq, n_pages, page_size, dtype,
-                n_groups=n_groups)
+                n_groups=n_groups, hbm_pages=hbm_pages)
         else:
             seg = lc.LatentKVCache.init(cfg, sals, ls, batch, max_seq, dtype,
                                         n_groups=n_groups)
@@ -536,7 +540,8 @@ def _pad_seq(a: jnp.ndarray, max_seq: int) -> jnp.ndarray:
 
 def decode_step(params: dict, projectors: Optional[dict], cache: dict,
                 tokens: jnp.ndarray, pos, cfg: ModelConfig,
-                sals: Optional[SALSConfig]) -> Tuple[jnp.ndarray, dict]:
+                sals: Optional[SALSConfig],
+                collect_selection: bool = False):
     """One decode step. tokens: (B,) int32; pos: traced scalar, or a (B,)
     per-row positions vector — the ragged continuous-batching layout where
     every sequence advances at its own position (all attention paths mask,
@@ -544,13 +549,17 @@ def decode_step(params: dict, projectors: Optional[dict], cache: dict,
 
     The SALS selection layout (global vs grouped) is read from the latent
     segments' ``n_groups`` metadata — set at init_cache/prefill time.
-    Returns (logits (B, V) f32, updated cache).
+    Returns (logits (B, V) f32, updated cache); with ``collect_selection``
+    (paged SALS caches only) additionally returns {seg_name: (ls, B,
+    max_pages) bool} touched-page masks — which LOGICAL pages each layer's
+    selection reconstructed from, the tiered scheduler's fetch oracle.
     """
     if not cfg.is_decoder:
         raise ValueError("encoder family has no decode step")
     x = embed_apply(params["embed"], tokens[:, None], cfg)     # (B,1,d)
     segs = segment_plan(cfg, sals)
     new_cache: Dict[str, Any] = {}
+    touched: Dict[str, Any] = {}
 
     for si, (i0, i1, mode) in enumerate(segs):
         bp_seg = _slice_tree(params["blocks"], i0, i1)
@@ -573,12 +582,21 @@ def decode_step(params: dict, projectors: Optional[dict], cache: dict,
                 bp, u_l, cl = bp_u_cl
                 h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
                 ssm_cl = cl.ssm if cfg.family == "hybrid" else None
-                a, cl = sals_decode_attend(bp["attn"], u_l, cl, h, pos, cfg,
-                                           sals)
+                if collect_selection:
+                    a, cl, t = sals_decode_attend(bp["attn"], u_l, cl, h,
+                                                  pos, cfg, sals,
+                                                  collect=True)
+                else:
+                    a, cl = sals_decode_attend(bp["attn"], u_l, cl, h, pos,
+                                               cfg, sals)
+                    t = jnp.zeros((), jnp.int32)   # unused ys placeholder
                 x, cl = _finish_block(bp, x, h, a, cl, ssm_cl, cfg)
-                return x, cl
+                return x, (cl, t)
 
-            x, new_seg = jax.lax.scan(body_sals, x, (bp_seg, u_seg, seg_cache))
+            x, (new_seg, seg_touch) = jax.lax.scan(
+                body_sals, x, (bp_seg, u_seg, seg_cache))
+            if collect_selection:
+                touched[f"seg{si}"] = seg_touch    # (ls, B, max_pages) bool
         else:
             def body_full(x, bp_cl):
                 bp, cl = bp_cl
@@ -596,6 +614,8 @@ def decode_step(params: dict, projectors: Optional[dict], cache: dict,
 
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = unembed_apply(params["embed"], x, cfg)[:, 0]
+    if collect_selection:
+        return logits, new_cache, touched
     return logits, new_cache
 
 

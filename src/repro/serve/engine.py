@@ -151,10 +151,16 @@ class ServeEngine:
                                       donate_argnums=(1, 2))
         self._init_prefill = jax.jit(self._init_prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._decode_sel = jax.jit(self._decode_sel_impl, donate_argnums=(1,))
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._admit_paged = jax.jit(self._admit_paged_impl,
                                     donate_argnums=(0,))
+        self._admit_tiered = jax.jit(self._admit_tiered_impl,
+                                     donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_page_impl, donate_argnums=(0,))
+        self._copy_score_page = jax.jit(self._copy_score_page_impl,
+                                        donate_argnums=(0,))
+        self._load_page = jax.jit(self._load_page_impl, donate_argnums=(0,))
         self._release_slot = jax.jit(self._release_slot_impl,
                                      donate_argnums=(0,))
         self._init_slots = jax.jit(self._init_slots_impl)
@@ -164,6 +170,13 @@ class ServeEngine:
         """Paged latent cache active (ISSUE 5): SALS segments backed by the
         refcounted page pool instead of the dense slot arena."""
         return self.sals is not None and self.scfg.page_size > 0
+
+    @property
+    def tiered(self) -> bool:
+        """Two-tier page pool active (ISSUE 7): payload pools hold only
+        ``scfg.hbm_pages`` hot device slots; the r* score pool keeps every
+        live page HBM-resident, cold payloads live in host mirrors."""
+        return self.paged and self.scfg.hbm_pages > 0
 
     @property
     def ragged_ok(self) -> bool:
@@ -195,6 +208,26 @@ class ServeEngine:
         return tf.decode_step(self.params, self.projectors, cache, tokens,
                               pos, self.cfg, self.sals)
 
+    def _decode_sel_impl(self, tokens, cache, pos):
+        """Decode step that also reports WHICH logical pages the SALS
+        selection reconstructed from, unioned over layers/segments to one
+        (B, max_pages) bool mask — the tiered fetch-and-rerun loop's
+        residency probe (see RequestScheduler._tiered_decode)."""
+        logits, cache, touched = tf.decode_step(
+            self.params, self.projectors, cache, tokens, pos, self.cfg,
+            self.sals, collect_selection=True)
+        union = None
+        for seg_touch in touched.values():         # (ls, B, max_pages)
+            seg_any = jnp.any(seg_touch, axis=0)
+            union = seg_any if union is None else union | seg_any
+        if union is None:
+            # no SALS segments (every layer full-precision): nothing is
+            # ever reconstructed from the payload pools, so no page is
+            # ever demanded — the tiered loop sees an all-cold-safe mask
+            mp = self.scfg.max_seq_len // self.scfg.page_size
+            union = jnp.zeros((tokens.shape[0], mp), bool)
+        return logits, cache, union
+
     def _admit_impl(self, cache, one, slot):
         # every cache leaf is layer-stacked (L, B, ...): splice batch row
         # ``slot`` (a TRACED scalar — one admission HLO for every slot).
@@ -217,7 +250,8 @@ class ServeEngine:
         return tf.init_cache(self.cfg, self.sals, self.scfg.max_batch,
                              self.scfg.max_seq_len, n_groups=self.n_groups,
                              page_size=page_size,
-                             n_pages=self.scfg.pool_pages + 1)
+                             n_pages=self.scfg.pool_pages + 1,
+                             hbm_pages=self.scfg.hbm_pages)
 
     # -- paged-cache device ops (host bookkeeping lives in core/pager.py) ----
 
@@ -281,6 +315,89 @@ class ServeEngine:
 
         return {k: splice(seg, one[k]) for k, seg in cache.items()}
 
+    def _admit_tiered_impl(self, cache, one, slot, pt_row, hot_row,
+                           start_page, plen):
+        """Tiered admission: like :meth:`_admit_paged_impl` but the payload
+        rows scatter into HOT SLOTS (``hot_row``; 0 = the page was admitted
+        cold, its bytes go to the host mirror instead — dropped here) while
+        the leading-r* score rows scatter into the full-size score pool at
+        the PHYSICAL pages (``pt_row`` — always, hot or cold).  Installs
+        BOTH table rows for the slot."""
+        ps = self.scfg.page_size
+        mp = self.scfg.max_seq_len // ps
+        n_slots = self.scfg.hbm_pages + 1      # payload pool incl. trash slot
+        n_pages = self.scfg.pool_pages + 1
+        n_req_pages = (plen + ps - 1) // ps
+        page_idx = jnp.arange(mp)
+        in_range = (page_idx >= start_page) & (page_idx < n_req_pages)
+        # cold pages (hot_row == 0) must NOT land in the trash slot either —
+        # out-of-range target + mode="drop" skips them entirely
+        tgt_pay = jnp.where(in_range & (hot_row[:mp] > 0), hot_row[:mp],
+                            n_slots)
+        tgt_score = jnp.where(in_range, pt_row[:mp], n_pages)
+
+        def splice(seg, one_seg):
+            if isinstance(seg, LatentKVCache):
+                out = {}
+                for name in ("k_lat", "k_scale", "v_q", "v_scale", "v_zero"):
+                    pool = getattr(seg, name)
+                    dense = getattr(one_seg, name)
+                    if pool is None:
+                        continue
+                    ls = dense.shape[0]
+                    vals = dense.reshape(ls, mp, ps, *dense.shape[3:])
+                    out[name] = pool.at[:, tgt_pay].set(
+                        vals.astype(pool.dtype), mode="drop")
+                r_star = seg.k_score.shape[-1]
+                ls = one_seg.k_lat.shape[0]
+                sc = one_seg.k_lat[..., :r_star].reshape(
+                    ls, mp, ps, r_star)
+                out["k_score"] = seg.k_score.at[:, tgt_score].set(
+                    sc.astype(seg.k_score.dtype), mode="drop")
+                if seg.k_scale_score is not None:
+                    scale = one_seg.k_scale.reshape(ls, mp, ps)
+                    out["k_scale_score"] = seg.k_scale_score.at[
+                        :, tgt_score].set(
+                        scale.astype(seg.k_scale_score.dtype), mode="drop")
+                for name in ("sink_k", "sink_v", "recent_k", "recent_v"):
+                    arr = getattr(seg, name)
+                    out[name] = jax.lax.dynamic_update_slice_in_dim(
+                        arr, getattr(one_seg, name).astype(arr.dtype), slot,
+                        axis=1)
+                out["lengths"] = jax.lax.dynamic_update_slice_in_dim(
+                    seg.lengths, jnp.broadcast_to(
+                        jnp.int32(plen), (seg.lengths.shape[0], 1)),
+                    slot, axis=1)
+                for tname, trow in (("page_table", pt_row),
+                                    ("hot_table", hot_row)):
+                    arr = getattr(seg, tname)
+                    row = jnp.broadcast_to(trow[None, None, :mp],
+                                           (arr.shape[0], 1, mp))
+                    out[tname] = jax.lax.dynamic_update_slice(
+                        arr, row, (0, slot, 0))
+                return seg.replace(**out)
+            return jax.tree.map(
+                lambda a, o: jax.lax.dynamic_update_slice_in_dim(
+                    a, o.astype(a.dtype), slot, axis=1),
+                seg, one_seg)
+
+        return {k: splice(seg, one[k]) for k, seg in cache.items()}
+
+    def _load_page_impl(self, cache, slot, payload):
+        """Host→HBM fetch, device half: install one page's payload rows
+        (``payload`` = {seg: {field: (ls, ps, ·)}} host mirror) into payload
+        slot ``slot`` of every SALS segment.  Traced slot — one HLO."""
+        def load(seg, pl):
+            out = {}
+            for name, val in pl.items():
+                pool = getattr(seg, name)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    pool, val[:, None].astype(pool.dtype), slot, axis=1)
+            return seg.replace(**out)
+
+        return {k: (load(seg, payload[k]) if k in payload else seg)
+                for k, seg in cache.items()}
+
     def _copy_page_impl(self, cache, src, dst):
         """Copy-on-write worker: duplicate physical page ``src`` into
         ``dst`` across every SALS segment/layer (windows are per-slot, not
@@ -300,6 +417,59 @@ class ServeEngine:
 
         return {k: cow(seg) for k, seg in cache.items()}
 
+    def _copy_score_page_impl(self, cache, src, dst):
+        """Tiered copy-on-write, score half: duplicate PHYSICAL page src ->
+        dst in the always-hot r* score pool (the payload half goes through
+        :meth:`_copy_page_impl` on hot SLOTS, or a host-mirror copy when
+        the source is cold)."""
+        def cow(seg):
+            if not isinstance(seg, LatentKVCache) or seg.k_score is None:
+                return seg
+            out = {}
+            for name in ("k_score", "k_scale_score"):
+                pool = getattr(seg, name)
+                if pool is None:
+                    continue
+                row = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    pool, row, dst, axis=1)
+            return seg.replace(**out)
+
+        return {k: cow(seg) for k, seg in cache.items()}
+
+    _SPILL_FIELDS = ("k_lat", "k_scale", "v_q", "v_scale", "v_zero")
+
+    def read_page_payload(self, cache, slot: int) -> dict:
+        """HBM→host spill, device half: pull payload slot ``slot`` of every
+        SALS segment back as a host mirror {seg: {field: np (ls, ps, ·)}}.
+        Pure reads — the arena stays valid."""
+        out = {}
+        for k, seg in self._latent_segs(cache).items():
+            fields = {}
+            for name in self._SPILL_FIELDS:
+                pool = getattr(seg, name)
+                if pool is not None:
+                    fields[name] = np.asarray(pool[:, slot])
+            out[k] = fields
+        return out
+
+    def extract_page_payload_dense(self, one_cache, page: int) -> dict:
+        """Host mirror of logical page ``page`` taken from a finished
+        prefill task's DENSE single-request cache — the cold half of a
+        tiered admission (pages past the hot tier never touch the device
+        pools at all)."""
+        ps = self.scfg.page_size
+        out = {}
+        for k, seg in self._latent_segs(one_cache).items():
+            fields = {}
+            for name in self._SPILL_FIELDS:
+                arr = getattr(seg, name)
+                if arr is not None:     # dense layout: (ls, 1, S, ·)
+                    fields[name] = np.asarray(
+                        arr[:, 0, page * ps:(page + 1) * ps])
+            out[k] = fields
+        return out
+
     def _release_slot_impl(self, cache, slot):
         """Metadata-only slot release: per-slot lengths (+ page-table row)
         reset; NO payload zeroing (ISSUE 5 — freeing is O(1), and per-row
@@ -310,17 +480,24 @@ class ServeEngine:
             return seg
         return {k: rel(seg) for k, seg in cache.items()}
 
-    def with_page_tables(self, cache, table: np.ndarray):
-        """Install the host page table ((B, max_pages) int32) into every
-        SALS segment (broadcast over its layer axis).  Pure leaf swap — no
-        jit, no copy of the pools."""
+    def with_page_tables(self, cache, table: np.ndarray,
+                         hot_table: Optional[np.ndarray] = None):
+        """Install the host page table ((B, max_pages) int32) — and, when
+        tiered, the hot-slot table — into every SALS segment (broadcast
+        over its layer axis).  Pure leaf swap — no jit, no copy of the
+        pools."""
         row = jnp.asarray(table, jnp.int32)
+        hot = None if hot_table is None else jnp.asarray(hot_table, jnp.int32)
 
         def upd(seg):
             if isinstance(seg, LatentKVCache) and seg.paged:
                 ls = seg.page_table.shape[0]
-                return seg.replace(page_table=jnp.broadcast_to(
-                    row[None], (ls, *row.shape)))
+                out = {"page_table": jnp.broadcast_to(row[None],
+                                                      (ls, *row.shape))}
+                if hot is not None:
+                    out["hot_table"] = jnp.broadcast_to(hot[None],
+                                                        (ls, *hot.shape))
+                return seg.replace(**out)
             return seg
         return {k: upd(seg) for k, seg in cache.items()}
 
@@ -487,10 +664,43 @@ class ServeEngine:
                                  jnp.asarray(row), jnp.int32(start_page),
                                  jnp.int32(prompt_len))
 
+    def admit_tiered(self, cache, one_cache, slot: int, page_ids, hot_slots,
+                     start_page: int, prompt_len: int):
+        """Tiered admission: payload pages with a hot slot (``hot_slots[j]``
+        > 0) scatter into the device payload pool; every page's leading-r*
+        rows scatter into the score pool; both table rows install.  Cold
+        pages' payloads are the caller's job (extract_page_payload_dense →
+        TieredPagePool.set_cold)."""
+        maybe_fault("admit")        # before the donate: arena stays alive
+        mp = self.scfg.max_seq_len // self.scfg.page_size
+        row = np.zeros((mp,), np.int32)
+        row[:len(page_ids)] = page_ids
+        hrow = np.zeros((mp,), np.int32)
+        hrow[:len(hot_slots)] = hot_slots
+        return self._admit_tiered(cache, one_cache, jnp.int32(slot),
+                                  jnp.asarray(row), jnp.asarray(hrow),
+                                  jnp.int32(start_page),
+                                  jnp.int32(prompt_len))
+
+    def load_page(self, cache, slot: int, payload: dict):
+        """Device half of a host→HBM fetch: install a host mirror into
+        payload slot ``slot`` (the TieredPagePool fires the ``host_fetch``
+        fault point BEFORE this donating call — see begin_fetch)."""
+        return self._load_page(cache, jnp.int32(slot),
+                               jax.tree.map(jnp.asarray, payload))
+
     def copy_page(self, cache, src: int, dst: int):
-        """Device half of copy-on-write: duplicate pool page src -> dst."""
+        """Device half of copy-on-write: duplicate pool page src -> dst.
+        Tiered mode passes payload SLOT ids here and physical page ids to
+        :meth:`copy_score_page`."""
         maybe_fault("cow_copy")     # before the donate: arena stays alive
         return self._copy_page(cache, jnp.int32(src), jnp.int32(dst))
+
+    def copy_score_page(self, cache, src: int, dst: int):
+        """Tiered COW, score half: duplicate score-pool page src -> dst.
+        No separate fault point — it always rides with a cow_copy (hot
+        source) or a host-mirror copy (cold source), which fire first."""
+        return self._copy_score_page(cache, jnp.int32(src), jnp.int32(dst))
 
     def release_slot(self, cache, slot: int):
         """Metadata-only slot free (paged): lengths + page-table row."""

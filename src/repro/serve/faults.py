@@ -11,6 +11,14 @@ threaded through the scheduler/engine/pager hot path:
     ``decode_step``    RequestScheduler decode loop, before eng._decode
     ``nan_logits``     after decode: corrupt one live row's logits
     ``prefix_resume``  ServeEngine.start_prefill, on the prefix-hit branch
+    ``host_fetch``     TieredPagePool.begin_fetch, before the host→HBM DMA
+    ``spill``          TieredPagePool.begin_spill, before the HBM→host read
+
+The two tier-transfer points (ISSUE 7) ride the same pager fault hook as
+``page_alloc`` (``core.tiering`` reads ``pager._fault_hook`` — it never
+imports this module either) and fire BEFORE any residency state change, so
+an injected fetch/spill fault leaves the page in its prior tier and the
+scheduler fails only the row that demanded the transfer.
 
 Placement rule that makes injected faults *retryable*: every point fires in
 plain Python BEFORE the corresponding jitted call, so buffers donated to

@@ -44,6 +44,34 @@ dense slot arena, and this scheduler is its MEMORY MANAGER:
     (pages_in_use / pages_free / cumulative counters) — the capacity
     ledger tests and benchmarks read.
 
+TWO-TIER mode (ISSUE 7, ``ServeConfig.hbm_pages > 0``): the pool is a
+:class:`~repro.core.tiering.TieredPagePool` — live-page capacity stays
+``pool_pages`` (host RAM) while the device payload pools hold only
+``hbm_pages`` hot slots.  The scheduler adds, around the same decode loop:
+
+  * WRITE PINS — each resident's current write page is pinned hot
+    (``ensure_write_pin``; the per-token append lands in it through the
+    hot table every step);
+  * PREFETCH — before each step, every row's PREVIOUS selection is warmed
+    host→HBM (``tier_prefetch``; the paper's step-to-step selection
+    stability is the hit-rate model, measured by benchmarks/overlap_score);
+  * FETCH-AND-RERUN — the decode step collects the selected-page mask; if
+    any selected page was cold (its reconstruction read the trash slot),
+    the scheduler fetches it hot and RERUNS the identical step — all cache
+    writes are idempotent per-position ``.set``s, so the final all-hot run
+    is bit-identical to an all-HBM step;
+  * gauges ``host_pages`` / ``fetch_hits`` / ``prefetch_hits`` /
+    ``cold_misses`` / ``spills`` ride on ``pool_gauges``, and
+    ``audit_pager`` extends to tier conservation (hot ⊎ cold ⊎ fresh ⊎
+    in-flight == live, slot conservation, pins hot-only);
+  * THRASH SHEDDING — when one step's working set (touched pages + write
+    pins) exceeds the hot tier (:class:`HotTierThrash`), the scheduler
+    sheds LOAD, not the request: the demanding row self-evicts to the
+    queue head (``shed_thrash``), dropping the multiprogramming degree so
+    the survivors' working set fits — the classic thrash response.  Only
+    a SOLE resident that thrashes (its own selection cannot fit hot) fails
+    through the per-request retry budget.
+
 FAULT TOLERANCE (ISSUE 6).  Every request carries the terminal state
 machine of ``serve/lifecycle.py`` (QUEUED → PREFILLING → DECODING →
 {DONE, FAILED, CANCELLED, TIMED_OUT}); all mutations go through
@@ -97,6 +125,7 @@ import numpy as np
 
 from repro.core.pager import (PagePool, PageTable, PagerInvariantError,
                               PrefixIndex, audit_pager)
+from repro.core.tiering import HotTierThrash, TieredPagePool
 from repro.serve import faults
 from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
 from repro.serve.lifecycle import (NanLogitsError, QueueFull,
@@ -211,14 +240,25 @@ class RequestScheduler:
         self.retries: int = 0                   # transient requeues granted
         self.step_faults: int = 0               # batch-wide decode retries
         self.shed: int = 0                      # queue-policy sheds
+        # --- two-tier pool observability (ISSUE 7) -------------------------
+        self.fetch_hits: int = 0                # touched pages already hot
+        self.prefetch_hits: int = 0             # ... warmed by the prefetcher
+        self.cold_misses: int = 0               # demand host→HBM fetches
         self.paged = engine.paged and mode == "continuous"
+        self.tiered = engine.tiered and mode == "continuous"
         self.pool: Optional[PagePool] = None
         self.prefix_index: Optional[PrefixIndex] = None
         if self.paged:
             scfg = engine.scfg
             # +1 / n_reserved=1: physical page 0 is the trash page
-            self.pool = PagePool(scfg.pool_pages + 1, scfg.page_size,
-                                 n_reserved=1)
+            if self.tiered:
+                self.pool = TieredPagePool(scfg.pool_pages + 1,
+                                           scfg.page_size,
+                                           hbm_slots=scfg.hbm_pages,
+                                           n_reserved=1)
+            else:
+                self.pool = PagePool(scfg.pool_pages + 1, scfg.page_size,
+                                     n_reserved=1)
             if scfg.prefix_cache:
                 self.prefix_index = PrefixIndex(self.pool)
         # live loop state, mirrored on self so audit_serving_state can see
@@ -348,11 +388,28 @@ class RequestScheduler:
         host_table = np.zeros((b, mp), np.int32) if self.paged else None
         dirty = [False]
         fault_streak = 0           # consecutive batch-wide decode faults
+        # tiered state (ISSUE 7): the host mirror of the device hot-slot
+        # table, each row's pinned-hot write page, and each row's previous
+        # selection (the prefetch oracle)
+        pool = self.pool
+        host_hot = np.zeros((b, mp), np.int32) if self.tiered else None
+        hot_dirty = [False]
+        write_pin: List[Optional[int]] = [None] * b
+        prev_selected: List[set] = [set() for _ in range(b)]
 
         def release_pages(i: int):
             nonlocal cache
             if not self.paged:
                 return
+            if self.tiered:
+                # unpin BEFORE release_all: freeing a pinned page is an
+                # invariant violation by design (catches leaked pins)
+                if write_pin[i] is not None:
+                    pool.unpin(write_pin[i])
+                    write_pin[i] = None
+                prev_selected[i] = set()
+                host_hot[i] = 0
+                hot_dirty[0] = True
             if tables[i] is not None:
                 tables[i].release_all()
                 tables[i] = None
@@ -504,6 +561,187 @@ class RequestScheduler:
             return _Admission(req, free, task, ptab=ptab,
                               shared_pages=shared, entry=entry)
 
+        # ---- two-tier helpers (ISSUE 7) -----------------------------------
+
+        def shed_thrash(i: int, exc: "HotTierThrash"):
+            """Hot-tier thrash on row ``i``: shed load, not the request.
+            With other residents live, evict row i to the queue head —
+            its pins and hot pages free immediately, the survivors'
+            working set shrinks, and the evicted request restarts later
+            at a lower multiprogramming degree (greedy decode keeps the
+            re-run token-identical).  A SOLE thrashing resident is a hard
+            capacity misfit — its own per-step selection cannot fit the
+            hot tier — and self-eviction would livelock, so that one goes
+            through the transient retry budget and fails with the thrash
+            attached."""
+            if sum(s is not None for s in slots) > 1:
+                evict_to_requeue(i)
+            else:
+                fail_resident(i, exc)
+
+        def claim_slot(exclude) -> int:
+            """A free hot payload slot, spilling the LRU unpinned hot page
+            if none is free.  ``exclude``: pids that must stay hot (about
+            to be read/written this step).  Raises HotTierThrash when
+            every hot page is pinned or excluded (transient, per-row)."""
+            nonlocal cache
+            slot = pool.take_slot()
+            if slot is None:
+                victim = pool.spill_victim(exclude)
+                if victim is None:
+                    raise HotTierThrash(
+                        f"no spillable hot page among {len(pool.hot)} "
+                        f"({len(pool.pins)} pinned)")
+                vslot = pool.begin_spill(victim)   # fires "spill" first
+                mirror = eng.read_page_payload(cache, vslot)
+                pool.finish_spill(victim, mirror)
+                hot_dirty[0] = True
+                slot = pool.take_slot()
+            return slot
+
+        def fetch_page(pid: int, exclude) -> None:
+            """Host→HBM demand/prefetch fetch of cold page ``pid``.  The
+            fault points fire before any state change or transfer, so an
+            injected host_fetch/spill fault leaves both tiers intact — the
+            caller fails only the row that demanded the page."""
+            nonlocal cache
+            slot = claim_slot(exclude)
+            try:
+                payload = pool.begin_fetch(pid)    # fires "host_fetch" first
+            except BaseException:
+                pool.give_slot(slot)
+                raise
+            try:
+                cache = eng.load_page(cache, slot, payload)
+            except BaseException:
+                pool.abort_fetch(pid)
+                pool.give_slot(slot)
+                raise
+            pool.finish_fetch(pid, slot)
+            hot_dirty[0] = True
+
+        def ensure_write_pin(i: int):
+            """Pin row i's current write page hot: the per-token decode
+            write lands in it through the hot table every step, so it must
+            hold a device slot for as long as writes target it.  Growth
+            pages become hot IMMEDIATELY with garbage payload — per-row
+            position masks keep unwritten rows unselectable, exactly the
+            PR 5 recycled-page story."""
+            nonlocal cache
+            ptab = tables[i]
+            pid = ptab.pages[int(positions[i]) // ps]
+            if write_pin[i] == pid:
+                return
+            if write_pin[i] is not None:
+                pool.unpin(write_pin[i])
+                write_pin[i] = None
+            if pid in pool.fresh:          # growth page: slot, no transfer
+                pool.set_hot(pid, claim_slot({pid}))
+            elif pid in pool.cold:         # write into a spilled page
+                fetch_page(pid, {pid})
+                self.cold_misses += 1
+            pool.pin(pid)
+            write_pin[i] = pid
+            hot_dirty[0] = True
+
+        def push_tables():
+            """Push the host page table — and, tiered, the hot-slot table
+            rebuilt from the pool's residency — to the device cache in one
+            leaf swap."""
+            nonlocal cache
+            if self.tiered and (dirty[0] or hot_dirty[0]):
+                slot_of = np.zeros((pool.n_pages,), np.int32)
+                for pid, s in pool.hot.items():
+                    slot_of[pid] = s
+                host_hot[:] = slot_of[host_table]
+                cache = eng.with_page_tables(cache, host_table, host_hot)
+                dirty[0] = hot_dirty[0] = False
+            elif dirty[0]:
+                cache = eng.with_page_tables(cache, host_table)
+                dirty[0] = False
+
+        def assign_residency(adm: _Admission) -> List[int]:
+            """First residency for an admission's FRESH pages: hot while
+            free slots last, overflow cold (mirror extracted from the
+            task's dense cache — those pages never touch the device pools).
+            Admission never spills residents.  Returns the hot-slot row
+            aligned to the reservation (shared pages keep the residency
+            their registrant gave them)."""
+            hot_row = []
+            for j, pid in enumerate(adm.ptab.pages):
+                if pid in pool.fresh:
+                    slot = pool.take_slot()
+                    if slot is not None:
+                        pool.set_hot(pid, slot)
+                    else:
+                        pool.set_cold(pid, eng.extract_page_payload_dense(
+                            adm.task.cache, j))
+                hot_row.append(pool.hot.get(pid, 0))
+            hot_dirty[0] = True
+            return hot_row
+
+        def tiered_decode(prefetched: set):
+            """The tiered decode step: FETCH-AND-RERUN.  Run the selection-
+            collecting decode; if any selected page was cold, its
+            reconstruction read the trash slot — fetch the cold pages hot
+            and rerun the SAME step on the returned cache.  Every cache
+            write is an idempotent ``.set`` at a deterministic position, so
+            the final run (all touched pages hot) is bit-identical to an
+            all-HBM step.  Converges because the score pool is always
+            true: run N's selection at the first miss-affected layer is
+            final, so each round fixes at least one more layer — bounded
+            by the layer count.  Returns the final logits, or None if
+            every resident was torn down by injected fetch faults."""
+            nonlocal cache
+            rounds = 0
+            while True:
+                logits, cache, touched = eng._decode_sel(
+                    jnp.asarray(tokens), cache, jnp.asarray(positions))
+                tnp = np.asarray(touched)
+                touched_all: set = set()
+                new_prev: Dict[int, set] = {}
+                demand: List[tuple] = []
+                for i in range(b):
+                    if slots[i] is None:
+                        continue
+                    pids = {int(host_table[i, j])
+                            for j in np.nonzero(tnp[i])[0]}
+                    pids.discard(0)
+                    new_prev[i] = pids
+                    touched_all |= pids
+                    for pid in sorted(pids):
+                        if pid in pool.cold:
+                            demand.append((i, pid))
+                pool.touch(p for p in sorted(touched_all) if p in pool.hot)
+                if rounds == 0:
+                    self.fetch_hits += sum(
+                        1 for p in touched_all if p in pool.hot)
+                    self.prefetch_hits += len(touched_all & prefetched)
+                if not demand:
+                    for i, pids in new_prev.items():
+                        prev_selected[i] = pids
+                    return logits
+                rounds += 1
+                if rounds > eng.cfg.n_layers + 2:
+                    raise PagerInvariantError(
+                        "tiered fetch-and-rerun did not converge in "
+                        f"{rounds} rounds (selection unstable?)")
+                for i, pid in demand:
+                    if slots[i] is None:       # row died earlier this pass
+                        continue
+                    if pid not in pool.cold:   # fetched for an earlier row
+                        continue
+                    try:
+                        fetch_page(pid, touched_all)
+                        self.cold_misses += 1
+                    except faults.InjectedFault as exc:
+                        fail_resident(i, exc)
+                    except HotTierThrash as exc:
+                        shed_thrash(i, exc)
+                if not any(s is not None for s in slots):
+                    return None
+                push_tables()
+
         def ensure_writable(i: int):
             """Pre-decode page upkeep for resident row i: map the page its
             next write lands in (allocating on page crossings) and COW any
@@ -511,7 +749,8 @@ class RequestScheduler:
             whole-page and the cache append-only — but guarded so a future
             sharing policy cannot silently corrupt a shared page).  If the
             pool is exhausted even after dropping cache entries, the row
-            evicts ITSELF to the queue (see evict_to_requeue)."""
+            evicts ITSELF to the queue (see evict_to_requeue).  Tiered:
+            also pins the write page hot (ensure_write_pin)."""
             nonlocal cache
             p = int(positions[i]) // ps
             ptab = tables[i]
@@ -527,10 +766,26 @@ class RequestScheduler:
                     evict_to_requeue(i)
                     return
                 old, new = ptab.ensure_exclusive(p)
-                cache = eng.copy_page(cache, old, new)
+                if self.tiered:
+                    # score page: physical-id copy, always device-resident
+                    cache = eng.copy_score_page(cache, old, new)
+                    if old in pool.hot:
+                        slot = claim_slot({old, new})
+                        cache = eng.copy_page(cache, pool.hot[old], slot)
+                        pool.set_hot(new, slot)
+                    else:              # cold source: host-mirror duplicate
+                        faults.maybe_fault("cow_copy")
+                        pool.set_cold(new, {
+                            seg: {f: v.copy() for f, v in fl.items()}
+                            for seg, fl in pool.cold[old].items()})
+                    hot_dirty[0] = True
+                else:
+                    cache = eng.copy_page(cache, old, new)
                 host_table[i, p] = new
                 dirty[0] = True
                 self.cow_copies += 1
+            if self.tiered:
+                ensure_write_pin(i)
 
         def sweep_deadlines_and_cancels():
             """Honor cancel() and expired deadlines in EVERY phase through
@@ -625,7 +880,17 @@ class RequestScheduler:
                 if active.task.done:
                     i = active.slot
                     try:
-                        if self.paged:
+                        if self.tiered:
+                            # residency first: the cold mirrors read the
+                            # task's dense cache, which the splice leaves
+                            # alive (only the ARENA is donated)
+                            hot_row = assign_residency(active)
+                            cache = eng.admit_tiered(
+                                cache, active.task.cache, i,
+                                active.ptab.pages, hot_row,
+                                active.shared_pages,
+                                active.task.prompt_len)
+                        elif self.paged:
                             cache = eng.admit_paged(
                                 cache, active.task.cache, i,
                                 active.ptab.pages, active.shared_pages,
@@ -685,11 +950,29 @@ class RequestScheduler:
                     if slots[i] is not None:
                         try:
                             ensure_writable(i)
+                        except HotTierThrash as exc:
+                            shed_thrash(i, exc)    # load, not the request
                         except Exception as exc:   # alloc/COW fault: only
                             fail_resident(i, exc)  # row i pays
-                if dirty[0]:
-                    cache = eng.with_page_tables(cache, host_table)
-                    dirty[0] = False
+                # ---- selection-driven prefetch (ISSUE 7): warm each
+                # row's PREVIOUS step's selected pages — the paper's
+                # stability insight says the next selection mostly repeats
+                # it (measured: benchmarks/overlap_score.py) ---------------
+                prefetched: set = set()
+                if self.tiered and eng.scfg.tier_prefetch:
+                    for i in range(b):
+                        if slots[i] is None:
+                            continue
+                        try:
+                            for pid in sorted(prev_selected[i]):
+                                if pid in pool.cold:
+                                    fetch_page(pid, prev_selected[i])
+                                    prefetched.add(pid)
+                        except HotTierThrash:
+                            break   # hot tier saturated: best-effort only
+                        except faults.InjectedFault as exc:
+                            fail_resident(i, exc)   # prefetch blast radius
+                push_tables()
                 if not any(s is not None for s in slots):
                     continue       # upkeep evicted/failed every resident
 
@@ -709,8 +992,13 @@ class RequestScheduler:
                     raise
                 continue
             fault_streak = 0
-            logits, cache = eng._decode(
-                jnp.asarray(tokens), cache, jnp.asarray(positions))
+            if self.tiered:
+                logits = tiered_decode(prefetched)
+                if logits is None:      # fetch faults tore every row down
+                    continue
+            else:
+                logits, cache = eng._decode(
+                    jnp.asarray(tokens), cache, jnp.asarray(positions))
             live = [i for i in range(b) if slots[i] is not None]
             pick = faults.maybe_pick("nan_logits", len(live))
             if pick is not None:
@@ -735,7 +1023,7 @@ class RequestScheduler:
                 if len(slots[i].out) >= slots[i].req.max_new_tokens:
                     finish(i)
             if self.paged:
-                self.pool_gauges.append({
+                row = {
                     "step": self.steps,
                     "pages_in_use": self.pool.pages_in_use,
                     "pages_free": self.pool.pages_free,
@@ -745,7 +1033,16 @@ class RequestScheduler:
                     "evictions": self.evictions,
                     "prefix_entries": len(self.prefix_index.entries)
                     if self.prefix_index else 0,
-                })
+                }
+                if self.tiered:
+                    row.update({
+                        "host_pages": pool.host_pages,
+                        "fetch_hits": self.fetch_hits,
+                        "prefetch_hits": self.prefetch_hits,
+                        "cold_misses": self.cold_misses,
+                        "spills": pool.spills,
+                    })
+                self.pool_gauges.append(row)
             if audit_on and self.steps % self.engine.scfg.audit_every == 0:
                 self.audit_serving_state(
                     self.pool_gauges[-1] if self.pool_gauges else None)

@@ -638,3 +638,90 @@ def test_chaos_sweep_deterministic(eng, model, seed):
 @given(seed=st.integers(0, 2 ** 16))
 def test_chaos_sweep_randomized(eng, model, seed):
     _chaos_run(eng, model, seed)
+
+
+# ---------------------------------------------------------------------------
+# two-tier pool chaos (ISSUE 7): the tier-transfer fault points ride the
+# same schedules; tier conservation is audited every step
+# ---------------------------------------------------------------------------
+
+TIERED_RATES = dict(RATES, host_fetch=0.05, spill=0.05)
+
+
+@pytest.fixture(scope="module")
+def eng_tiered(model):
+    """Paged engine with the hot tier at its FLOOR (max_batch + 1 = 4):
+    the fixed workload's live pages far exceed HBM, so every episode
+    sees demand fetches, spills, prefetches, and thrash shedding — and
+    their fault points."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=8, max_batch=3,
+                       sals=sals, prefill_chunk=8, page_size=16,
+                       prefill_token_budget=8, hbm_pages=4, audit_every=1)
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def _drain_check_tiered(sched):
+    """PR 7 drain: on top of zero live pages, BOTH tiers are empty,
+    nothing is mid-transfer, and every hot slot is back on the free
+    list."""
+    _drain_check(sched)
+    pool = sched.pool
+    assert not pool.in_flight
+    assert not pool.hot and pool.host_pages == 0 and not pool.fresh
+    assert pool.slots_free == pool.hbm_slots
+    pool.audit_tiers()
+
+
+def test_tiered_transfer_faults_retry_token_exact(eng, eng_tiered, model):
+    """One injected fault on each tier-transfer point: the page stays in
+    its prior tier (the hook fires BEFORE any state change), only the
+    demanding row pays a transient retry, and the run ends token-exact
+    vs the UNTIERED fault-free reference."""
+    ref = _reference(eng, model)
+    for point in ("host_fetch", "spill"):
+        reqs = _reqs(_workload(model))
+        schedule = faults.FaultSchedule(at={point: [0]})
+        sched = _run(eng_tiered, reqs, schedule=schedule)
+        assert schedule.log == [(point, 0)], f"{point} never fired"
+        for r, want in zip(reqs, ref):
+            assert r.state is RequestState.DONE, \
+                (point, r.req_id, r.state, r.error)
+            np.testing.assert_array_equal(r.result.tokens, want)
+        _drain_check_tiered(sched)
+
+
+def _chaos_run_tiered(eng, eng_tiered, model, seed):
+    """One randomized episode over the TIERED pool: same three acceptance
+    properties as :func:`_chaos_run` (audit_every=1 now also proves tier
+    conservation via ``audit_tiers``), with DONE rows token-exact vs the
+    UNTIERED fault-free reference — faults and placement both invisible."""
+    ref = _reference(eng, model)
+    reqs = _reqs(_workload(model))
+    schedule = faults.FaultSchedule(seed=seed, rates=TIERED_RATES)
+    try:
+        sched = _run(eng_tiered, reqs, schedule=schedule)
+    except faults.InjectedFault:
+        assert schedule.log[-1][0] == "decode_step"
+        return
+    assert sched.steps <= STEP_BOUND, "livelock: step bound exceeded"
+    for r, want in zip(reqs, ref):
+        assert r.finished, (r.req_id, r.state)
+        if r.state is RequestState.DONE:
+            np.testing.assert_array_equal(r.result.tokens, want)
+        else:
+            assert r.state is RequestState.FAILED
+            assert r.error is not None
+    _drain_check_tiered(sched)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3] + _EXTRA_SEEDS)
+def test_tiered_chaos_sweep_deterministic(eng, eng_tiered, model, seed):
+    _chaos_run_tiered(eng, eng_tiered, model, seed)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_tiered_chaos_sweep_randomized(eng, eng_tiered, model, seed):
+    _chaos_run_tiered(eng, eng_tiered, model, seed)

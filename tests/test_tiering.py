@@ -1,0 +1,310 @@
+"""Two-tier page pool (ISSUE 7): TieredPagePool residency state machine,
+tier-conservation audits, retry-safe transfer fault points, config
+validation, and the end-to-end acceptance properties — tiered decode is
+BIT-identical to the all-HBM paged pool, a run whose live pages exceed
+the hot tier completes with zero evictions (spill/fetch traffic instead),
+and hot-tier thrash sheds LOAD (evict-to-requeue) rather than failing
+requests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.core.pager import PagerInvariantError
+from repro.core.tiering import HotTierThrash, TieredPagePool
+from repro.models import transformer as tf
+from repro.serve import Request, RequestScheduler, ServeEngine, faults
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# TieredPagePool unit: residency state machine
+# ---------------------------------------------------------------------------
+
+def test_tiered_pool_residency_lifecycle():
+    pool = TieredPagePool(8, 4, hbm_slots=3, n_reserved=1)
+    a = pool.alloc()
+    assert pool.residency(a) == "fresh"
+    pool.set_hot(a, pool.take_slot())
+    assert pool.residency(a) == "hot" and pool.slots_free == 2
+    b = pool.alloc()
+    pool.set_cold(b, {"seg": 1})
+    assert pool.residency(b) == "cold" and pool.host_pages == 1
+    pool.audit_tiers()
+    # spill: hot -> in_flight -> cold, slot returns to the free list
+    slot = pool.begin_spill(a)
+    assert pool.residency(a) == "in_flight"
+    pool.audit_tiers()                         # in-flight spill slot counted
+    pool.finish_spill(a, {"seg": 2})
+    assert pool.residency(a) == "cold"
+    assert pool.spills == 1 and pool.slots_free == 3
+    pool.audit_tiers()
+    # fetch: cold -> in_flight -> hot, mirror handed back to the engine
+    mirror = pool.begin_fetch(b)
+    assert mirror == {"seg": 1}
+    pool.finish_fetch(b, pool.take_slot())
+    assert pool.residency(b) == "hot" and pool.fetches == 1
+    # abort restores the prior tier (transfer never happened)
+    pool.begin_fetch(a)
+    pool.abort_fetch(a)
+    assert pool.residency(a) == "cold" and not pool.in_flight
+    pool.audit_tiers()
+    # free drops residency and returns the slot
+    pool.free(b)
+    pool.free(a)
+    assert pool.pages_in_use == 0
+    assert pool.slots_free == 3 and pool.host_pages == 0
+    pool.audit_tiers()
+    pool.check()
+
+
+def test_tiered_pool_lru_pins_and_thrash():
+    pool = TieredPagePool(8, 4, hbm_slots=3, n_reserved=1)
+    p0, p1, p2 = (pool.alloc() for _ in range(3))
+    for p in (p0, p1, p2):
+        pool.set_hot(p, pool.take_slot())
+    pool.touch([p0])                           # p1 becomes least recent
+    assert pool.spill_victim() == p1
+    pool.pin(p1)                               # the write page
+    assert pool.spill_victim() == p2
+    # excluding the read set too -> no victim: thrash, caller degrades
+    assert pool.spill_victim(exclude=[p0, p2]) is None
+    with pytest.raises(PagerInvariantError, match="pinned"):
+        pool.begin_spill(p1)
+    pool.audit_tiers()
+    pool.unpin(p1)
+    with pytest.raises(PagerInvariantError, match="unpinned"):
+        pool.unpin(p1)
+    with pytest.raises(PagerInvariantError, match="non-hot"):
+        pool.pin(pool.alloc())                 # fresh pages can't be pinned
+    assert issubclass(HotTierThrash, RuntimeError) and HotTierThrash.transient
+
+
+def test_tiered_pool_free_guards():
+    pool = TieredPagePool(8, 4, hbm_slots=2, n_reserved=1)
+    a = pool.alloc()
+    pool.set_hot(a, pool.take_slot())
+    pool.pin(a)
+    with pytest.raises(PagerInvariantError, match="pinned"):
+        pool.free(a)                           # freeing a write page is a bug
+    pool = TieredPagePool(8, 4, hbm_slots=2, n_reserved=1)
+    b = pool.alloc()
+    pool.set_cold(b, {})
+    pool.begin_fetch(b)
+    with pytest.raises(PagerInvariantError, match="mid-transfer"):
+        pool.free(b)
+
+
+def test_tiered_audit_detects_corruption():
+    pool = TieredPagePool(8, 4, hbm_slots=3, n_reserved=1)
+    a, b = pool.alloc(), pool.alloc()
+    pool.set_hot(a, pool.take_slot())
+    pool.set_cold(b, {})
+    pool.audit_tiers(gauges={"host_pages": 1})
+    # 1) a page in two tiers at once
+    pool.cold[a] = {}
+    with pytest.raises(PagerInvariantError, match="both hot"):
+        pool.audit_tiers()
+    del pool.cold[a]
+    # 2) residency without a live ref / live page without residency
+    pool.fresh.add(7)
+    with pytest.raises(PagerInvariantError, match="census"):
+        pool.audit_tiers()
+    pool.fresh.discard(7)
+    # 3) duplicate hot-slot assignment
+    c = pool.alloc()
+    pool.set_hot(c, pool.hot[a])
+    with pytest.raises(PagerInvariantError, match="duplicate"):
+        pool.audit_tiers()
+    pool.hot[c] = pool.take_slot()
+    pool.audit_tiers()
+    # 4) slot conservation (a slot both assigned and on the free list)
+    pool._slots_free.append(pool.hot[a])
+    with pytest.raises(PagerInvariantError, match="slot conservation"):
+        pool.audit_tiers()
+    pool._slots_free.pop()
+    # 5) pin on a non-hot page
+    pool.pins[b] = 1
+    with pytest.raises(PagerInvariantError, match="non-hot"):
+        pool.audit_tiers()
+    del pool.pins[b]
+    # 6) gauge drift
+    with pytest.raises(PagerInvariantError, match="host_pages"):
+        pool.audit_tiers(gauges={"host_pages": 99})
+
+
+def test_tier_fault_points_fire_before_state_change():
+    """``host_fetch`` / ``spill`` fire in plain Python BEFORE any residency
+    change or transfer — an injected fault leaves the page in its prior
+    tier with nothing in flight, so the caller's retry is safe."""
+    pool = TieredPagePool(8, 4, hbm_slots=3, n_reserved=1)
+    a, b = pool.alloc(), pool.alloc()
+    pool.set_hot(a, pool.take_slot())
+    pool.set_cold(b, {"seg": 1})
+    schedule = faults.FaultSchedule(at={"host_fetch": [0], "spill": [0]})
+    with faults.injected(schedule):
+        with pytest.raises(faults.InjectedFault):
+            pool.begin_fetch(b)
+        assert pool.residency(b) == "cold" and not pool.in_flight
+        with pytest.raises(faults.InjectedFault):
+            pool.begin_spill(a)
+        assert pool.residency(a) == "hot" and not pool.in_flight
+        pool.audit_tiers()
+        # the SECOND occurrence is past the schedule: the retry succeeds
+        pool.finish_fetch(b, (pool.begin_fetch(b), pool.take_slot())[1])
+        assert pool.residency(b) == "hot"
+    assert [p for p, *_ in schedule.log] == ["host_fetch", "spill"]
+    pool.audit_tiers()
+
+
+def test_tiered_config_validation():
+    """ISSUE 7 satellite: tier misconfigurations fail at PARSE time."""
+    with pytest.raises(ValueError, match="needs the paged"):
+        ServeConfig(max_seq_len=128, hbm_pages=4)
+    with pytest.raises(ValueError, match=">= 0"):
+        ServeConfig(max_seq_len=128, hbm_pages=-1)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_seq_len=128, page_size=16, prefill_chunk=16,
+                    max_batch=3, hbm_pages=3)
+    with pytest.raises(ValueError, match="exceeds the pool"):
+        ServeConfig(max_seq_len=128, page_size=16, prefill_chunk=16,
+                    max_batch=1, hbm_pages=99)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: tiered == untiered; over-capacity; thrash shedding
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _engine(model, hbm_pages, sals=None, proj=None, prefetch=True):
+    cfg, params, msals, mproj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=8, max_batch=3,
+                       sals=sals or msals, prefill_chunk=8, page_size=16,
+                       hbm_pages=hbm_pages, tier_prefetch=prefetch,
+                       audit_every=1)
+    return ServeEngine(params, proj if sals else mproj, cfg, scfg)
+
+
+def _run(eng, prompts, mnt=8):
+    sched = RequestScheduler(eng, mode="continuous")
+    reqs = [Request(np.asarray(p, np.int32), max_new_tokens=mnt)
+            for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return reqs, sched
+
+
+def _drain_tiers(sched):
+    """After the prefix-cache entries release their pins, BOTH tiers drain
+    to zero and every hot slot returns to the free list."""
+    pool = sched.pool
+    assert not pool.in_flight
+    assert len(pool.hot) + pool.host_pages + len(pool.fresh) \
+        == pool.pages_in_use
+    pool.audit_tiers(gauges=sched.pool_gauges[-1])
+    if sched.prefix_index is not None:
+        for e in sched.prefix_index.entries:
+            sched.prefix_index.evict(e)
+    assert pool.pages_in_use == 0
+    assert pool.slots_free == pool.hbm_slots and pool.host_pages == 0
+    pool.audit_tiers()
+    pool.check()
+
+
+def test_tiered_decode_token_exact_vs_untiered(model):
+    """Acceptance: the same request stream through a 6-slot hot tier
+    produces the SAME greedy tokens as the all-HBM paged pool — demand
+    fetch-and-rerun + prefetch never change results, only placement."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 128, size=int(n)).astype(np.int32)
+               for n in (6, 19, 30, 11, 25, 9)]
+    ru, _ = _run(_engine(model, hbm_pages=0), prompts)
+    rt, st = _run(_engine(model, hbm_pages=6), prompts)
+    for a, b in zip(ru, rt):
+        np.testing.assert_array_equal(a.result.tokens, b.result.tokens)
+    assert st.pool.spills >= 1                 # the tier actually engaged
+    assert st.pool_gauges[-1]["evictions"] == 0
+    _drain_tiers(st)
+
+
+@pytest.fixture(scope="module")
+def demo(model):
+    """Shared-prefix workload whose LIVE pages exceed the hot tier while
+    each step's working set still fits: two groups of three requests
+    sharing an 80-token prefix (n_critical=8 keeps the touched set
+    small), retained prefix-cache entries accumulate cold pages."""
+    cfg, params, _, _ = model
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=8,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    rng = np.random.default_rng(11)
+    groups = [rng.integers(1, 128, size=80).astype(np.int32)
+              for _ in range(2)]
+    prompts = [np.concatenate([groups[k // 3],
+                               rng.integers(1, 128, size=10).astype(np.int32)])
+               for k in range(6)]
+    return sals, proj, prompts
+
+
+def test_tiered_over_capacity_zero_evictions(model, demo):
+    """Acceptance: a run with more live pages than HBM slots COMPLETES
+    with zero evictions — spill/fetch traffic replaces capacity pressure,
+    audited for tier conservation every step, bit-identical output."""
+    sals, proj, prompts = demo
+    ru, _ = _run(_engine(model, 0, sals=sals, proj=proj), prompts)
+    rt, st = _run(_engine(model, 10, sals=sals, proj=proj), prompts)
+    for a, b in zip(ru, rt):
+        np.testing.assert_array_equal(a.result.tokens, b.result.tokens)
+    peak_live = max(g["pages_in_use"] for g in st.pool_gauges)
+    assert peak_live > 10, "workload must actually exceed the hot tier"
+    g = st.pool_gauges[-1]
+    assert g["evictions"] == 0                 # capacity came from the tier,
+    assert st.pool.spills > 0                  # not from killing residents
+    assert st.cold_misses > 0 and st.fetch_hits > 0
+    assert max(gg["host_pages"] for gg in st.pool_gauges) > 0
+    _drain_tiers(st)
+
+
+def test_tiered_thrash_sheds_load_not_requests(model, demo):
+    """When a step's own working set cannot fit the hot tier, the
+    scheduler sheds LOAD — a co-resident is evicted to the queue (no
+    retry budget burned) and every request still completes token-exact."""
+    sals, proj, prompts = demo
+    ru, _ = _run(_engine(model, 0, sals=sals, proj=proj), prompts)
+    rt, st = _run(_engine(model, 8, sals=sals, proj=proj), prompts)
+    for a, b in zip(ru, rt):
+        assert b.result is not None, (b.req_id, b.state, b.error)
+        np.testing.assert_array_equal(a.result.tokens, b.result.tokens)
+    assert st.pool_gauges[-1]["evictions"] > 0
+    assert st.failures == 0
+    _drain_tiers(st)
+
+
+def test_tiered_exact_without_prefetch(model, demo):
+    """`tier_prefetch` is a latency knob, not a correctness knob: demand
+    fetches alone still produce identical tokens (prefetch off)."""
+    sals, proj, prompts = demo
+    ru, _ = _run(_engine(model, 0, sals=sals, proj=proj), prompts[:3])
+    rt, st = _run(_engine(model, 10, sals=sals, proj=proj, prefetch=False),
+                  prompts[:3])
+    for a, b in zip(ru, rt):
+        np.testing.assert_array_equal(a.result.tokens, b.result.tokens)
+    assert st.prefetch_hits == 0
+    _drain_tiers(st)
