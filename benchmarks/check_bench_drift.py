@@ -39,8 +39,10 @@ MODELED_SECTIONS = {
 
 # measured (not recomputable here) but REQUIRED: the step-to-step
 # selection-stability cell written by ``benchmarks/overlap_score.py`` is
-# the tiered prefetcher's hit-rate model — a re-emit must not drop it
-MEASURED_SECTIONS = ("selection_stability",)
+# the tiered prefetcher's hit-rate model, and the per-class SLO cell
+# written by ``benchmarks/throughput.py`` is the scheduling-policy story
+# (FIFO vs evict vs park) — a re-emit must not drop either
+MEASURED_SECTIONS = ("selection_stability", "slo_report")
 
 
 def _normalize(rows):
@@ -71,13 +73,15 @@ def main() -> int:
                       f"committed {len(got)}")
         else:
             print(f"ok: {section} ({len(want)} rows)")
+    measured_by = {"selection_stability": "benchmarks.overlap_score",
+                   "slo_report": "benchmarks.throughput"}
     for section in MEASURED_SECTIONS:
         got = committed.get(section)
         if not got:
             bad = True
             print(f"DRIFT: BENCH_attention.json[{section!r}] is missing/"
-                  "empty — run 'PYTHONPATH=src python -m "
-                  "benchmarks.overlap_score' to measure it")
+                  f"empty — run 'PYTHONPATH=src python -m "
+                  f"{measured_by[section]}' to measure it")
         else:
             print(f"ok: {section} present ({len(got)} rows, measured)")
     if bad:

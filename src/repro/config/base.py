@@ -406,6 +406,39 @@ class ServeConfig:
     # O(pages + residents) — so small N is affordable even in production.
     audit_every: int = 0
 
+    # --- SLO scheduling (ISSUE 8) ------------------------------------------
+    # Number of priority classes; Request.priority must be in
+    # [0, priority_classes).  Higher value = more urgent.  With > 1 class
+    # the continuous scheduler preempts low-priority residents when a
+    # strictly higher class is waiting and no slot is free.
+    priority_classes: int = 1
+    # What preemption does to the victim:
+    #   "park"  — detach the slot but KEEP the pages (refcounts held);
+    #             resume continues token-exact with no re-prefill.  Needs
+    #             the paged cache (page_size > 0) when priority_classes > 1.
+    #   "evict" — destructive evict-to-requeue (PR 5 machinery): pages
+    #             released, request re-prefills from scratch.
+    #   "none"  — never preempt; priorities only order admission.
+    preempt_policy: str = "park"      # park | evict | none
+    # Deficit-round-robin quantum (tokens per rotation turn) for per-tenant
+    # fairness WITHIN a priority class.  A request's cost is
+    # len(prompt) + max_new_tokens; larger quanta trade fairness
+    # granularity for fewer rotation scans.
+    tenant_quantum: int = 256
+    # Per-tenant admission rate limit in tokens per scheduler step
+    # (0 = unlimited).  Credit accrues while a tenant has pending work
+    # (capped at 32 steps' worth) and admission debits the request cost —
+    # credit may go negative, pacing bursts instead of rejecting them.
+    tenant_rate: float = 0.0
+    # Per-tenant cap on in-flight requests (PREFILLING + DECODING +
+    # PARKED); 0 = uncapped.
+    tenant_max_inflight: int = 0
+    # Ring-buffer cap on the observability ledgers (pool_gauges,
+    # admissions, prefill_chunks): keep only the most recent N rows.
+    # 0 = unbounded (tests read full history); production should set this —
+    # the ledgers otherwise grow one row per step/chunk forever.
+    gauge_history: int = 0
+
     def __post_init__(self):
         if self.max_queue < 0:
             raise ValueError("max_queue must be >= 0 (0 = unbounded)")
@@ -420,6 +453,22 @@ class ServeConfig:
             raise ValueError("page_size / n_pages must be >= 0")
         if self.hbm_pages < 0:
             raise ValueError("hbm_pages must be >= 0 (0 = untiered)")
+        if self.priority_classes < 1:
+            raise ValueError("priority_classes must be >= 1")
+        if self.preempt_policy not in ("park", "evict", "none"):
+            raise ValueError(f"unknown preempt_policy {self.preempt_policy!r}")
+        if self.tenant_quantum < 1:
+            raise ValueError("tenant_quantum must be >= 1")
+        if self.tenant_rate < 0 or self.tenant_max_inflight < 0:
+            raise ValueError("tenant_rate / tenant_max_inflight >= 0")
+        if self.gauge_history < 0:
+            raise ValueError("gauge_history must be >= 0 (0 = unbounded)")
+        if (self.priority_classes > 1 and self.preempt_policy == "park"
+                and self.page_size == 0):
+            raise ValueError(
+                "preempt_policy 'park' holds the victim's PAGES across the "
+                "park and needs the paged latent cache (page_size > 0); "
+                "dense arenas must use preempt_policy 'evict' or 'none'")
         if self.page_size == 0:
             if self.hbm_pages:
                 raise ValueError("hbm_pages needs the paged latent cache "

@@ -139,6 +139,43 @@ def main() -> None:
                     help="transient per-request faults retry this many "
                          "times with exponential backoff in steps before "
                          "the request fails")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="SLO scheduling (ISSUE 8): number of priority "
+                         "classes; requests carry priority in [0, N) and "
+                         "admission always serves the highest eligible "
+                         "class first.  >1 with --preempt-policy park "
+                         "needs --page-size (parked victims keep pages)")
+    ap.add_argument("--preempt-policy", default="park",
+                    choices=("park", "evict", "none"),
+                    help="what a strictly higher waiting class does to the "
+                         "lowest resident when no slot is free: park = "
+                         "host-snapshot the victim's rows and HOLD its "
+                         "pages (resume is token-exact, no re-prefill); "
+                         "evict = requeue and re-prefill later; none = "
+                         "priority orders admission only")
+    ap.add_argument("--tenant-quantum", type=int, default=256,
+                    help="deficit-round-robin quantum (tokens) for "
+                         "admission across tenant_ids within one priority "
+                         "class — one burst-happy tenant cannot monopolize "
+                         "slots")
+    ap.add_argument("--tenant-rate", type=float, default=0.0,
+                    help="per-tenant admission rate limit: tokens of "
+                         "credit accrued per scheduler iteration (0 = "
+                         "unlimited); admission debits prompt + decode "
+                         "budget, pacing bursts instead of rejecting them")
+    ap.add_argument("--tenant-max-inflight", type=int, default=0,
+                    help="per-tenant cap on requests holding serving "
+                         "resources (resident + parked + admitting); "
+                         "0 = uncapped")
+    ap.add_argument("--gauge-history", type=int, default=0,
+                    help="ring-buffer cap on the observability ledgers "
+                         "(admissions / prefill chunks / pool gauges); "
+                         "0 = unbounded (pre-ISSUE-8 behavior, grows "
+                         "forever on a long-lived scheduler)")
+    ap.add_argument("--stream", action="store_true",
+                    help="attach an on_token callback to every request "
+                         "and report per-request TTFT + p99 inter-token "
+                         "gap as a streaming client would observe them")
     ap.add_argument("--audit-every", type=int, default=0,
                     help="run the cross-structure pager invariant audit "
                          "every N scheduler steps (0 = off); host-side "
@@ -198,16 +235,32 @@ def main() -> None:
                        request_timeout_steps=args.request_timeout_steps,
                        max_request_retries=args.max_request_retries,
                        audit_every=args.audit_every,
+                       priority_classes=args.priority_classes,
+                       preempt_policy=args.preempt_policy,
+                       tenant_quantum=args.tenant_quantum,
+                       tenant_rate=args.tenant_rate,
+                       tenant_max_inflight=args.tenant_max_inflight,
+                       gauge_history=args.gauge_history,
                        sals=sals or SALSConfig(enabled=False))
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility
     sched = RequestScheduler(engine)
 
     rng = np.random.default_rng(args.seed)
+    stream_stamps: dict = {}
     for i in range(args.requests):
         plen = max(4, args.prompt_len + int(rng.integers(-8, 8)))
         prompt = corpus.batch(50_000 + i, 1, plen)["tokens"][0]
-        sched.submit(Request(prompt, max_new_tokens=args.max_new_tokens))
+        # round-robin the priority classes and two demo tenants so the
+        # SLO machinery is actually exercised when the flags enable it
+        req = Request(prompt, max_new_tokens=args.max_new_tokens,
+                      priority=i % args.priority_classes,
+                      tenant_id=f"tenant{i % 2}")
+        if args.stream:
+            stream_stamps[req.req_id] = [time.time()]
+            req.on_token = lambda tok, idx, rid=req.req_id: \
+                stream_stamps[rid].append(time.time())
+        sched.submit(req)
 
     t0 = time.time()
     done = sched.run()
@@ -237,6 +290,28 @@ def main() -> None:
                   f"fetch_hits={sched.fetch_hits} "
                   f"prefetch_hits={sched.prefetch_hits} "
                   f"cold_misses={sched.cold_misses}")
+    if args.priority_classes > 1:
+        print(f"[serve] slo: {args.priority_classes} classes "
+              f"(policy={args.preempt_policy}), parks={sched.parks} "
+              f"resumes={sched.resumes} preemptions={sched.preemptions}")
+    if args.tenant_rate or args.tenant_max_inflight or \
+            len(sched.tenant_gauges) > 1:
+        for tenant, g in sorted(sched.tenant_gauges.items()):
+            print(f"[serve] tenant {tenant}: {g['admitted']}/"
+                  f"{g['submitted']} admitted "
+                  f"({g['admitted_tokens']} tokens), deferrals "
+                  f"rate={g['rate_deferrals']} cap={g['cap_deferrals']}, "
+                  f"max wait {g['max_wait_steps']} steps")
+    if args.stream:
+        ttfts, gaps = [], []
+        for ts in stream_stamps.values():
+            if len(ts) > 1:
+                ttfts.append((ts[1] - ts[0]) * 1e3)
+                gaps.extend(np.diff(np.asarray(ts)) * 1e3)
+        if gaps:
+            print(f"[serve] streaming: mean ttft {np.mean(ttfts):.1f}ms, "
+                  f"p99 inter-token {np.percentile(gaps, 99):.1f}ms "
+                  f"(client-observed, includes queueing)")
     for r in ok[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")

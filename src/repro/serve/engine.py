@@ -52,6 +52,10 @@ class GenerationResult:
     tokens: np.ndarray          # (new_tokens,) generated ids
     prompt_len: int
     steps: int
+    # False: a partial stream flushed by a non-DONE teardown (cancel /
+    # timeout / terminal failure mid-decode) — ``tokens`` holds everything
+    # committed before the request died (ISSUE 8 streaming).
+    complete: bool = True
 
 
 @dataclasses.dataclass
@@ -161,6 +165,9 @@ class ServeEngine:
         self._copy_score_page = jax.jit(self._copy_score_page_impl,
                                         donate_argnums=(0,))
         self._load_page = jax.jit(self._load_page_impl, donate_argnums=(0,))
+        self._detach_slot = jax.jit(self._detach_slot_impl)
+        self._attach_slot = jax.jit(self._attach_slot_impl,
+                                    donate_argnums=(0,))
         self._release_slot = jax.jit(self._release_slot_impl,
                                      donate_argnums=(0,))
         self._init_slots = jax.jit(self._init_slots_impl)
@@ -470,6 +477,46 @@ class ServeEngine:
             out[k] = fields
         return out
 
+    # Per-slot state a PARK must carry across the slot release (ISSUE 8):
+    # the attention windows + the slot length.  The paged per-token payload
+    # stays in the pool (the parked request keeps its page refcounts); the
+    # page-table row is host state (reinstalled via with_page_tables).
+    _PARK_FIELDS = ("sink_k", "sink_v", "recent_k", "recent_v", "lengths")
+
+    def _detach_slot_impl(self, cache, slot):
+        """Park, device half: pure per-slot reads of every segment's slot
+        row (latent segments: the window fields; full-precision segments:
+        every leaf at the batch axis).  Traced slot — one HLO."""
+        def take(seg):
+            if isinstance(seg, LatentKVCache):
+                return {name: jax.lax.dynamic_slice_in_dim(
+                            getattr(seg, name), slot, 1, axis=1)
+                        for name in self._PARK_FIELDS}
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                seg)
+
+        return {k: take(seg) for k, seg in cache.items()}
+
+    def _attach_slot_impl(self, cache, snap, slot):
+        """Resume, device half: splice a park snapshot back into batch row
+        ``slot`` (the mirror of :meth:`_detach_slot_impl`; the paged
+        payload never moved).  Traced slot — one HLO."""
+        def put(seg, s):
+            if isinstance(seg, LatentKVCache):
+                out = {}
+                for name in self._PARK_FIELDS:
+                    arr = getattr(seg, name)
+                    out[name] = jax.lax.dynamic_update_slice_in_dim(
+                        arr, s[name].astype(arr.dtype), slot, axis=1)
+                return seg.replace(**out)
+            return jax.tree.map(
+                lambda a, o: jax.lax.dynamic_update_slice_in_dim(
+                    a, o.astype(a.dtype), slot, axis=1),
+                seg, s)
+
+        return {k: put(seg, snap[k]) for k, seg in cache.items()}
+
     def _release_slot_impl(self, cache, slot):
         """Metadata-only slot release: per-slot lengths (+ page-table row)
         reset; NO payload zeroing (ISSUE 5 — freeing is O(1), and per-row
@@ -705,6 +752,27 @@ class ServeEngine:
     def release_slot(self, cache, slot: int):
         """Metadata-only slot free (paged): lengths + page-table row."""
         return self._release_slot(cache, jnp.int32(slot))
+
+    def detach_slot(self, cache, slot: int) -> dict:
+        """Park: snapshot batch row ``slot``'s per-slot state to HOST
+        memory (windows + lengths for latent segments, whole slot rows for
+        full-precision segments).  Pure reads — the arena stays valid, and
+        the host copy survives any later donating call.  Fires the ``park``
+        fault point BEFORE touching anything: an injected park fault leaves
+        the victim fully resident."""
+        maybe_fault("park")         # before any read: victim stays resident
+        snap = self._detach_slot(cache, jnp.int32(slot))
+        return jax.tree.map(np.asarray, snap)
+
+    def attach_slot(self, cache, slot: int, snap: dict):
+        """Resume: splice a :meth:`detach_slot` snapshot back into batch
+        row ``slot``.  Fires the ``resume`` fault point BEFORE the donating
+        splice, so on an injected fault the snapshot and the arena are both
+        still whole (the scheduler then releases the parked pages and
+        retries the request from scratch)."""
+        maybe_fault("resume")       # before the donate: snapshot stays whole
+        return self._attach_slot(cache, jax.tree.map(jnp.asarray, snap),
+                                 jnp.int32(slot))
 
     # -- public API ----------------------------------------------------------
 

@@ -13,6 +13,15 @@ threaded through the scheduler/engine/pager hot path:
     ``prefix_resume``  ServeEngine.start_prefill, on the prefix-hit branch
     ``host_fetch``     TieredPagePool.begin_fetch, before the host→HBM DMA
     ``spill``          TieredPagePool.begin_spill, before the HBM→host read
+    ``park``           ServeEngine.detach_slot, before the snapshot read
+    ``resume``         ServeEngine.attach_slot, before the donating splice
+
+The two preemption points (ISSUE 8) follow the same placement rule: a
+``park`` fault fires before any state is touched, so the victim simply
+stays resident (the preemption is retried on a later step); a ``resume``
+fault fires before the parked snapshot is spliced back, so the parked
+record is still whole — the scheduler releases its held pages and routes
+the request through the standard retry/FAIL policy (restart from scratch).
 
 The two tier-transfer points (ISSUE 7) ride the same pager fault hook as
 ``page_alloc`` (``core.tiering`` reads ``pager._fault_hook`` — it never

@@ -4,10 +4,21 @@
 Every request moves through
 
     QUEUED -> PREFILLING -> DECODING -> DONE
-                 |    \\        |  \\
-                 |     `--------+---+--> FAILED / CANCELLED / TIMED_OUT
-                 `<-------------'        (terminal)
-            (retry / evict-to-requeue: back to QUEUED)
+                 |    \\      ^ |  \\
+                 |     \\     | v    \\
+                 |      \\  PARKED ---+--> FAILED / CANCELLED / TIMED_OUT
+                 |       `------+----+     (terminal)
+                 `<-------------'
+            (retry / evict-to-requeue / parked-page reclaim: back to QUEUED)
+
+PARKED (ISSUE 8) is the non-terminal preemption state: a DECODING resident
+displaced by a higher priority class gives up its batch slot but KEEPS its
+pages (refcounts held, page-table row detached into a parked record).
+Resume re-attaches the row and the per-slot window snapshot and continues
+DECODING token-exact — no re-prefill.  A parked request can still be
+cancelled, time out, or fail (resume fault), and under page pressure its
+pages can be reclaimed destructively, sending it back to QUEUED like an
+evict-to-requeue.
 
 and the scheduler only ever mutates that state through :func:`transition`,
 which validates the move against :data:`_ALLOWED` — an illegal transition
@@ -39,6 +50,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"            # in the pending queue (incl. retry/evict)
     PREFILLING = "prefilling"    # reserved pages/slot, chunk loop running
     DECODING = "decoding"        # resident in the slot arena
+    PARKED = "parked"            # preempted; pages held, slot released
     DONE = "done"                # full budget generated, result delivered
     FAILED = "failed"            # a per-request fault exhausted its retries
     CANCELLED = "cancelled"      # client cancel() honored at a safe point
@@ -62,7 +74,11 @@ _ALLOWED = {
         RequestState.DECODING, RequestState.QUEUED, RequestState.FAILED,
         RequestState.CANCELLED, RequestState.TIMED_OUT)),
     RequestState.DECODING: frozenset((
-        RequestState.DONE, RequestState.QUEUED, RequestState.FAILED,
+        RequestState.DONE, RequestState.QUEUED, RequestState.PARKED,
+        RequestState.FAILED, RequestState.CANCELLED,
+        RequestState.TIMED_OUT)),
+    RequestState.PARKED: frozenset((
+        RequestState.DECODING, RequestState.QUEUED, RequestState.FAILED,
         RequestState.CANCELLED, RequestState.TIMED_OUT)),
     RequestState.DONE: frozenset(),
     RequestState.FAILED: frozenset(),

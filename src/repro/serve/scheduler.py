@@ -102,10 +102,37 @@ machine of ``serve/lifecycle.py`` (QUEUED → PREFILLING → DECODING →
     plus slot↔state coherence; it runs every ``audit_every`` steps and on
     every teardown when auditing is enabled.
 
+SLO SCHEDULING (ISSUE 8).  The front door is no longer plain FIFO:
+
+  * PRIORITY CLASSES — ``Request.priority`` ∈ [0, priority_classes);
+    admission always serves the highest eligible class first, and with
+    ``preempt_policy != "none"`` a strictly higher waiting class preempts
+    the lowest-priority (most recently admitted) resident when no slot is
+    free.  Under ``"park"`` the victim keeps its PAGES: the slot's window
+    state snapshots to host (``engine.detach_slot``), the page table moves
+    into a parked record (refcounts held — SALS's compressed latents make
+    this cheap, the LoRC argument), and resume splices the snapshot back
+    into any free slot and continues DECODING token-exact with no
+    re-prefill.  Under tiering, parking drops the write pin and spills
+    exclusively-parked pages cold, so the preemption actually frees hot
+    slots.  ``"evict"`` is the destructive PR 5 baseline.  A page-stalled
+    admission may reclaim a strictly-lower-priority parked victim's pages
+    (destructive requeue) — parked sunk work never starves a higher class.
+  * TENANT FAIRNESS — ``Request.tenant_id`` keys deficit-round-robin
+    admission WITHIN a priority class (``tenant_quantum`` tokens per
+    rotation turn; a request costs prompt + budget tokens), plus optional
+    per-tenant token-rate credits (``tenant_rate``/step, debited at
+    admission) and in-flight caps (``tenant_max_inflight``).
+    ``tenant_gauges`` exports per-tenant starvation counters.
+  * STREAMING — ``Request.on_token`` delivers each token the step it
+    commits; mid-stream ``cancel()`` tears down at the next boundary and
+    non-DONE teardowns flush the partial stream into a
+    ``complete=False`` result.
+
 "static" mode survives as the GPT-fast-style baseline (and the fallback for
 recurrent-state families, whose prefill can neither right-pad nor chunk):
-fixed-size batches, length-bucketed FIFO, monolithic prefill →
-decode-until-drained per batch.
+fixed-size batches, length-bucketed FIFO (priority/tenant knobs are
+continuous-mode only), monolithic prefill → decode-until-drained per batch.
 
 Results are delivered on the ``Request`` objects in both modes; ``run``
 returns every request that reached a terminal state during the call, in
@@ -114,6 +141,7 @@ DONE apart from FAILED / CANCELLED / TIMED_OUT.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 import warnings
@@ -149,6 +177,18 @@ class Request:
     deadline_step: Optional[int] = None   # set at submit
     not_before_step: int = 0              # retry backoff gate
     cancel_requested: bool = False
+    # --- SLO scheduling (ISSUE 8) ------------------------------------------
+    priority: int = 0                     # class index; higher = more urgent
+    tenant_id: str = "default"            # fairness / rate-limit key
+    # Streaming: called as on_token(token_id, index) the step each token
+    # commits (index 0 = the first token, emitted at admission).  Delivery
+    # is at-least-once across destructive restarts (evict-to-requeue and
+    # retry re-runs re-emit from index 0); a park/resume never re-emits.
+    # A raising callback fails THIS request (non-transient).
+    on_token: Optional[Callable[[int, int], None]] = None
+    submit_step: Optional[int] = None     # set at submit (wait gauges)
+    attempts: int = 0                     # times prefill started
+    parks: int = 0                        # times preempt-parked
 
     def cancel(self) -> None:
         """Client cancellation: honored at the next scheduler step
@@ -172,6 +212,7 @@ class _Slot:
     """One resident sequence of the continuous batch."""
     req: Request
     out: List[int]                 # generated token ids so far
+    seq: int = 0                   # admission order (preemption tie-break)
 
 
 @dataclasses.dataclass
@@ -188,6 +229,20 @@ class _Admission:
     ptab: Optional[PageTable] = None
     shared_pages: int = 0
     entry: object = None
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempt-parked resident (ISSUE 8): everything needed to resume
+    DECODING token-exact in any free slot.  The record OWNS the request's
+    page table — refcounts stay held across the park, which is the whole
+    point: resume is a window splice, not a re-prefill."""
+    req: Request
+    out: List[int]                 # tokens committed before the park
+    position: int                  # next decode position
+    ptab: PageTable                # held pages (ownership moved from slot)
+    snapshot: dict                 # engine.detach_slot host snapshot
+    parked_step: int               # FIFO resume order within a class
 
 
 class RequestScheduler:
@@ -218,17 +273,27 @@ class RequestScheduler:
                              "continuous scheduler (admission = page "
                              "reservation)")
         self.mode = mode
-        self.pending: List[Request] = []
+        # deque, not list (ISSUE 8): admission pops the head and
+        # evict-to-requeue pushes it — both O(1); list.pop(0) is O(n)
+        # under deep queues
+        self.pending: collections.deque = collections.deque()
         self.completed: Dict[int, Request] = {}
-        self.admissions: List[tuple] = []       # (step, slot, req_id)
+        # Observability ledgers become RING BUFFERS when
+        # ServeConfig.gauge_history > 0 (ISSUE 8 bugfix: they otherwise
+        # grow one row per step/chunk forever in long-running serving);
+        # 0 = unbounded full history for the tests that read whole ledgers.
+        hist = engine.scfg.gauge_history or None
+        self.admissions: collections.deque = \
+            collections.deque(maxlen=hist)      # (step, slot, req_id)
         # (step, req_id, chunk_idx, n_resident) — see class docstring
-        self.prefill_chunks: List[tuple] = []
+        self.prefill_chunks: collections.deque = collections.deque(
+            maxlen=hist)
         self.steps: int = 0                     # decode steps executed
         # --- paged-pool observability (ISSUE 5 satellite) ------------------
         # one gauge row per decode step: the capacity ledger for tests +
         # benchmarks (pages_in_use ≈ prefix + Σ unique suffixes under
         # prefix sharing, high-water = peak live tokens, ...)
-        self.pool_gauges: List[dict] = []
+        self.pool_gauges: collections.deque = collections.deque(maxlen=hist)
         self.prefix_hits: int = 0               # admissions reusing pages
         self.cow_copies: int = 0                # copy-on-write page dups
         self.admission_stalls: int = 0          # sweeps blocked on pages
@@ -244,6 +309,16 @@ class RequestScheduler:
         self.fetch_hits: int = 0                # touched pages already hot
         self.prefetch_hits: int = 0             # ... warmed by the prefetcher
         self.cold_misses: int = 0               # demand host→HBM fetches
+        # --- SLO scheduling (ISSUE 8) --------------------------------------
+        self.parks: int = 0                     # preempt-park events
+        self.resumes: int = 0                   # successful park resumes
+        self.preemptions: int = 0               # park + evict preemptions
+        self.parked: List[_Parked] = []         # live parked records
+        # per-tenant starvation/fairness gauges (see _tenant_gauge)
+        self.tenant_gauges: Dict[str, dict] = {}
+        self._drr_rot: Dict[int, List[str]] = {}      # DRR rotation / class
+        self._drr_deficit: Dict[int, Dict[str, float]] = {}
+        self._rate_credit: Dict[str, float] = {}      # tenant token credit
         self.paged = engine.paged and mode == "continuous"
         self.tiered = engine.tiered and mode == "continuous"
         self.pool: Optional[PagePool] = None
@@ -286,13 +361,21 @@ class RequestScheduler:
                     f"req {req.req_id}: needs {need} pages at its longest; "
                     f"the pool has {self.engine.scfg.pool_pages}")
         scfg = self.engine.scfg
+        if not 0 <= req.priority < scfg.priority_classes:
+            raise ValueError(
+                f"req {req.req_id}: priority {req.priority} outside "
+                f"[0, {scfg.priority_classes})")
         if scfg.max_queue and len(self.pending) >= scfg.max_queue:
             if scfg.queue_policy == "reject":
                 raise QueueFull(
                     f"pending queue at max_queue={scfg.max_queue}")
-            # shed-oldest: the stalest pending request makes room — its
-            # submitter sees state CANCELLED with a QueueFull error
-            victim = self.pending.pop(0)
+            # shed-oldest: a pending request makes room — its submitter
+            # sees state CANCELLED with a QueueFull error.  Victim choice
+            # is _shed_victim_index, NOT blindly pending[0] (ISSUE 8
+            # bugfix): already-doomed and never-started requests go first.
+            idx = self._shed_victim_index()
+            victim = self.pending[idx]
+            del self.pending[idx]
             self._terminate(victim, RequestState.CANCELLED,
                             QueueFull("shed for newer request"))
             self.shed += 1
@@ -300,16 +383,46 @@ class RequestScheduler:
                    else scfg.request_timeout_steps)
         if timeout:
             req.deadline_step = self.steps + timeout
+        req.submit_step = self.steps
+        self._tenant_gauge(req.tenant_id)["submitted"] += 1
         self.pending.append(req)
         return req.req_id
+
+    def _shed_victim_index(self) -> int:
+        """shed-oldest victim policy (ISSUE 8 bugfix).  Preference order:
+        1. the oldest CANCEL-REQUESTED pending request — it is already
+           doomed to be swept CANCELLED, so shedding it costs nothing;
+        2. the oldest NEVER-STARTED request (no prefill attempt, no retry
+           budget consumed) — shedding it discards no work;
+        3. the oldest outright.
+        The old policy popped pending[0] blindly, which could discard a
+        backoff-parked retried request's consumed retry work while a
+        cancel-requested request behind it survived to be swept anyway."""
+        for idx, r in enumerate(self.pending):
+            if r.cancel_requested:
+                return idx
+        for idx, r in enumerate(self.pending):
+            if r.attempts == 0 and r.retries == 0:
+                return idx
+        return 0
 
     # ----------------------------------------------------------- lifecycle
 
     def _terminate(self, req: Request, state: RequestState,
                    error: Optional[BaseException] = None,
-                   issued: Optional[List[Request]] = None) -> None:
+                   issued: Optional[List[Request]] = None,
+                   partial: Optional[tuple] = None) -> None:
         """Move ``req`` to a terminal state and record it.  The caller has
-        already released every resource the request held."""
+        already released every resource the request held.
+
+        ``partial`` (ISSUE 8 streaming): ``(tokens_so_far, prompt_len)``
+        from a request dying mid-decode — flushed into a
+        ``complete=False`` result on any non-DONE terminal of a STREAMING
+        request (``on_token`` set), so the client keeps what it was
+        already delivered.  Non-streaming requests keep the pre-existing
+        contract: a non-DONE terminal leaves ``result`` None.  Retries and
+        evictions never flush (the request is not terminal; its re-run
+        re-emits)."""
         transition(req, state, error)
         if state is RequestState.FAILED:
             self.failures += 1
@@ -317,6 +430,12 @@ class RequestScheduler:
             self.timeouts += 1
         elif state is RequestState.CANCELLED:
             self.cancellations += 1
+        if partial is not None and state is not RequestState.DONE \
+                and req.on_token is not None \
+                and req.result is None and partial[0]:
+            toks, plen = partial
+            req.result = GenerationResult(np.asarray(toks, np.int32), plen,
+                                          len(toks), complete=False)
         self.completed[req.req_id] = req
         if issued is not None:
             issued.append(req)
@@ -327,21 +446,145 @@ class RequestScheduler:
                    scfg.retry_backoff_cap_steps)
 
     def _fail_or_retry(self, req: Request, exc: BaseException,
-                       issued: List[Request]) -> None:
+                       issued: List[Request],
+                       partial: Optional[tuple] = None) -> None:
         """Supervisor policy for one faulted request (resources already
         released): transient faults requeue with exponential backoff in
         scheduler steps; anything else — or an exhausted retry budget —
-        terminates the request as FAILED with the fault attached."""
+        terminates the request as FAILED with the fault attached.
+
+        Deadline interaction (ISSUE 8 bugfix): a retry whose backoff gate
+        lands at or past the request's deadline could never run again — it
+        would sit in pending only to be swept TIMED_OUT later with zero
+        re-runs (and no retry budget consumed against a fault that already
+        happened).  Policy: FAIL FAST — terminate TIMED_OUT at requeue
+        time with the triggering fault chained as ``__cause__``.  The
+        deadline is an SLO promise to the client; silently extending it by
+        the backoff would lie about it."""
         scfg = self.engine.scfg
         if getattr(exc, "transient", False) \
                 and req.retries < scfg.max_request_retries:
+            gate = self.steps + self._backoff(req.retries + 1)
+            if req.deadline_step is not None and gate >= req.deadline_step:
+                err = RequestTimeout(
+                    f"req {req.req_id}: retry backoff gate (step {gate}) "
+                    f"cannot beat deadline step {req.deadline_step}")
+                err.__cause__ = exc
+                self._terminate(req, RequestState.TIMED_OUT, err, issued,
+                                partial=partial)
+                return
             req.retries += 1
-            req.not_before_step = self.steps + self._backoff(req.retries)
+            req.not_before_step = gate
             transition(req, RequestState.QUEUED)
             self.retries += 1
             self.pending.append(req)
         else:
-            self._terminate(req, RequestState.FAILED, exc, issued)
+            self._terminate(req, RequestState.FAILED, exc, issued,
+                            partial=partial)
+
+    # ------------------------------------------- tenant fairness (ISSUE 8)
+
+    @staticmethod
+    def _cost(req: Request) -> int:
+        """A request's admission cost in tokens: prompt + decode budget —
+        what it will pin in pages/slot-time, known at submit."""
+        return len(req.prompt) + req.max_new_tokens
+
+    def _tenant_gauge(self, tenant: str) -> dict:
+        """Per-tenant starvation/fairness counters (created on first
+        touch): submissions, admissions (+tokens), deferrals by cause,
+        and the worst admission wait seen, in steps."""
+        return self.tenant_gauges.setdefault(tenant, {
+            "submitted": 0, "admitted": 0, "admitted_tokens": 0,
+            "rate_deferrals": 0, "cap_deferrals": 0, "max_wait_steps": 0})
+
+    def _tenant_inflight(self, tenant: str) -> int:
+        """Requests of ``tenant`` currently holding serving resources:
+        residents + parked + the in-flight admission."""
+        n = sum(1 for s in self._slots
+                if s is not None and s.req.tenant_id == tenant)
+        n += sum(1 for rec in self.parked
+                 if rec.req.tenant_id == tenant)
+        if self._active is not None \
+                and self._active.req.tenant_id == tenant:
+            n += 1
+        return n
+
+    def _refill_rate_credits(self) -> None:
+        """Accrue per-tenant admission credit (``tenant_rate`` tokens per
+        scheduler iteration) while the tenant has pending work, capped at
+        32 iterations' worth so an idle-then-bursty tenant cannot bank
+        unbounded credit.  Admission debits the request cost — credit may
+        go negative, PACING a burst instead of rejecting it."""
+        rate = self.engine.scfg.tenant_rate
+        if not rate:
+            return
+        for t in {r.tenant_id for r in self.pending}:
+            self._rate_credit[t] = min(
+                self._rate_credit.get(t, 0.0) + rate, rate * 32)
+
+    def _eligible(self, r: Request, count: bool = False) -> bool:
+        """Admission gates for one pending request: retry backoff elapsed,
+        tenant in-flight cap, tenant rate credit.  ``count=True`` records
+        deferrals in the tenant gauges (admission-sweep probes only, so
+        the counters track real deferred admission attempts)."""
+        if r.not_before_step > self.steps:
+            return False
+        scfg = self.engine.scfg
+        if scfg.tenant_max_inflight and self._tenant_inflight(r.tenant_id) \
+                >= scfg.tenant_max_inflight:
+            if count:
+                self._tenant_gauge(r.tenant_id)["cap_deferrals"] += 1
+            return False
+        if scfg.tenant_rate \
+                and self._rate_credit.get(r.tenant_id, 0.0) <= 0.0:
+            if count:
+                self._tenant_gauge(r.tenant_id)["rate_deferrals"] += 1
+            return False
+        return True
+
+    def _note_admission(self, req: Request) -> None:
+        """Fairness bookkeeping for a popped (about-to-admit) request:
+        rate-credit debit + tenant gauges."""
+        g = self._tenant_gauge(req.tenant_id)
+        g["admitted"] += 1
+        g["admitted_tokens"] += self._cost(req)
+        if req.submit_step is not None:
+            g["max_wait_steps"] = max(g["max_wait_steps"],
+                                      self.steps - req.submit_step)
+        if self.engine.scfg.tenant_rate:
+            self._rate_credit[req.tenant_id] = \
+                self._rate_credit.get(req.tenant_id, 0.0) - self._cost(req)
+
+    def _drr_pick(self, prio: int, heads: Dict[str, int]) -> int:
+        """Deficit round robin within priority class ``prio``.  ``heads``
+        maps tenant -> pending index of that tenant's FIFO head.  Each
+        rotation turn banks ``tenant_quantum`` tokens of deficit for the
+        tenant at the rotation head; the first tenant whose head request
+        costs <= its deficit is served and debited.  Tenants rotate in
+        first-seen order; a tenant with no eligible work loses its bank
+        (classic DRR — credit does not survive idleness).  Returns the
+        chosen pending index."""
+        rot = self._drr_rot.setdefault(prio, [])
+        for t in heads:
+            if t not in rot:
+                rot.append(t)
+        defc = self._drr_deficit.setdefault(prio, {})
+        q = self.engine.scfg.tenant_quantum
+        costs = {t: self._cost(self.pending[i]) for t, i in heads.items()}
+        # enough turns that the costliest head MUST accumulate its cost
+        turns = len(rot) * (max(costs.values()) // q + 2)
+        for _ in range(turns):
+            t = rot.pop(0)
+            rot.append(t)
+            if t not in heads:
+                defc[t] = 0.0
+                continue
+            defc[t] = defc.get(t, 0.0) + q
+            if costs[t] <= defc[t]:
+                defc[t] -= costs[t]
+                return heads[t]
+        return min(heads.values())    # unreachable bound: FIFO head
 
     # ------------------------------------------------------------------ run
 
@@ -381,6 +624,9 @@ class RequestScheduler:
         positions = np.zeros((b,), np.int32)
         key = jax.random.PRNGKey(eng.scfg.seed)
         issued: List[Request] = []
+        admit_seq = itertools.count()   # admission order (preempt tie-break)
+        prio_on = (eng.scfg.priority_classes > 1
+                   and eng.scfg.preempt_policy != "none")
         # paged state: per-slot page tables + the host mirror of the device
         # table (pushed when dirty — decode writes need the page mapped)
         tables: List[Optional[PageTable]] = [None] * b
@@ -452,10 +698,14 @@ class RequestScheduler:
         def fail_resident(i: int, exc: BaseException):
             """Per-request fault isolation: row ``i`` alone pays for its
             fault — teardown, then retry-or-fail; every other resident
-            keeps decoding untouched."""
+            keeps decoding untouched.  Tokens committed before the fault
+            ride along as the partial-stream flush (used only if the
+            request terminates)."""
             req = slots[i].req
+            out = list(slots[i].out)
             clear_slot(i)
-            self._fail_or_retry(req, exc, issued)
+            self._fail_or_retry(req, exc, issued,
+                                partial=(out, len(req.prompt)))
 
         def drop_entries(n_needed: int, protect_entry=None) -> bool:
             """Evict least-recently-USED prefix-cache entries until
@@ -493,17 +743,33 @@ class RequestScheduler:
             clear_slot(i)
             transition(req, RequestState.QUEUED)   # eviction != a retry:
             req.not_before_step = 0                # no fault, no backoff
-            self.pending.insert(0, req)            # restarts from scratch
+            self.pending.appendleft(req)           # restarts from scratch
             self.evictions += 1
 
         def pop_eligible() -> Optional[Request]:
-            """First pending request whose retry backoff has elapsed (FIFO
-            among the eligible — a backing-off head must not block a fresh
-            arrival behind it)."""
+            """Pop the next request to admit: the highest eligible
+            PRIORITY class first; within the class, deficit-round-robin
+            across tenants (FIFO within one tenant, so plain FIFO falls
+            out when every request shares a class and tenant — the
+            pre-ISSUE-8 behavior).  Eligibility = retry backoff elapsed +
+            tenant rate credit + tenant in-flight cap (_eligible)."""
+            heads: Dict[str, int] = {}
+            prio: Optional[int] = None
             for idx, r in enumerate(self.pending):
-                if r.not_before_step <= self.steps:
-                    return self.pending.pop(idx)
-            return None
+                if not self._eligible(r, count=True):
+                    continue
+                if prio is None or r.priority > prio:
+                    prio, heads = r.priority, {}
+                if r.priority == prio and r.tenant_id not in heads:
+                    heads[r.tenant_id] = idx
+            if prio is None:
+                return None
+            idx = next(iter(heads.values())) if len(heads) == 1 \
+                else self._drr_pick(prio, heads)
+            req = self.pending[idx]
+            del self.pending[idx]
+            self._note_admission(req)
+            return req
 
         def try_reserve(req: Request) -> Optional[_Admission]:
             """Paged admission = page reservation: shared prefix pages +
@@ -787,6 +1053,218 @@ class RequestScheduler:
             if self.tiered:
                 ensure_write_pin(i)
 
+        def emit_token(i: int) -> bool:
+            """Stream row ``i``'s newest committed token through its
+            request's ``on_token`` callback (ISSUE 8).  A raising callback
+            is the client's failure signal: it fails (non-transiently,
+            unless the raised error says otherwise) THAT request alone.
+            Returns False when the row was torn down."""
+            req = slots[i].req
+            if req.on_token is None:
+                return True
+            tok = slots[i].out[-1]
+            try:
+                req.on_token(int(tok), len(slots[i].out) - 1)
+            except Exception as exc:
+                fail_resident(i, exc)
+                return False
+            return True
+
+        # ---- preempt-park machinery (ISSUE 8) -----------------------------
+
+        def spill_parked_cold():
+            """Hot-tier liveness half of a park: spill every page whose
+            ONLY owners are parked tables (hot, unpinned, refcount ==
+            parked multiplicity) to the host mirror, so the preemption
+            actually frees device slots.  Pages shared with a live
+            resident, an in-flight admission or a prefix entry keep their
+            residency.  Runs after each park AND once per loop iteration:
+            an injected ``spill`` fault just leaves the page hot until the
+            next sweep retries (the tier auditor only enforces the safety
+            rules — never pinned, never fresh)."""
+            nonlocal cache
+            if not (self.tiered and self.parked):
+                return
+            counts = collections.Counter()
+            for rec in self.parked:
+                counts.update(rec.ptab.pages)
+            for pid, n in sorted(counts.items()):
+                if pid in pool.hot and not pool.pins.get(pid) \
+                        and pool.refcount(pid) == n:
+                    try:
+                        vslot = pool.begin_spill(pid)  # fires "spill" first
+                    except faults.InjectedFault:
+                        return         # retried next iteration
+                    mirror = eng.read_page_payload(cache, vslot)
+                    pool.finish_spill(pid, mirror)
+                    hot_dirty[0] = True
+
+        def park_resident(i: int):
+            """Preempt-PARK resident row ``i``: snapshot its per-slot
+            window state to host (engine.detach_slot — fires the ``park``
+            fault point before any read, so an injected fault leaves the
+            victim resident), move page-table ownership into a parked
+            record WITHOUT releasing any page, free the batch slot.  Under
+            tiering the write pin drops and exclusively-parked pages spill
+            cold (see spill_parked_cold)."""
+            nonlocal cache
+            req = slots[i].req
+            snap = eng.detach_slot(cache, i)
+            rec = _Parked(req=req, out=slots[i].out,
+                          position=int(positions[i]), ptab=tables[i],
+                          snapshot=snap, parked_step=self.steps)
+            slots[i] = None
+            tokens[i] = 0
+            positions[i] = 0
+            tables[i] = None        # ownership moved to rec — NOT released
+            host_table[i] = 0
+            dirty[0] = True
+            if self.tiered:
+                if write_pin[i] is not None:
+                    pool.unpin(write_pin[i])
+                    write_pin[i] = None
+                prev_selected[i] = set()
+                host_hot[i] = 0
+                hot_dirty[0] = True
+            cache = eng.release_slot(cache, i)     # metadata-only
+            transition(req, RequestState.PARKED)
+            self.parked.append(rec)
+            req.parks += 1
+            self.parks += 1
+            spill_parked_cold()
+            if audit_on:
+                self.audit_serving_state()
+
+        def resume_parked(rec: _Parked, i: int) -> bool:
+            """Resume a parked record into free slot ``i``: splice the
+            window snapshot back (engine.attach_slot — fires the
+            ``resume`` fault point before the donating call), reinstall
+            the table row, continue DECODING token-exact.  On a resume
+            fault the snapshot is still whole but the park is abandoned:
+            held pages release and the request restarts from scratch
+            through the standard retry policy (PARKED -> QUEUED/FAILED)."""
+            nonlocal cache
+            try:
+                cache = eng.attach_slot(cache, i, rec.snapshot)
+            except Exception as exc:
+                rec.ptab.release_all()
+                self._fail_or_retry(rec.req, exc, issued,
+                                    partial=(rec.out, len(rec.req.prompt)))
+                if audit_on:
+                    self.audit_serving_state()
+                return False
+            tables[i] = rec.ptab
+            host_table[i] = 0
+            host_table[i, :rec.ptab.n_pages] = rec.ptab.pages
+            dirty[0] = True
+            if self.tiered:
+                hot_dirty[0] = True  # hot rows rebuild from pool residency
+            slots[i] = _Slot(rec.req, out=rec.out, seq=next(admit_seq))
+            tokens[i] = rec.out[-1]
+            positions[i] = rec.position
+            transition(rec.req, RequestState.DECODING)
+            self.resumes += 1
+            if audit_on:
+                self.audit_serving_state()
+            return True
+
+        def best_incoming_priority() -> Optional[int]:
+            """Highest priority among eligible pending + parked requests —
+            what a resident must be strictly below to be preempted."""
+            best = None
+            for r in self.pending:
+                if self._eligible(r) and (best is None or r.priority > best):
+                    best = r.priority
+            for rec in self.parked:
+                if best is None or rec.req.priority > best:
+                    best = rec.req.priority
+            return best
+
+        def preempt_for_priority():
+            """Park (or evict, per preempt_policy) the lowest-priority,
+            most-recently-admitted resident while a strictly higher
+            eligible class is waiting and no slot is free.  Never preempts
+            below the incoming class (no same-priority churn) and never
+            while an admission is in flight (it owns the next free slot;
+            inversion is bounded by one prompt's chunks)."""
+            if self._active is not None:
+                return
+            while True:
+                if any(s is None for s in slots):
+                    return
+                best = best_incoming_priority()
+                if best is None:
+                    return
+                vict = None
+                for i in range(b):
+                    s = slots[i]
+                    if s is None or s.req.priority >= best:
+                        continue
+                    if vict is None or (s.req.priority, -s.seq) < \
+                            (slots[vict].req.priority, -slots[vict].seq):
+                        vict = i
+                if vict is None:
+                    return
+                if eng.scfg.preempt_policy == "evict":
+                    evict_to_requeue(vict)
+                else:
+                    try:
+                        park_resident(vict)
+                    except faults.InjectedFault:
+                        return   # victim stays resident; retry next iter
+                self.preemptions += 1
+
+        def resume_ready_parked():
+            """Fill free slots with parked records, highest priority first
+            (earliest-parked within a class), unless a STRICTLY higher
+            pending class is eligible — parked work outranks new
+            admissions of its own class (it is sunk work: pages held,
+            tokens committed).  The slot an in-flight admission reserved
+            is not up for grabs."""
+            while self.parked:
+                reserved = self._active.slot \
+                    if self._active is not None else -1
+                free = next((i for i in range(b)
+                             if slots[i] is None and i != reserved), None)
+                if free is None:
+                    return
+                best_pend = None
+                for r in self.pending:
+                    if self._eligible(r) and (best_pend is None
+                                              or r.priority > best_pend):
+                        best_pend = r.priority
+                rec = min(self.parked,
+                          key=lambda rc: (-rc.req.priority, rc.parked_step))
+                if best_pend is not None and best_pend > rec.req.priority:
+                    return
+                self.parked.remove(rec)
+                resume_parked(rec, free)
+
+        def reclaim_parked_pages(req: Request) -> bool:
+            """A page-stalled admission may reclaim pages from a PARKED
+            victim of strictly lower priority — parked sunk work never
+            starves a waiting higher class — or from ANY parked record
+            when nothing is resident (held pages with an empty arena
+            would otherwise deadlock the queue).  Destructive: the
+            victim's pages release and it requeues from scratch, exactly
+            an evict-to-requeue."""
+            none_resident = not any(s is not None for s in slots)
+            cands = [rec for rec in self.parked
+                     if rec.req.priority < req.priority or none_resident]
+            if not cands:
+                return False
+            rec = min(cands, key=lambda rc: (rc.req.priority,
+                                             -rc.parked_step))
+            self.parked.remove(rec)
+            rec.ptab.release_all()
+            transition(rec.req, RequestState.QUEUED)
+            rec.req.not_before_step = 0
+            self.pending.append(rec.req)
+            self.evictions += 1
+            if audit_on:
+                self.audit_serving_state()
+            return True
+
         def sweep_deadlines_and_cancels():
             """Honor cancel() and expired deadlines in EVERY phase through
             the one teardown path.  Runs at each iteration boundary — a
@@ -806,15 +1284,30 @@ class RequestScheduler:
                     self._active = None
                     self._terminate(adm.req, state,
                                     _overdue_error(adm.req, state), issued)
+            # parked requests honor cancel/deadline too: release the held
+            # pages (that IS the whole teardown — no slot, no pins) and
+            # flush the partial stream
+            for idx in range(len(self.parked) - 1, -1, -1):
+                rec = self.parked[idx]
+                state = _overdue(rec.req)
+                if state is not None:
+                    del self.parked[idx]
+                    rec.ptab.release_all()
+                    self._terminate(rec.req, state,
+                                    _overdue_error(rec.req, state), issued,
+                                    partial=(rec.out, len(rec.req.prompt)))
+                    if audit_on:
+                        self.audit_serving_state()
             for i in range(b):
                 if slots[i] is None:
                     continue
                 req = slots[i].req
                 state = _overdue(req)
                 if state is not None:
+                    out = list(slots[i].out)
                     clear_slot(i)
                     self._terminate(req, state, _overdue_error(req, state),
-                                    issued)
+                                    issued, partial=(out, len(req.prompt)))
 
         def _overdue(req: Request) -> Optional[RequestState]:
             if req.cancel_requested:
@@ -830,11 +1323,17 @@ class RequestScheduler:
             return RequestTimeout(
                 f"req {req.req_id} missed deadline step {req.deadline_step}")
 
-        while self.pending or self._active \
+        while self.pending or self._active or self.parked \
                 or any(s is not None for s in slots):
             sweep_deadlines_and_cancels()
+            self._refill_rate_credits()
+            if prio_on:
+                preempt_for_priority()
+            resume_ready_parked()
+            spill_parked_cold()
 
-            # ---- prefill sweep: ≤ budget tokens of chunk work, FIFO -------
+            # ---- prefill sweep: ≤ budget tokens of chunk work; priority
+            # classes first, DRR across tenants within a class ----------
             spent = 0
             while spent < chunks_per_sweep:
                 if self._active is None:
@@ -853,13 +1352,17 @@ class RequestScheduler:
                             continue
                         if self._active is None:  # stalled on pages, not
                             # slots: back to the head, BEFORE any evicted
-                            # victims
-                            self.pending.insert(0, req)
+                            # victims — after trying to reclaim pages from
+                            # a lower-priority parked victim (ISSUE 8)
+                            self.pending.appendleft(req)
+                            if reclaim_parked_pages(req):
+                                continue   # pages freed: retry right away
                             break
                     else:
                         self._active = _Admission(req, free,
                                                   eng.start_prefill(
                                                       req.prompt))
+                    req.attempts += 1
                     transition(req, RequestState.PREFILLING)
                 active = self._active
                 self.prefill_chunks.append(
@@ -918,21 +1421,25 @@ class RequestScheduler:
                     tok_arr, ok = eng.sample_checked(active.task.logits, sub)
                     if not ok[0]:
                         # poisoned prompt logits: this request alone fails
-                        slots[i] = _Slot(active.req, out=[])
+                        slots[i] = _Slot(active.req, out=[],
+                                         seq=next(admit_seq))
                         fail_resident(i, NanLogitsError(
                             f"req {active.req.req_id}: non-finite prefill "
                             "logits"))
                         continue
                     tok0 = int(np.asarray(tok_arr)[0])
-                    slots[i] = _Slot(active.req, out=[tok0])
+                    slots[i] = _Slot(active.req, out=[tok0],
+                                     seq=next(admit_seq))
                     tokens[i] = tok0
                     positions[i] = len(active.req.prompt)
                     self.admissions.append((self.steps, i, active.req.req_id))
+                    if not emit_token(i):
+                        continue
                     if len(slots[i].out) >= active.req.max_new_tokens:
                         finish(i)
 
             if not any(s is not None for s in slots):
-                if not (self.pending or self._active):
+                if not (self.pending or self._active or self.parked):
                     break
                 if self._active is None and self.pending:
                     # arena idle and every pending request is backing off:
@@ -1020,6 +1527,8 @@ class RequestScheduler:
                 slots[i].out.append(int(new_toks[i]))
                 tokens[i] = new_toks[i]
                 positions[i] += 1
+                if not emit_token(i):
+                    continue
                 if len(slots[i].out) >= slots[i].req.max_new_tokens:
                     finish(i)
             if self.paged:
@@ -1031,6 +1540,10 @@ class RequestScheduler:
                     "cow_copies": self.cow_copies,
                     "admission_stalls": self.admission_stalls,
                     "evictions": self.evictions,
+                    "parked": len(self.parked),
+                    "parks": self.parks,
+                    "resumes": self.resumes,
+                    "preemptions": self.preemptions,
                     "prefix_entries": len(self.prefix_index.entries)
                     if self.prefix_index else 0,
                 }
@@ -1068,14 +1581,30 @@ class RequestScheduler:
                     and self._tables[i] is not None:
                 raise PagerInvariantError(
                     f"slot {i} is empty but still owns a page table")
+        for rec in self.parked:
+            if rec.req.state is not RequestState.PARKED:
+                raise PagerInvariantError(
+                    f"parked req {rec.req.req_id} in state "
+                    f"{rec.req.state.value}, expected parked")
+            if rec.ptab is None or rec.ptab.n_pages == 0:
+                raise PagerInvariantError(
+                    f"parked req {rec.req.req_id} holds no pages — a park "
+                    "is only legal for a paged resident")
         if not self.paged:
             return
+        # parked tables join the census: a park HOLDS pages, it does not
+        # hide them from conservation (ISSUE 8)
         tables = [t for t in self._tables if t is not None]
+        parked_pids: List[int] = []
+        for rec in self.parked:
+            tables.append(rec.ptab)
+            parked_pids.extend(rec.ptab.pages)
         adm = self._active
         if adm is not None and adm.ptab is not None:
             tables.append(adm.ptab)
         entries = self.prefix_index.entries if self.prefix_index else []
-        audit_pager(self.pool, tables, entries, gauges=gauges)
+        audit_pager(self.pool, tables, entries, gauges=gauges,
+                    parked=parked_pids)
 
     def _register_prefix(self, adm: _Admission) -> None:
         """Register a finished prefill's whole-page prefix for sharing.
@@ -1117,8 +1646,9 @@ class RequestScheduler:
         batch starts are honored; states move QUEUED → PREFILLING →
         DECODING → DONE around each monolithic generate."""
         issued: List[Request] = []
-        # length-bucket inside the admission window
-        self.pending.sort(key=lambda r: len(r.prompt))
+        # length-bucket inside the admission window (deque has no sort)
+        self.pending = collections.deque(
+            sorted(self.pending, key=lambda r: len(r.prompt)))
         while self.pending:
             for idx in range(len(self.pending) - 1, -1, -1):
                 req = self.pending[idx]
@@ -1128,11 +1658,13 @@ class RequestScheduler:
                                     RequestCancelled(
                                         f"req {req.req_id} cancelled"),
                                     issued)
-            batch = self.pending[:self.max_batch]
-            del self.pending[:len(batch)]
+            batch: List[Request] = []
+            while self.pending and len(batch) < self.max_batch:
+                batch.append(self.pending.popleft())
             if not batch:
                 break
             for req in batch:
+                req.attempts += 1
                 transition(req, RequestState.PREFILLING)
                 transition(req, RequestState.DECODING)
             mnt = max(r.max_new_tokens for r in batch)

@@ -725,3 +725,170 @@ def test_tiered_chaos_sweep_deterministic(eng, eng_tiered, model, seed):
 @given(seed=st.integers(0, 2 ** 16))
 def test_tiered_chaos_sweep_randomized(eng, eng_tiered, model, seed):
     _chaos_run_tiered(eng, eng_tiered, model, seed)
+
+
+# ---------------------------------------------------------------------------
+# preempt-park chaos (ISSUE 8): park/resume fault points under mixed-
+# priority arrivals; parked-page conservation is audited every step
+# ---------------------------------------------------------------------------
+
+PARK_RATES = dict(RATES, park=0.1, resume=0.1)
+TIERED_PARK_RATES = dict(PARK_RATES, host_fetch=0.05, spill=0.05)
+
+
+@pytest.fixture(scope="module")
+def eng_prio(model):
+    """2-slot prioritized paged engine: every high-priority arrival finds
+    a full arena, so parks/resumes are routine, not exceptional."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=8, max_batch=2,
+                       sals=sals, prefill_chunk=8, page_size=16,
+                       prefill_token_budget=8, audit_every=1,
+                       priority_classes=2, preempt_policy="park")
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+@pytest.fixture(scope="module")
+def eng_prio_tiered(model):
+    """The prioritized engine with a small hot tier on top: parked pages
+    must additionally drain cold and never hold write pins."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=8, max_batch=2,
+                       sals=sals, prefill_chunk=8, page_size=16,
+                       prefill_token_budget=8, audit_every=1, hbm_pages=6,
+                       priority_classes=2, preempt_policy="park")
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def _park_reqs(model, priorities=False):
+    """The fixed workload split into two long low-priority residents and
+    three short high-priority arrivals (priority 0 everywhere for the
+    single-class reference engine)."""
+    ps = _workload(model)
+    lo, hi = (0, 1) if priorities else (0, 0)
+    return ([Request(p, max_new_tokens=8, priority=lo) for p in ps[:2]]
+            + [Request(p, max_new_tokens=4, priority=hi) for p in ps[2:]])
+
+
+PARK_REFERENCE = {}
+
+
+def _park_reference(eng, model):
+    """Fault-free FIFO outputs of the park workload (computed once)."""
+    if "tokens" not in PARK_REFERENCE:
+        reqs = _park_reqs(model)
+        sched = _run(eng, reqs)
+        assert all(r.done for r in reqs)
+        PARK_REFERENCE["tokens"] = [r.result.tokens.copy() for r in reqs]
+        _drain_check(sched)
+    return PARK_REFERENCE["tokens"]
+
+
+def _staged_park_run(eng_p, reqs, schedule):
+    """Submit the two low-priority requests up front, drop the three
+    high-priority ones mid-generation (>= trigger steps, robust to the
+    backoff fast-forward skipping exact step values)."""
+    sched = RequestScheduler(eng_p)
+    for r in reqs[:2]:
+        sched.submit(r)
+    arrivals = [(2, reqs[2]), (4, reqs[3]), (6, reqs[4])]
+
+    def on_step(sch, step):
+        while arrivals and step >= arrivals[0][0]:
+            sch.submit(arrivals.pop(0)[1])
+
+    if schedule is None:
+        sched.run(on_step=on_step)
+    else:
+        with faults.injected(schedule):
+            sched.run(on_step=on_step)
+    assert not arrivals
+    return sched
+
+
+def test_park_fault_leaves_victim_resident(eng, eng_prio, model):
+    """An injected ``park`` fault fires BEFORE the snapshot read: the
+    preemption is simply abandoned for that iteration (victim stays
+    resident, keeps decoding) and retried later — every request still
+    lands token-exact."""
+    ref = _park_reference(eng, model)
+    reqs = _park_reqs(model, priorities=True)
+    schedule = faults.FaultSchedule(at={"park": [0]})
+    sched = _staged_park_run(eng_prio, reqs, schedule)
+    assert ("park", 0) in schedule.log, "park point never exercised"
+    for r, want in zip(reqs, ref):
+        assert r.state is RequestState.DONE, (r.req_id, r.state, r.error)
+        np.testing.assert_array_equal(r.result.tokens, want)
+    _drain_check(sched)
+
+
+def test_resume_fault_restarts_parked_request(eng, eng_prio, model):
+    """An injected ``resume`` fault fires BEFORE the splice: the parked
+    record is still whole, its pages are released, and the request
+    re-runs from scratch through the standard retry policy — greedy
+    decoding makes the restart invisible in the final tokens."""
+    ref = _park_reference(eng, model)
+    reqs = _park_reqs(model, priorities=True)
+    schedule = faults.FaultSchedule(at={"resume": [0]})
+    sched = _staged_park_run(eng_prio, reqs, schedule)
+    assert ("resume", 0) in schedule.log, "resume point never exercised"
+    assert sched.parks >= 1 and sched.retries >= 1
+    for r, want in zip(reqs, ref):
+        assert r.state is RequestState.DONE, (r.req_id, r.state, r.error)
+        np.testing.assert_array_equal(r.result.tokens, want)
+    _drain_check(sched)
+
+
+def test_park_round_trip_under_no_faults(eng, eng_prio, model):
+    """Fault-free contended episode: parks AND resumes both happen, and
+    every request (victims included) matches the FIFO reference."""
+    ref = _park_reference(eng, model)
+    reqs = _park_reqs(model, priorities=True)
+    sched = _staged_park_run(eng_prio, reqs, None)
+    assert sched.parks >= 1 and sched.resumes >= 1
+    for r, want in zip(reqs, ref):
+        assert r.state is RequestState.DONE, (r.req_id, r.state, r.error)
+        np.testing.assert_array_equal(r.result.tokens, want)
+    _drain_check(sched)
+
+
+def _park_chaos_run(eng, eng_p, model, seed, rates, tiered=False):
+    """One randomized park episode: same acceptance contract as
+    :func:`_chaos_run` — audit_every=1 additionally proves, every step,
+    that parked page tables stay inside the pager census (and cold /
+    unpinned under tiering) while faults hammer every point."""
+    ref = _park_reference(eng, model)
+    reqs = _park_reqs(model, priorities=True)
+    schedule = faults.FaultSchedule(seed=seed, rates=rates)
+    try:
+        sched = _staged_park_run(eng_p, reqs, schedule)
+    except faults.InjectedFault:
+        assert schedule.log[-1][0] == "decode_step"
+        return
+    assert sched.steps <= STEP_BOUND, "livelock: step bound exceeded"
+    for r, want in zip(reqs, ref):
+        assert r.finished, (r.req_id, r.state)
+        if r.state is RequestState.DONE:
+            np.testing.assert_array_equal(r.result.tokens, want)
+        else:
+            assert r.state is RequestState.FAILED
+            assert r.error is not None
+    (_drain_check_tiered if tiered else _drain_check)(sched)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3] + _EXTRA_SEEDS)
+def test_park_chaos_sweep_deterministic(eng, eng_prio, model, seed):
+    _park_chaos_run(eng, eng_prio, model, seed, PARK_RATES)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_park_chaos_sweep_randomized(eng, eng_prio, model, seed):
+    _park_chaos_run(eng, eng_prio, model, seed, PARK_RATES)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_tiered_park_chaos_sweep(eng, eng_prio_tiered, model, seed):
+    _park_chaos_run(eng, eng_prio_tiered, model, seed, TIERED_PARK_RATES,
+                    tiered=True)

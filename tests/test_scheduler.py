@@ -6,6 +6,8 @@ compile-once, prefill/decode interleaving bounds) or exactness (continuous
 == static tokens; pad tokens never selected; interleaved chunked prefill ==
 per-request generate), none asserts model quality.
 """
+import collections
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,7 +23,8 @@ from repro.configs import get_config
 from repro.core import calibration as cal
 from repro.core import selection as sel
 from repro.models import transformer as tf
-from repro.serve import Request, RequestScheduler, ServeEngine
+from repro.serve import (QueueFull, Request, RequestScheduler, ServeEngine,
+                         faults)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -378,3 +381,105 @@ def test_generate_truncates_each_row_at_its_own_eos(model):
         assert g_res.steps == n
         stopped_early |= n < 10
     assert stopped_early                        # row 0 stopped at step 3
+
+
+# ------------------------------------------- ISSUE 8 scheduler bug sweep
+
+
+def _paged_engine(model, **kw):
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_batch=2, max_new_tokens=8,
+                       temperature=0.0, sals=sals, prefill_chunk=8,
+                       page_size=16, prefill_token_budget=8,
+                       audit_every=1, **kw)
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def test_retry_backoff_past_deadline_fails_fast(model):
+    """Regression (ISSUE 8 bugfix): a transient fault whose retry backoff
+    gate lands at/past the request deadline used to consume a retry and
+    park the request in pending — only to be swept TIMED_OUT later,
+    having never run again.  Policy now: terminate TIMED_OUT at requeue
+    time, retry budget untouched, triggering fault chained as __cause__.
+    The discriminator vs the old behavior is ``sched.retries == 0``."""
+    eng = _paged_engine(model, request_timeout_steps=3,
+                        max_request_retries=2, retry_backoff_steps=8)
+    rng = np.random.default_rng(0)
+    victim = Request(rng.integers(1, 127, size=20).astype(np.int32),
+                     max_new_tokens=8)
+    sched = RequestScheduler(eng)
+    sched.submit(victim)
+    with faults.injected(faults.FaultSchedule(seed=0,
+                                              at={"prefill_chunk": {0}})):
+        sched.run()
+    assert victim.state.value == "timed_out"
+    assert sched.retries == 0              # old code: 1 (wasted retry)
+    assert isinstance(victim.error.__cause__, faults.InjectedFault)
+    sched.audit_serving_state()
+
+
+def test_shed_prefers_cancel_requested_then_never_started(model):
+    """Regression (ISSUE 8 bugfix): shed-oldest used to pop pending[0]
+    blindly.  Victim preference is now (1) cancel-requested, (2) never
+    started, (3) oldest — a retried head survives a fresh arrival."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_batch=2, max_new_tokens=8,
+                       sals=sals, max_queue=2, queue_policy="shed-oldest")
+    eng = ServeEngine(params, proj, cfg, scfg)
+    prompts = _prompts(4, seed=21)
+
+    # (1) a cancel-requested request behind the head is shed first
+    sched = RequestScheduler(eng)
+    head, doomed = (Request(prompts[0], max_new_tokens=4),
+                    Request(prompts[1], max_new_tokens=4))
+    sched.submit(head)
+    sched.submit(doomed)
+    doomed.cancel()
+    newcomer = Request(prompts[2], max_new_tokens=4)
+    sched.submit(newcomer)
+    assert doomed.state.value == "cancelled"
+    assert isinstance(doomed.error, QueueFull)
+    assert any(r is head for r in sched.pending)
+    assert any(r is newcomer for r in sched.pending)
+
+    # (2) with no cancel-requested victim, a retried head outranks a
+    # never-started request behind it (old code shed the head)
+    sched = RequestScheduler(eng)
+    retried, fresh = (Request(prompts[0], max_new_tokens=4),
+                      Request(prompts[1], max_new_tokens=4))
+    sched.submit(retried)
+    retried.retries = 1                    # simulate consumed retry work
+    sched.submit(fresh)
+    sched.submit(Request(prompts[2], max_new_tokens=4))
+    assert fresh.state.value == "cancelled"
+    assert any(r is retried for r in sched.pending)
+
+
+def test_gauge_history_caps_observability_ledgers(model):
+    """Regression (ISSUE 8 bugfix): admissions / prefill_chunks /
+    pool_gauges grew without bound on a long-lived scheduler.
+    ``gauge_history=N`` ring-buffers them at N rows; the newest row is
+    always retained."""
+    eng = _paged_engine(model, gauge_history=3)
+    sched = RequestScheduler(eng)
+    for p in _prompts(5, lo=10, hi=25, seed=23):
+        sched.submit(Request(p, max_new_tokens=6))
+    sched.run()
+    for ledger in (sched.admissions, sched.prefill_chunks,
+                   sched.pool_gauges):
+        assert isinstance(ledger, collections.deque)
+        assert ledger.maxlen == 3
+        assert len(ledger) <= 3
+    assert sched.pool_gauges[-1]["step"] == sched.steps
+
+
+def test_scheduler_queues_are_deques(model):
+    """ISSUE 8 structural: pending is a deque (O(1) head pops under
+    requeue-at-head eviction) and the ledgers are deques so the
+    gauge_history cap can attach; default cap 0 = unbounded."""
+    sched = RequestScheduler(_engine(model))
+    assert isinstance(sched.pending, collections.deque)
+    for ledger in (sched.admissions, sched.prefill_chunks,
+                   sched.pool_gauges):
+        assert isinstance(ledger, collections.deque)
+        assert ledger.maxlen is None

@@ -1,0 +1,441 @@
+"""SLO-aware scheduling: priority classes + park-based preemption,
+per-tenant fairness, and token streaming (ISSUE 8 acceptance).
+
+Everything here asserts *scheduling* semantics on an untrained model:
+admission order under priority classes, token-exactness across a
+park/resume round trip (greedy decoding makes "no re-prefill corruption"
+observable as bit-equal outputs), DRR interleaving across tenants,
+rate/cap deferral gauges, and the at-least-once streaming contract.
+"""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.models import transformer as tf
+from repro.serve import Request, RequestScheduler, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _paged_engine(model, **kw):
+    """2-slot paged engine, 1 prefill chunk per sweep, audited every step
+    — the contention recipe that forces preemption decisions quickly."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_batch=2, max_new_tokens=8,
+                       temperature=0.0, sals=sals, prefill_chunk=8,
+                       page_size=16, prefill_token_budget=8,
+                       audit_every=1, **kw)
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def _dense_engine(model, max_batch=2, **kw):
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_batch=max_batch,
+                       max_new_tokens=8, temperature=0.0, sals=sals, **kw)
+    return ServeEngine(params, proj, cfg, scfg)
+
+
+def _prompts(sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 127, size=n).astype(np.int32) for n in sizes]
+
+
+def _reference_tokens(model, prompts):
+    """Greedy outputs of an uncontended paged run (no priorities), keyed
+    by prompt bytes — the gold standard every preemption flavor must hit."""
+    eng = _paged_engine(model)
+    sched = RequestScheduler(eng)
+    reqs = [Request(p, max_new_tokens=8) for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    ref = {}
+    for r, p in zip(reqs, prompts):
+        assert r.done, r.state
+        ref[p.tobytes()] = r.result.tokens.tolist()
+    return ref
+
+
+def _admitted_order(sched):
+    """req_ids in first-admission order (re-admissions dropped)."""
+    seen, order = set(), []
+    for _step, _slot, rid in sched.admissions:
+        if rid not in seen:
+            seen.add(rid)
+            order.append(rid)
+    return order
+
+
+# ---------------------------------------------------------------- priority
+
+
+def test_priority_class_admission_order(model):
+    """With a full backlog, admission drains strictly by class (highest
+    first) even with preemption off — priority ordering is a property of
+    pop_eligible, not of the preemption machinery."""
+    eng = _dense_engine(model, max_batch=1,
+                        priority_classes=3, preempt_policy="none")
+    prompts = _prompts([10, 11, 12])
+    reqs = [Request(p, max_new_tokens=4, priority=prio)
+            for p, prio in zip(prompts, (0, 1, 2))]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert all(r.done for r in reqs)
+    assert _admitted_order(sched) == [reqs[2].req_id, reqs[1].req_id,
+                                      reqs[0].req_id]
+    assert sched.preemptions == 0 and sched.parks == 0
+
+
+def test_priority_out_of_range_rejected(model):
+    eng = _dense_engine(model, priority_classes=2, preempt_policy="none")
+    sched = RequestScheduler(eng)
+    with pytest.raises(ValueError):
+        sched.submit(Request(np.arange(1, 9, dtype=np.int32), priority=2))
+    with pytest.raises(ValueError):
+        sched.submit(Request(np.arange(1, 9, dtype=np.int32), priority=-1))
+
+
+def test_park_preemption_requires_paged_cache(model):
+    with pytest.raises(ValueError):
+        _dense_engine(model, priority_classes=2, preempt_policy="park")
+
+
+def _run_preempt(model, policy, prompts, **kw):
+    """Fill the arena with two low-priority requests, then drop a
+    high-priority one on step 2 — the canonical preemption scenario."""
+    eng = _paged_engine(model, priority_classes=2, preempt_policy=policy,
+                        **kw)
+    sched = RequestScheduler(eng)
+    low = [Request(prompts[0], max_new_tokens=8, priority=0, tenant_id="a"),
+           Request(prompts[1], max_new_tokens=8, priority=0, tenant_id="b")]
+    hi = Request(prompts[2], max_new_tokens=8, priority=1, tenant_id="c")
+    for r in low:
+        sched.submit(r)
+    fired = []
+
+    def on_step(sch, step):
+        if step == 2 and not fired:
+            fired.append(1)
+            sch.submit(hi)
+
+    sched.run(on_step=on_step)
+    return sched, low, hi
+
+
+def test_preempt_park_round_trip_token_exact(model):
+    """THE tentpole property: a parked-then-resumed victim produces the
+    exact tokens of an uncontended run — the snapshot/splice round trip
+    and the position bookkeeping lose nothing, and the victim never
+    re-prefills (its pages were held while parked)."""
+    prompts = _prompts([20, 18, 22])
+    ref = _reference_tokens(model, prompts)
+    sched, low, hi = _run_preempt(model, "park", prompts)
+    assert sched.parks >= 1 and sched.resumes >= 1
+    assert sched.preemptions >= 1
+    for r, p in zip(low + [hi], prompts):
+        assert r.done, (r.req_id, r.state, r.error)
+        assert r.result.tokens.tolist() == ref[p.tobytes()]
+    # no re-prefill: each request was admitted exactly once and consumed
+    # exactly ceil(plen/chunk) prefill chunks across the whole run
+    assert len(_admitted_order(sched)) == 3
+    chunks = collections.Counter(rid for _s, rid, _c, _n
+                                 in sched.prefill_chunks)
+    for r, p in zip(low + [hi], prompts):
+        assert chunks[r.req_id] == -(-len(p) // 8)
+    sched.audit_serving_state()
+
+
+def test_preempt_evict_policy_re_prefills(model):
+    """preempt_policy="evict" trades held pages for a re-prefill: same
+    final tokens (greedy), but the victim is admitted twice."""
+    prompts = _prompts([20, 18, 22])
+    ref = _reference_tokens(model, prompts)
+    sched, low, hi = _run_preempt(model, "evict", prompts)
+    assert sched.parks == 0 and sched.preemptions >= 1
+    assert sched.evictions >= 1
+    for r, p in zip(low + [hi], prompts):
+        assert r.done, (r.req_id, r.state, r.error)
+        assert r.result.tokens.tolist() == ref[p.tobytes()]
+    victims = collections.Counter(rid for _s, _i, rid in sched.admissions)
+    assert max(victims.values()) >= 2
+    sched.audit_serving_state()
+
+
+def test_parked_pages_stay_held_and_audited(model):
+    """While a record sits parked its pages keep nonzero refcounts (held,
+    not leaked, not recycled) — probed every step alongside the
+    audit_every=1 pager audit that run() itself performs."""
+    prompts = _prompts([20, 18, 22])
+    observed = []
+
+    def probe(sch, step):
+        for rec in sch.parked:
+            held = [sch.pool.refcount(pid) for pid in rec.ptab.pages]
+            observed.append(held)
+
+    eng = _paged_engine(model, priority_classes=2, preempt_policy="park")
+    sched = RequestScheduler(eng)
+    low = [Request(prompts[0], max_new_tokens=8),
+           Request(prompts[1], max_new_tokens=8)]
+    hi = Request(prompts[2], max_new_tokens=8, priority=1)
+    for r in low:
+        sched.submit(r)
+    fired = []
+
+    def on_step(sch, step):
+        if step == 2 and not fired:
+            fired.append(1)
+            sch.submit(hi)
+        probe(sch, step)
+
+    sched.run(on_step=on_step)
+    assert sched.parks >= 1
+    assert observed and all(rc >= 1 for held in observed for rc in held)
+    sched.audit_serving_state()
+    if sched.prefix_index is not None:     # drain: nothing leaked
+        for e in list(sched.prefix_index.entries):
+            sched.prefix_index.evict(e)
+    assert sched.pool.pages_in_use == 0
+
+
+def test_parked_request_cancel_releases_pages(model):
+    """cancel() on a PARKED request terminates it from the parked set,
+    flushes its partial tokens, and releases its page table."""
+    prompts = _prompts([20, 18, 22])
+    eng = _paged_engine(model, priority_classes=2, preempt_policy="park")
+    sched = RequestScheduler(eng)
+    low = [Request(prompts[0], max_new_tokens=8),
+           Request(prompts[1], max_new_tokens=8)]
+    hi = Request(prompts[2], max_new_tokens=8, priority=1)
+    for r in low:
+        sched.submit(r)
+    state = {"submitted": False, "cancelled": False}
+
+    def on_step(sch, step):
+        if step == 2 and not state["submitted"]:
+            state["submitted"] = True
+            sch.submit(hi)
+        if sch.parked and not state["cancelled"]:
+            state["cancelled"] = True
+            sch.parked[0].req.cancel()
+
+    sched.run(on_step=on_step)
+    assert state["cancelled"]
+    cancelled = [r for r in low if r.state.value == "cancelled"]
+    assert len(cancelled) == 1
+    victim = cancelled[0]
+    if victim.result is not None:          # parked mid-decode: partial flush
+        assert not victim.result.complete
+    assert hi.done
+    sched.audit_serving_state()
+    if sched.prefix_index is not None:
+        for e in list(sched.prefix_index.entries):
+            sched.prefix_index.evict(e)
+    assert sched.pool.pages_in_use == 0
+
+
+def test_tiered_park_spills_cold_never_pins(model):
+    """Park composes with two-tier paging: pages held ONLY by parked
+    records drain to the cold tier (they cannot be touched until resume)
+    and are never write-pinned; the request still finishes token-exact."""
+    prompts = _prompts([20, 18, 22])
+    ref = _reference_tokens(model, prompts)
+    eng = _paged_engine(model, priority_classes=2, preempt_policy="park",
+                        hbm_pages=6)
+    sched = RequestScheduler(eng)
+    low = [Request(prompts[0], max_new_tokens=8),
+           Request(prompts[1], max_new_tokens=8)]
+    hi = Request(prompts[2], max_new_tokens=8, priority=1)
+    for r in low:
+        sched.submit(r)
+    seen = []
+    fired = []
+
+    def on_step(sch, step):
+        if step == 2 and not fired:
+            fired.append(1)
+            sch.submit(hi)
+        for rec in sch.parked:
+            pool = sch.pool
+            exclusive = [pid for pid in rec.ptab.pages
+                         if pool.refcount(pid)
+                         == sum(p == pid for p in rec.ptab.pages)]
+            cold = [pid for pid in exclusive if pid in pool.cold]
+            pinned = [pid for pid in rec.ptab.pages if pool.pins.get(pid)]
+            seen.append((len(exclusive), len(cold), len(pinned)))
+
+    sched.run(on_step=on_step)
+    assert sched.parks >= 1 and sched.resumes >= 1
+    assert seen and all(p == 0 for _e, _c, p in seen)       # never pinned
+    assert any(e == c and e > 0 for e, c, _p in seen)       # went cold
+    for r, p in zip(low + [hi], prompts):
+        assert r.done, (r.req_id, r.state, r.error)
+        assert r.result.tokens.tolist() == ref[p.tobytes()]
+
+
+def test_park_resume_compiles_once(model):
+    """detach/attach trace once each — the slot index is a traced
+    argument, so parking different slots reuses one HLO."""
+    prompts = _prompts([20, 18, 22])
+    sched, low, hi = _run_preempt(model, "park", prompts)
+    assert sched.parks >= 1 and sched.resumes >= 1
+    eng = sched.engine
+    assert eng._detach_slot._cache_size() == 1
+    assert eng._attach_slot._cache_size() == 1
+
+
+# ----------------------------------------------------------------- tenancy
+
+
+def test_drr_interleaves_tenants_within_class(model):
+    """One tenant dumping a burst ahead of another must not monopolize
+    admission: deficit-round-robin alternates tenant heads even though
+    tenant "a" submitted its whole burst first."""
+    eng = _dense_engine(model, max_batch=1)
+    prompts = _prompts([10] * 6, seed=5)
+    reqs = [Request(p, max_new_tokens=4, tenant_id=t)
+            for p, t in zip(prompts, ("a", "a", "a", "b", "b", "b"))]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert all(r.done for r in reqs)
+    by_id = {r.req_id: r.tenant_id for r in reqs}
+    order = [by_id[rid] for rid in _admitted_order(sched)]
+    assert order == ["a", "b", "a", "b", "a", "b"]
+    for t in ("a", "b"):
+        g = sched.tenant_gauges[t]
+        assert g["submitted"] == 3 and g["admitted"] == 3
+
+
+def test_tenant_max_inflight_cap(model):
+    """tenant_max_inflight=1 keeps a tenant's resident count at one even
+    with free slots available, and the deferral gauge records the waits."""
+    eng = _dense_engine(model, max_batch=2, tenant_max_inflight=1)
+    prompts = _prompts([10, 11, 12], seed=7)
+    reqs = [Request(p, max_new_tokens=4, tenant_id="greedy")
+            for p in prompts]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    peak = []
+
+    def on_step(sch, step):
+        n = sum(1 for s in sch._slots
+                if s is not None and s.req.tenant_id == "greedy")
+        peak.append(n)
+
+    sched.run(on_step=on_step)
+    assert all(r.done for r in reqs)
+    assert max(peak) == 1
+    assert sched.tenant_gauges["greedy"]["cap_deferrals"] > 0
+
+
+def test_tenant_rate_limit_paces_admission(model):
+    """A small tenant_rate paces a burst: admissions are spread across
+    iterations (credit accrues per step), deferrals are counted, and
+    nothing is dropped — pacing, not rejection."""
+    eng = _dense_engine(model, max_batch=2, tenant_rate=4.0)
+    prompts = _prompts([10, 10, 10], seed=9)
+    reqs = [Request(p, max_new_tokens=4, tenant_id="bursty")
+            for p in prompts]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert all(r.done for r in reqs)
+    g = sched.tenant_gauges["bursty"]
+    assert g["admitted"] == 3
+    assert g["rate_deferrals"] > 0
+    steps = sorted(s for s, _i, _r in sched.admissions)
+    assert steps[-1] > steps[0]            # not all admitted at once
+
+
+# --------------------------------------------------------------- streaming
+
+
+def test_streaming_delivers_every_token_in_order(model):
+    """on_token sees each committed token exactly once here (no faults),
+    0-indexed and in order, and matches the final result."""
+    eng = _dense_engine(model)
+    prompts = _prompts([12, 15], seed=11)
+    streams = {i: [] for i in range(2)}
+    reqs = [Request(p, max_new_tokens=6,
+                    on_token=lambda t, i, k=k: streams[k].append((i, t)))
+            for k, p in enumerate(prompts)]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    for k, r in enumerate(reqs):
+        assert r.done
+        assert [i for i, _t in streams[k]] == list(range(6))
+        assert [t for _i, t in streams[k]] == r.result.tokens.tolist()
+
+
+def test_midstream_cancel_flushes_partial(model):
+    """cancel() mid-decode terminates promptly and the client keeps the
+    streamed prefix as a complete=False result — exactly the tokens the
+    on_token callback already saw."""
+    eng = _dense_engine(model)
+    prompts = _prompts([20], seed=13)
+    toks = []
+    r = Request(prompts[0], max_new_tokens=8,
+                on_token=lambda t, i: toks.append((i, t)))
+    sched = RequestScheduler(eng)
+    sched.submit(r)
+
+    def on_step(sch, step):
+        if step == 3:
+            r.cancel()
+
+    sched.run(on_step=on_step)
+    assert r.state.value == "cancelled"
+    assert r.result is not None and not r.result.complete
+    assert 0 < len(r.result.tokens) < 8
+    assert [t for _i, t in toks] == r.result.tokens.tolist()
+    assert [i for i, _t in toks] == list(range(len(toks)))
+
+
+def test_raising_stream_callback_fails_only_that_request(model):
+    """A callback that raises is a client-side failure of ONE request:
+    that request FAILs with the callback's exception and a partial
+    result; its co-resident is untouched."""
+    eng = _dense_engine(model)
+    prompts = _prompts([12, 15], seed=17)
+
+    def bomb(t, i):
+        if i == 2:
+            raise RuntimeError("client went away")
+
+    bad = Request(prompts[0], max_new_tokens=6, on_token=bomb)
+    good = Request(prompts[1], max_new_tokens=6)
+    sched = RequestScheduler(eng)
+    sched.submit(bad)
+    sched.submit(good)
+    sched.run()
+    assert bad.state.value == "failed"
+    assert isinstance(bad.error, RuntimeError)
+    assert bad.result is not None and not bad.result.complete
+    assert len(bad.result.tokens) == 3     # indices 0,1,2 were committed
+    assert good.done
+    assert len(good.result.tokens) == 6
