@@ -29,6 +29,7 @@ from benchmarks.memory_access import (decode_stage_bytes,
                                       fault_degradation_model,
                                       paged_capacity_model,
                                       prefill_chunk_bytes,
+                                      speculative_traffic_model,
                                       tiered_capacity_model, traffic_ratio)
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parents[1] / "BENCH_attention.json"
@@ -205,6 +206,27 @@ def fault_degradation_rows():
     return rows
 
 
+def speculative_traffic_rows():
+    """ISSUE 9 ledger: modeled score-stream bytes per ACCEPTED token under
+    speculative verify windows vs the sequential fused decode row.  One
+    latent selection + one reconstruction serves the whole q_len window, so
+    every cache-traffic term divides by E[accepted] = 1 + α·(q_len−1); the
+    acceptance sweep brackets the measured drafter (repetitive prompts sit
+    near α≈1, novel text near α≈0.25)."""
+    cfg = get_config("paper-llama2-7b")
+    rows = []
+    for s in (4096, 32768):
+        sals = SALSConfig(rank_ratio=0.25, v_bits=8,
+                          n_critical=512 if s <= 4096 else 1024,
+                          n_sink=16, n_recent=64, v_group=64)
+        for q_len in (2, 4, 8):
+            for acceptance in (0.25, 0.5, 0.75):
+                rows.append({"model": "paper-llama2-7b",
+                             **speculative_traffic_model(
+                                 cfg, sals, s, q_len, acceptance)})
+    return rows
+
+
 def run() -> list:
     cpu_rows = measured_rows()
     v5e_rows = projected_rows()
@@ -250,6 +272,15 @@ def run() -> list:
          for r in fault_rows],
         ["step_f", "req_f", "steps", "step_x", "attempts", "p_fail",
          "goodput_x"])
+    spec_rows = speculative_traffic_rows()
+    common.emit(
+        [(r["seq"], r["q_len"], r["acceptance"],
+          r["expected_accepted_per_window"],
+          r["seq_score_bytes_per_token"],
+          r["spec_score_bytes_per_accepted"], r["score_bytes_x"],
+          r["total_bytes_x"]) for r in spec_rows],
+        ["seq", "q_len", "accept", "E_acc", "score_seq_B",
+         "score_spec_B", "score_x", "total_x"])
     cols = ["table", "batch", "seq", "full_us", "sals_us", "speedup"]
     payload = {
         "bench": "attention",
@@ -261,13 +292,18 @@ def run() -> list:
         "paged_capacity_model": paged_rows,
         "tiered_capacity_model": tiered_rows,
         "fault_degradation_model": fault_rows,
+        "speculative_traffic_model": spec_rows,
     }
-    # the measured selection-stability cell (benchmarks/overlap_score.py)
-    # lives in the same file — carry it across re-emits
+    # measured cells emitted by other benchmarks (overlap_score writes
+    # selection_stability, throughput writes slo_report and
+    # speculative_throughput) live in the same file — carry them across
+    # re-emits
     if BENCH_JSON.exists():
         prev = json.loads(BENCH_JSON.read_text())
-        if "selection_stability" in prev:
-            payload["selection_stability"] = prev["selection_stability"]
+        for section in ("selection_stability", "slo_report",
+                        "speculative_throughput"):
+            if section in prev:
+                payload[section] = prev[section]
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}")
     return rows + model_rows

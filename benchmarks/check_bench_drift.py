@@ -26,6 +26,7 @@ from benchmarks.attention_latency import (BENCH_JSON,
                                           fault_degradation_rows,
                                           paged_capacity_rows,
                                           prefill_traffic_rows,
+                                          speculative_traffic_rows,
                                           tiered_capacity_rows,
                                           traffic_model_rows)
 
@@ -35,14 +36,17 @@ MODELED_SECTIONS = {
     "paged_capacity_model": paged_capacity_rows,
     "tiered_capacity_model": tiered_capacity_rows,
     "fault_degradation_model": fault_degradation_rows,
+    "speculative_traffic_model": speculative_traffic_rows,
 }
 
 # measured (not recomputable here) but REQUIRED: the step-to-step
 # selection-stability cell written by ``benchmarks/overlap_score.py`` is
-# the tiered prefetcher's hit-rate model, and the per-class SLO cell
-# written by ``benchmarks/throughput.py`` is the scheduling-policy story
-# (FIFO vs evict vs park) — a re-emit must not drop either
-MEASURED_SECTIONS = ("selection_stability", "slo_report")
+# the tiered prefetcher's hit-rate model, and the per-class SLO and
+# speculative-decode cells written by ``benchmarks/throughput.py`` are the
+# scheduling-policy story (FIFO vs evict vs park) and the verify-window
+# acceptance/throughput story — a re-emit must not drop any of them
+MEASURED_SECTIONS = ("selection_stability", "slo_report",
+                     "speculative_throughput")
 
 
 def _normalize(rows):
@@ -74,7 +78,8 @@ def main() -> int:
         else:
             print(f"ok: {section} ({len(want)} rows)")
     measured_by = {"selection_stability": "benchmarks.overlap_score",
-                   "slo_report": "benchmarks.throughput"}
+                   "slo_report": "benchmarks.throughput",
+                   "speculative_throughput": "benchmarks.throughput"}
     for section in MEASURED_SECTIONS:
         got = committed.get(section)
         if not got:

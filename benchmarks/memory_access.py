@@ -270,6 +270,49 @@ def tiered_capacity_model(cfg, sals: SALSConfig, page_size: int,
     }
 
 
+def speculative_traffic_model(cfg, sals: SALSConfig, s: int, q_len: int,
+                              acceptance: float) -> dict:
+    """ISSUE 9: closed-form bytes/ACCEPTED-token of the speculative verify
+    window vs sequential decode (no wall clock — drift-checkable).
+
+    One verify window commits ``E[accepted] = 1 + acceptance·(q_len−1)``
+    tokens: the pending token always commits (an all-rejected window still
+    makes exactly sequential progress), and each of the ``q_len−1`` drafts
+    commits iff every earlier draft did — with a per-draft acceptance rate
+    ``acceptance`` the expected accepted-prefix length is bounded below by
+    the linear term, which is also what the measured counters report
+    (accepted drafts / proposed drafts).  Every §4.5 traffic term is paid
+    once per WINDOW instead of once per TOKEN: the score stream (each live
+    token's leading r* latent columns), the per-block candidate
+    extraction, the selected-token gather+dequant+RoPE reconstruction
+    (done ONCE, attending all q_len window queries), the resident U_r read
+    and the full-precision sink/recent window.  The only extra bytes the
+    window moves are its own in-flight K/V (``q_len·2·kvd`` bf16) — the
+    simulated ring keeps draft tokens in registers, never in the cache.
+    Dividing by E[accepted] gives the amortized per-token cost the ledger
+    compares against the sequential ``decode_stage_bytes`` row.
+    """
+    seq = decode_stage_bytes(cfg, sals, s, fused=True)
+    e_accept = 1.0 + acceptance * (q_len - 1)
+    win_kv = q_len * 2 * cfg.kv_dim * 2           # window K/V, bf16
+    spec_total = seq["total_bytes"] + win_kv
+    return {
+        "seq": s,
+        "q_len": q_len,
+        "acceptance": acceptance,
+        "expected_accepted_per_window": round(e_accept, 3),
+        "seq_score_bytes_per_token": round(seq["score_bytes"], 1),
+        "spec_score_bytes_per_accepted": round(
+            seq["score_bytes"] / e_accept, 1),
+        "score_bytes_x": round(e_accept, 3),
+        "window_kv_bytes": win_kv,
+        "seq_total_bytes_per_token": round(seq["total_bytes"], 1),
+        "spec_total_bytes_per_accepted": round(spec_total / e_accept, 1),
+        "total_bytes_x": round(seq["total_bytes"] * e_accept / spec_total,
+                               3),
+    }
+
+
 def fault_degradation_model(step_fault_rate: float, req_fault_rate: float,
                             mean_decode_steps: int,
                             max_retries: int = 2) -> dict:

@@ -395,6 +395,11 @@ class ServeConfig:
     # Steps — not wall-clock — keep chaos tests deterministic; one step is
     # one decode iteration of the continuous loop.
     request_timeout_steps: int = 0
+    # Per-request WALL-CLOCK deadline in milliseconds from submission
+    # (0 = none).  Either deadline may fire — steps for deterministic
+    # tests, wall-clock for production SLOs — and both sweep through the
+    # same teardown path (fail-or-retry, pages released, callbacks fired).
+    request_timeout_ms: float = 0.0
     # Transient per-request faults (injected faults, NaN logits, torn
     # admissions) retry up to this many times with exponential backoff in
     # scheduler steps: retry i waits retry_backoff_steps · 2^(i-1), capped.
@@ -439,6 +444,22 @@ class ServeConfig:
     # the ledgers otherwise grow one row per step/chunk forever.
     gauge_history: int = 0
 
+    # --- speculative decoding (ISSUE 9) ------------------------------------
+    # Verify-window width Q for self-speculative decoding (0 or 1 = off).
+    # Each decode step drafts Q−1 tokens per row (n-gram prompt lookup,
+    # serve/draft.py), runs ONE windowed decode HLO over [pending token +
+    # drafts] — one latent selection serves the whole window — and commits
+    # the longest matching prefix.  Greedy verify is token-exact with
+    # sequential decode whenever n_critical covers the selectable range
+    # (the window's one selection then IS each position's selection);
+    # below that budget the amortized selection can drift from per-token
+    # selection — the same approximation knob SALS itself turns.  Requires
+    # Q <= sals.n_recent (the selection at the
+    # window's last position must never cover uncommitted slots), an
+    # attention family, and the untiered cache (the tiered hot-set
+    # prefetch contract is per committed step).
+    spec_window: int = 0
+
     def __post_init__(self):
         if self.max_queue < 0:
             raise ValueError("max_queue must be >= 0 (0 = unbounded)")
@@ -446,6 +467,28 @@ class ServeConfig:
             raise ValueError(f"unknown queue_policy {self.queue_policy!r}")
         if self.request_timeout_steps < 0 or self.audit_every < 0:
             raise ValueError("request_timeout_steps / audit_every >= 0")
+        if self.request_timeout_ms < 0:
+            raise ValueError("request_timeout_ms must be >= 0 (0 = none)")
+        if self.spec_window < 0 or self.spec_window > 8:
+            raise ValueError("spec_window must be in [0, 8] (the windowed "
+                             "kernels take q_len <= 8 query blocks)")
+        if self.spec_window > 1:
+            if self.sals.enabled and self.spec_window > self.sals.n_recent:
+                raise ValueError(
+                    f"spec_window {self.spec_window} > sals.n_recent "
+                    f"{self.sals.n_recent}: the verify window's selection "
+                    "mask would cover uncommitted cache slots")
+            if self.hbm_pages:
+                raise ValueError(
+                    "speculative decoding needs the untiered cache: the "
+                    "tiered hot-set prefetch contract is per committed "
+                    "step (set hbm_pages=0 or spec_window=0)")
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: the verify "
+                    "accepts drafts by exact argmax match, which has no "
+                    "sampled analogue here (set temperature=0.0 or "
+                    "spec_window=0)")
         if (self.max_request_retries < 0 or self.retry_backoff_steps < 0
                 or self.retry_backoff_cap_steps < 0):
             raise ValueError("retry knobs must be >= 0")

@@ -379,10 +379,44 @@ class LatentKVCache:
         return self.write_latents(sals, pos, k_lat, v_flat) \
                    .write_ring(sals, pos, k_pre, v)
 
+    def write_window(self, sals: SALSConfig, pos, k_lat: jnp.ndarray,
+                     v_flat: jnp.ndarray, k_pre: jnp.ndarray, v: jnp.ndarray,
+                     n_accept) -> "LatentKVCache":
+        """Commit the ACCEPTED prefix of a speculative verify window.
+
+        k_lat: (B, Q, r) pre-RoPE latent keys; v_flat: (B, Q, kv_dim);
+        k_pre/v: (B, Q, n_kv, dh) — the window K/V returned by the
+        read-only windowed attend.  ``pos`` (scalar or (B,)) is the WINDOW
+        BASE: slot t lands at position pos + t iff ``t < n_accept[b]``
+        ((B,) per-row accepted counts).  Rejected draft positions are
+        NEVER written — their scatters redirect out of range and drop —
+        so the cache bytes are bit-identical to sequentially appending
+        exactly the accepted tokens.  One unrolled masked append per
+        window slot (Q <= 8: Q small static writes, one compiled HLO).
+        """
+        cache = self
+        b, q = k_lat.shape[:2]
+        pos_v = _row_positions(pos, b)
+        n_acc = jnp.broadcast_to(
+            jnp.asarray(n_accept, jnp.int32).reshape(-1), (b,))
+        for t in range(q):
+            keep = t < n_acc
+            cache = cache.write_latents(sals, pos_v + t, k_lat[:, t],
+                                        v_flat[:, t], keep=keep) \
+                         .write_ring(sals, pos_v + t, k_pre[:, t], v[:, t],
+                                     keep=keep)
+        return cache
+
     def write_latents(self, sals: SALSConfig, pos, k_lat: jnp.ndarray,
-                      v_flat: jnp.ndarray) -> "LatentKVCache":
+                      v_flat: jnp.ndarray,
+                      keep: Optional[jnp.ndarray] = None) -> "LatentKVCache":
         """Write one token's latent K + quantized V at ``pos`` (scalar or
-        (B,) per-row; no ring update — see :meth:`write_ring`)."""
+        (B,) per-row; no ring update — see :meth:`write_ring`).
+
+        ``keep`` (B,) bool masks the write per row (speculative window
+        commits): a masked-out row's scatter index moves out of range and
+        the update DROPS (``mode="drop"``), leaving the row untouched.
+        """
         pos_v = _row_positions(pos, k_lat.shape[0])
         upd_score = None
         if self.paged:
@@ -392,20 +426,24 @@ class LatentKVCache:
             lp = (pos_v // self.page_size)[:, None]              # (B, 1)
             pid = jnp.take_along_axis(self.page_table, lp, axis=1)[:, 0]
             row = pos_v % self.page_size
+            if keep is not None:
+                row = jnp.where(keep, row, self.page_size)       # OOB -> drop
             if self.tiered:
                 # payloads land in the HOT SLOT (the scheduler pins each
                 # row's write page hot, so slot > 0 whenever pos is real);
                 # scores land in the full-size pool at the physical page
                 slot = jnp.take_along_axis(self.hot_table, lp, axis=1)[:, 0]
                 upd = lambda arr, val: \
-                    arr.at[slot, row].set(val.astype(arr.dtype))
+                    arr.at[slot, row].set(val.astype(arr.dtype), mode="drop")
                 upd_score = lambda arr, val: \
-                    arr.at[pid, row].set(val.astype(arr.dtype))
+                    arr.at[pid, row].set(val.astype(arr.dtype), mode="drop")
             else:
                 upd = lambda arr, val: \
-                    arr.at[pid, row].set(val.astype(arr.dtype))
+                    arr.at[pid, row].set(val.astype(arr.dtype), mode="drop")
         else:
-            upd = lambda arr, val: _upd_rows(arr, val, pos_v)
+            wpos = pos_v if keep is None \
+                else jnp.where(keep, pos_v, self.k_lat.shape[1])
+            upd = lambda arr, val: _upd_rows(arr, val, wpos)
         out = {}
         if sals.k_latent_dtype == "int8":
             # quantize ONCE; the score pool gets the leading r* columns of
@@ -429,7 +467,9 @@ class LatentKVCache:
         out["v_scale"] = upd(self.v_scale, vq["scale"])
         out["v_zero"] = upd(self.v_zero, vq["zero"])
         if self.lengths is not None:
-            out["lengths"] = jnp.maximum(self.lengths, pos_v + 1)
+            adv = pos_v + 1 if keep is None else \
+                jnp.where(keep, pos_v + 1, 0)
+            out["lengths"] = jnp.maximum(self.lengths, adv)
         return self.replace(**out)
 
     def append_chunk(self, cfg: ModelConfig, sals: SALSConfig,
@@ -511,18 +551,24 @@ class LatentKVCache:
         return self.replace(**out)
 
     def write_ring(self, sals: SALSConfig, pos, k_pre: jnp.ndarray,
-                   v: jnp.ndarray) -> "LatentKVCache":
+                   v: jnp.ndarray,
+                   keep: Optional[jnp.ndarray] = None) -> "LatentKVCache":
         """Insert one token into the full-precision recent ring (and the
         sink region while pos < n_sink).  k_pre/v: (B, n_kv, dh); ``pos``
-        scalar or (B,) per-row positions."""
+        scalar or (B,) per-row positions.  ``keep`` (B,) bool masks the
+        insert per row (see :meth:`write_latents`)."""
         w = sals.n_recent
         pos_v = _row_positions(pos, k_pre.shape[0])
         slot = jax.lax.rem(pos_v, w)
+        if keep is not None:
+            slot = jnp.where(keep, slot, w)                 # OOB -> drop
         out = {
             "recent_k": _upd_rows(self.recent_k, k_pre, slot),
             "recent_v": _upd_rows(self.recent_v, v, slot),
         }
         in_sink = pos_v < sals.n_sink                       # (B,)
+        if keep is not None:
+            in_sink = in_sink & keep
         sink_pos = jnp.where(in_sink, pos_v, 0)
         new_sk = _upd_rows(self.sink_k, k_pre, sink_pos)
         new_sv = _upd_rows(self.sink_v, v, sink_pos)
@@ -664,6 +710,10 @@ def _row_positions(pos, batch: int) -> jnp.ndarray:
 
 
 def _upd_rows(arr, val, pos_v):
-    """Write val[b] into arr[b, pos_v[b]] (per-row scatter along axis 1)."""
+    """Write val[b] into arr[b, pos_v[b]] (per-row scatter along axis 1).
+
+    ``mode="drop"`` so masked speculative commits can redirect rejected
+    rows out of range; in-bounds writes are unaffected."""
     b = arr.shape[0]
-    return arr.at[jnp.arange(b), pos_v].set(val.astype(arr.dtype))
+    return arr.at[jnp.arange(b), pos_v].set(val.astype(arr.dtype),
+                                            mode="drop")

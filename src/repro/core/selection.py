@@ -146,10 +146,25 @@ def ring_positions(pos, n_recent: int) -> jnp.ndarray:
     (after the current token was inserted at slot pos % W).
 
     slot i holds position p = pos - ((pos - i) mod W); negative -> empty.
-    ``pos`` scalar -> (W,); ``pos`` (B,) per-row positions -> (B, W).
+    ``pos`` scalar -> (W,); ``pos`` (B,) per-row positions -> (B, W);
+    ``pos`` (B, Q) per-query window positions -> (B, Q, W) (speculative
+    verify: query t sees the ring as of sequential step base+t).
     """
     i = jnp.arange(n_recent)
     p = jnp.asarray(pos)
-    if p.ndim == 1:
-        p = p[:, None]
+    if p.ndim >= 1:
+        p = p[..., None]
     return p - (p - i) % n_recent  # jnp % is floored -> non-negative
+
+
+def window_query(q_win: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Scoring query for a speculative verify window: (B, Q, H, dh) ->
+    (B, kv_dim).
+
+    Latent scores are RoPE-free and position-independent (§4.3), so ONE
+    selection can serve the whole window.  The FIRST window token's
+    grouped query anchors it: drafts behind the anchor may be rejected,
+    the anchor itself is always committed, and at q_len = 1 this
+    degenerates to exactly the sequential scoring query.
+    """
+    return group_query(q_win[:, 0], cfg)

@@ -121,6 +121,34 @@ def _region_logits(q_r: jnp.ndarray, k_pre: jnp.ndarray,
     return logits
 
 
+def _region_logits_window(q_r: jnp.ndarray, k_pre: jnp.ndarray,
+                          positions: jnp.ndarray, cfg: ModelConfig
+                          ) -> jnp.ndarray:
+    """Verify-window twin of :func:`_region_logits`.
+
+    q_r: (B, Q, H, dh) already-RoPE'd f32 queries (query t at position
+    base+t); k_pre: (B, Q, N, Hkv, dh) PER-QUERY region keys (each query
+    sees the buffer state its sequential step would read); positions
+    broadcastable to (B, Q, N).  Returns logits (B, Q, H, N) — the same
+    elementwise RoPE + dot as the single-token path, so per (b, t) slice
+    the logits are bit-identical to sequential step base+t.
+    """
+    if cfg.use_rope:
+        k = apply_rope(k_pre, jnp.broadcast_to(positions, k_pre.shape[:-2]),
+                       cfg.rope_theta)
+    else:
+        k = k_pre
+    b, ql = q_r.shape[:2]
+    q_g = q_r.reshape(b, ql, cfg.n_kv_heads, cfg.group_size, cfg.head_dim) \
+        .astype(jnp.float32)
+    logits = jnp.einsum("bqkrd,bqnkd->bqkrn", q_g, k.astype(jnp.float32))
+    logits = logits.reshape(b, ql, cfg.n_heads, k.shape[2])
+    logits = logits * (cfg.head_dim ** -0.5)
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(logits / cfg.attn_logit_softcap)
+    return logits
+
+
 def _partial_attend(logits: jnp.ndarray, v: jnp.ndarray, cfg: ModelConfig
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Flash-style partial softmax stats over the last axis.
@@ -433,3 +461,222 @@ def sals_decode_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
     if collect:
         return y, cache, touched
     return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative verify window (ISSUE 9): one selection, Q queries
+# ---------------------------------------------------------------------------
+
+def _global_window_partials(q, q_bar, u, cache: LatentKVCache, pos, ql: int,
+                            cfg: ModelConfig, sals: SALSConfig,
+                            plan: DecodePlan):
+    """Windowed twin of :func:`_global_partials`: ONE global top-N_c
+    (masked at the window's LAST position, so it covers every query's
+    selectable range) feeds the windowed recon kernel, which reconstructs
+    each selected token once and gates query t to positions
+    <= pos+t-n_recent in-kernel.  Returns (m, l, o) with a G=1 axis:
+    (B, 1, Q, H[, dh])."""
+    if cache.tiered:
+        raise NotImplementedError(
+            "speculative windows need untiered caches: the hot-set "
+            "prefetch contract is per committed step")
+    r_star = sals.score_rank(cfg.kv_dim)
+    k_lat, k_scale = cache.latent_views()
+    pt, ps = cache.page_table, cache.page_size
+    if not cache.paged:
+        k_lat = constrain(k_lat, ("batch", "kv_seq", None))
+        if k_scale is not None:
+            k_scale = constrain(k_scale, ("batch", "kv_seq"))
+    idx, valid = sel.topk_latent(q_bar, u, k_lat, k_scale, pos + (ql - 1),
+                                 sals, r_star, page_table=pt, page_size=ps,
+                                 backend=plan.backend)
+    idx, valid = sel.sort_selected(idx, valid)
+    m, l, o = ops.sparse_recon_attention_window(
+        q, k_lat, k_scale, cache.v_q, cache.v_scale, cache.v_zero, u, idx,
+        valid, pos, n_kv=cfg.n_kv_heads, n_recent=sals.n_recent,
+        v_bits=sals.v_bits, v_group=sals.v_group, theta=cfg.rope_theta,
+        softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope,
+        page_table=pt, page_size=ps, backend=plan.backend)
+    return m[:, None], l[:, None], o[:, None]
+
+
+def _slab_window_partials(q, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                          pos, base, ql: int, cfg: ModelConfig,
+                          sals: SALSConfig, k_loc: int, backend,
+                          page_table=None, page_size=0):
+    """Windowed twin of :func:`_slab_partials` (rows = slabs; ``pos`` is
+    the per-row WINDOW BASE, selection masks at pos + ql - 1)."""
+    idx, valid = ops.latent_topk(
+        q_lat, k_lat, k_scale, pos + (ql - 1), n_critical=k_loc,
+        n_sink=sals.n_sink, n_recent=sals.n_recent, pos_base=base,
+        page_table=page_table, page_size=page_size, backend=backend)
+    idx, valid = sel.sort_selected(idx, valid)
+    return ops.sparse_recon_attention_window(
+        q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+        n_kv=cfg.n_kv_heads, n_recent=sals.n_recent, v_bits=sals.v_bits,
+        v_group=sals.v_group, theta=cfg.rope_theta,
+        softcap=cfg.attn_logit_softcap, use_rope=cfg.use_rope,
+        pos_base=base, page_table=page_table, page_size=page_size,
+        backend=backend)
+
+
+def _grouped_window_partials(q, q_bar, u, cache: LatentKVCache, pos, ql: int,
+                             cfg: ModelConfig, sals: SALSConfig,
+                             plan: DecodePlan):
+    """Windowed per-group partials, group axis FOLDED into the kernel
+    batch (the shard-local shard_map slab path is a tree-attention
+    follow-up — :func:`sals_window_attend` strips ``shard_axes``).
+    Returns (m, l, o) shaped (B, G, Q, H[, dh])."""
+    if cache.tiered:
+        raise NotImplementedError(
+            "speculative windows need untiered caches: the hot-set "
+            "prefetch contract is per committed step")
+    g = plan.n_groups
+    r_star = sals.score_rank(cfg.kv_dim)
+    k_lat, k_scale = cache.latent_views()
+    k_loc = -(-sals.n_critical // g)
+    q_lat = sel.latent_query(q_bar, u, r_star)                  # (B, r*)
+    b, h = q.shape[0], q.shape[2]
+
+    if cache.paged:
+        pt = cache.page_table                                   # (B, mp)
+        mp = pt.shape[1]
+        ps = cache.page_size
+        s_loc = (mp // g) * ps
+        ptg = pt.reshape(b * g, mp // g)
+        base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+        qg = jnp.repeat(q, g, axis=0)                           # (B·G,Q,H,dh)
+        qlg = jnp.repeat(q_lat, g, axis=0)
+        pos_g = jnp.repeat(pos, g)
+        m, l, o = _slab_window_partials(qg, qlg, k_lat, k_scale, cache.v_q,
+                                        cache.v_scale, cache.v_zero, u,
+                                        pos_g, base, ql, cfg, sals, k_loc,
+                                        plan.backend, page_table=ptg,
+                                        page_size=ps)
+        return (m.reshape(b, g, ql, h), l.reshape(b, g, ql, h),
+                o.reshape(b, g, ql, h, cfg.head_dim))
+
+    s = k_lat.shape[1]
+    r = k_lat.shape[2]
+    s_loc = s // g
+    kg = k_lat.reshape(b * g, s_loc, r)
+    ksg = None if k_scale is None else k_scale.reshape(b * g, s_loc)
+    vqg = cache.v_q.reshape(b * g, s_loc, -1)
+    vsg = cache.v_scale.reshape(b * g, s_loc, -1)
+    vzg = cache.v_zero.reshape(b * g, s_loc, -1)
+    base = jnp.tile(jnp.arange(g, dtype=jnp.int32) * s_loc, b)
+    qg = jnp.repeat(q, g, axis=0)
+    qlg = jnp.repeat(q_lat, g, axis=0)
+    pos_g = jnp.repeat(pos, g)
+    m, l, o = _slab_window_partials(qg, qlg, kg, ksg, vqg, vsg, vzg, u,
+                                    pos_g, base, ql, cfg, sals, k_loc,
+                                    plan.backend)
+    return (m.reshape(b, g, ql, h), l.reshape(b, g, ql, h),
+            o.reshape(b, g, ql, h, cfg.head_dim))
+
+
+def sals_window_attend(params: dict, u: jnp.ndarray, cache: LatentKVCache,
+                       x: jnp.ndarray, pos, cfg: ModelConfig,
+                       sals: SALSConfig, plan: Optional[DecodePlan] = None):
+    """Multi-token VERIFY-WINDOW SALS attention for one layer (ISSUE 9).
+
+    x: (B, Q, d) — the pending token plus Q−1 drafts at positions
+    pos..pos+Q−1 (``pos`` scalar or (B,) per-row WINDOW BASE; requires
+    1 <= pos per row and Q <= n_recent so selection never reads
+    uncommitted slots).  READ-ONLY w.r.t. the cache: nothing is appended
+    — a rejected draft must never reach the destructive ring/sink/latent
+    writes — the caller commits the accepted prefix afterwards through
+    :meth:`LatentKVCache.write_window` with the returned window K/V.
+
+    ONE latent selection (the FIRST window token's RoPE-free grouped
+    query, masked at the window's LAST position) serves all Q queries;
+    the windowed recon kernel reconstructs each selected token once and
+    applies the per-draft-position mask advance (query t only attends
+    selected positions <= pos+t−n_recent).  The sink/recent window is
+    SIMULATED per query: the sequential writes of window tokens 0..t into
+    the ring (slot (pos+s) % W) and sink (while pos+s < n_sink) are
+    replayed into per-query buffer views, so query t reads byte-for-byte
+    the buffers its sequential step would read — greedy verify is then
+    token-exact with sequential decode whenever N_c covers each query's
+    selectable range (every selectable token selected; the in-kernel gate
+    reduces query t's set to exactly sequential step t's, and the gated
+    leftovers are exact online-softmax no-ops).
+
+    Returns (y (B, Q, d), k_pre (B, Q, Hkv, dh), v (B, Q, Hkv, dh)).
+    """
+    if plan is None:
+        plan = plan_decode(cache)
+    # fold the group axis into the kernel batch: shard-local windowed
+    # slabs ride with the tree-attention follow-up (ROADMAP)
+    plan = dataclasses.replace(plan, shard_axes=())
+    b, ql, _ = x.shape
+    w = sals.n_recent
+    if ql > w:
+        raise ValueError(f"verify window {ql} > n_recent {w}: the widest "
+                         "selection mask would cover uncommitted positions")
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    t_idx = jnp.arange(ql, dtype=jnp.int32)
+    qpos = pos_v[:, None] + t_idx[None, :]                       # (B, Q)
+
+    q, k_new, v_new = qkv_proj(params, x, cfg)    # (B,Q,H,dh)/(B,Q,Hkv,dh)
+
+    # RoPE-free scoring query: the window ANCHOR (always committed)
+    q_bar = sel.window_query(q, cfg)              # (B, kvd)
+    q_r = apply_rope(q, qpos, cfg.rope_theta) if cfg.use_rope else q
+
+    # ---- per-query sink + recent ring (simulated sequential writes) ------
+    # Q <= W, so each ring slot j receives AT MOST one in-window token:
+    # s_j = (j - pos) mod W, live for query t iff s_j <= t.  Sink position
+    # p in [pos, pos+t] holds window token p - pos.  Everything else reads
+    # the committed buffers; validity is the sequential (0 <= p <= pos+t).
+    ns = sals.n_sink
+    k_win = k_new.astype(cache.recent_k.dtype)
+    v_win = v_new.astype(cache.recent_v.dtype)
+
+    j = jnp.arange(w, dtype=jnp.int32)[None, :]                  # (1, w)
+    s_j = (j - pos_v[:, None]) % w                               # (B, w)
+    ring_hit = s_j[:, None, :] <= t_idx[None, :, None]           # (B, Q, w)
+    sj_c = jnp.clip(s_j, 0, ql - 1)[..., None, None]             # (B, w, 1, 1)
+    ring_wk = jnp.take_along_axis(k_win, sj_c, axis=1)           # (B, w, kv, dh)
+    ring_wv = jnp.take_along_axis(v_win, sj_c, axis=1)
+    hit = ring_hit[..., None, None]
+    ring_k = jnp.where(hit, ring_wk[:, None], cache.recent_k[:, None])
+    ring_v = jnp.where(hit, ring_wv[:, None], cache.recent_v[:, None])
+    rec_pos = sel.ring_positions(qpos, w)                        # (B, Q, w)
+
+    sp = jnp.arange(ns, dtype=jnp.int32)[None, :]                # (1, ns)
+    s_sink = sp - pos_v[:, None]                                 # (B, ns)
+    sink_hit = (s_sink[:, None, :] >= 0) \
+        & (s_sink[:, None, :] <= t_idx[None, :, None])           # (B, Q, ns)
+    ss_c = jnp.clip(s_sink, 0, ql - 1)[..., None, None]
+    sink_wk = jnp.take_along_axis(k_win, ss_c, axis=1)
+    sink_wv = jnp.take_along_axis(v_win, ss_c, axis=1)
+    shit = sink_hit[..., None, None]
+    sink_k = jnp.where(shit, sink_wk[:, None], cache.sink_k[:, None])
+    sink_v = jnp.where(shit, sink_wv[:, None], cache.sink_v[:, None])
+    sink_pos = jnp.broadcast_to(sp[None], (b, ql, ns))
+
+    sr_k = jnp.concatenate([sink_k, ring_k], axis=2)    # (B, Q, ns+w, kv, dh)
+    sr_v = jnp.concatenate([sink_v, ring_v], axis=2)
+    sr_positions = jnp.concatenate([sink_pos, rec_pos], axis=2)
+    sr_valid = (sr_positions >= 0) & (sr_positions <= qpos[..., None])
+
+    sr_logits = _region_logits_window(q_r, sr_k, sr_positions, cfg)
+    sr_logits = jnp.where(sr_valid[:, :, None, :], sr_logits, NEG)
+    m_sr, l_sr, o_sr = _partial_attend(sr_logits, sr_v, cfg)
+
+    # ---- selected-token partials, (B, G, Q, H[, dh]) ----------------------
+    attend = _global_window_partials if plan.n_groups <= 1 \
+        else _grouped_window_partials
+    m_c, l_c, o_c = attend(q, q_bar, u, cache, pos_v, ql, cfg, sals, plan)
+
+    # ---- LSE merge across groups + window region --------------------------
+    m_all = jnp.maximum(jnp.max(m_c, axis=1), m_sr)   # (B,Q,H)
+    wc = jnp.exp(m_c - m_all[:, None])                # (B,G,Q,H)
+    wsr = jnp.exp(m_sr - m_all)
+    denom = jnp.sum(wc * l_c, axis=1) + wsr * l_sr
+    numer = jnp.sum(wc[..., None] * o_c, axis=1) + wsr[..., None] * o_sr
+    o = numer / jnp.maximum(denom, 1e-30)[..., None]
+
+    y = out_proj(params, o.astype(x.dtype), cfg)
+    return y, k_new, v_new

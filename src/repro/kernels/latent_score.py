@@ -17,9 +17,11 @@ the §4.5 traffic model's ``s·r*`` term is paid exactly once, streaming):
     scalar broadcasts — ragged continuous-batching rows each carry their own
     position), the sink/recent selectability mask is computed from an
     in-kernel iota, and each seq block
-    emits its top-min(N_c, bs) candidates via an iterative max-extract loop
-    (Mosaic-safe: max + iota-argmin + mask, no sort).  The host-side
-    ``jax.lax.top_k`` then runs over (B, nb·k) candidates instead of (B, S).
+    emits its top-min(N_c, bs) candidates via a bitonic compare-exchange
+    network (log²(bs) fully vectorized stages; the earlier serial
+    max-extract loop was k data-dependent max+argmin passes).  The
+    host-side ``jax.lax.top_k`` then runs over (B, nb·k) candidates instead
+    of (B, S).
     Per-block top-min(N_c, bs) is *exact*: a token in the global top-N_c has
     at most N_c-1 tokens above it, so at most N_c-1 in its own block.
     Candidate emission order (value desc, index asc; blocks in seq order)
@@ -74,6 +76,51 @@ def topk_candidate_shape(s: int, n_critical: int,
     stays in lockstep with the kernel's actual candidate count."""
     bs = min(block_s, s)
     return -(-s // bs), min(n_critical, bs)
+
+
+def _sorted_block_topk(scores: jnp.ndarray, ids: jnp.ndarray, kb: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-``kb`` of one score block via a bitonic compare-exchange network.
+
+    scores/ids: (1, n) f32 / int32 (any n — padded in-kernel to the next
+    power of two with -inf scores).  Returns (vals (1, kb), ids (1, kb))
+    ordered by (value desc, id asc) — the EXACT order the old serial
+    max-extract loop emitted (first-argmax tie-break + -inf retirement),
+    so the candidate stream stays bit-identical to a full-sequence
+    ``lax.top_k`` downstream.  All log²(n) stages are vectorized
+    compare-exchanges over the whole block; nothing is serial in ``kb``.
+    """
+    n = scores.shape[-1]
+    npad = 1 << max(n - 1, 0).bit_length()
+    if npad != n:
+        scores = jnp.concatenate(
+            [scores, jnp.full((1, npad - n), -jnp.inf, scores.dtype)],
+            axis=-1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((1, npad - n), npad, jnp.int32)], axis=-1)
+    v, ix = scores, ids
+    k = 2
+    while k <= npad:
+        j = k // 2
+        while j >= 1:
+            v2 = v.reshape(-1, 2, j)
+            i2 = ix.reshape(-1, 2, j)
+            av, bv = v2[:, 0], v2[:, 1]
+            ai, bi = i2[:, 0], i2[:, 1]
+            # flat position of the a-lane element decides the merge
+            # direction of its k-block (2j <= k, so partners agree)
+            lane = (jax.lax.broadcasted_iota(jnp.int32, av.shape, 0) * 2 * j
+                    + jax.lax.broadcasted_iota(jnp.int32, av.shape, 1))
+            desc = (lane // k) % 2 == 0
+            a_first = (av > bv) | ((av == bv) & (ai < bi))
+            keep = jnp.where(desc, a_first, ~a_first)
+            v = jnp.stack([jnp.where(keep, av, bv),
+                           jnp.where(keep, bv, av)], axis=1).reshape(1, npad)
+            ix = jnp.stack([jnp.where(keep, ai, bi),
+                            jnp.where(keep, bi, ai)], axis=1).reshape(1, npad)
+            j //= 2
+        k *= 2
+    return v[:, :kb], ix[:, :kb]
 
 
 def _block_scores(q_ref, k_ref, scale_ref, i: int, bs: int, s: int
@@ -159,19 +206,12 @@ def _topk_body(pos_ref, base_ref, q_ref, k_ref, scale_ref, vals_ref, idx_ref,
     pglob = posn + base_ref[b_]                             # global position
     ok = (pglob >= n_sink) & (pglob <= pos - n_recent) & (posn < s)
     scores = jnp.where(ok, scores, NEG_INF)
-
-    def extract(t, sc):
-        m = jnp.max(sc)
-        a = jnp.min(jnp.where(sc == m, col, bs))            # first argmax
-        vals_ref[0, 0, t] = m
-        idx_ref[0, 0, t] = i * bs + a
-        # retire the column with -inf (strictly below the NEG_INF mask
-        # value) so fully-masked blocks emit ascending indices — the same
-        # tie-break lax.top_k uses, keeping even invalid slots bit-exact
-        # with the oracle
-        return jnp.where(col == a, -jnp.inf, sc)
-
-    jax.lax.fori_loop(0, kb, extract, scores)
+    # (value desc, index asc) keeps even fully-masked blocks emitting
+    # ascending indices — the same tie-break lax.top_k uses, so candidates
+    # stay bit-exact with the oracle
+    vals, ids = _sorted_block_topk(scores, col, kb)
+    vals_ref[...] = vals[None]
+    idx_ref[...] = (i * bs + ids)[None]
 
 
 def _topk_kernel_plain(pos_ref, base_ref, q_ref, k_ref, vals_ref, idx_ref,
@@ -194,7 +234,7 @@ def _topk_paged_body(pt_ref, pos_ref, base_ref, q_ref, k_ref, scale_ref,
                      s: int, kb: int, n_sink: int, n_recent: int):
     """Grid (B, n_superblocks, pages_per_superblock).  Step (b, i, j) scores
     ONE page (logical page i·ppb+j, physical page pt[b, ·]) into scratch row
-    j; the last page of a superblock runs the SAME max-extract loop the
+    j; the last page of a superblock runs the SAME bitonic extraction the
     dense kernel runs over its (1, bs) block — flat scratch column order ==
     logical order, so candidates (values, indices, tie-breaks) are
     bit-identical to the dense layout."""
@@ -216,18 +256,11 @@ def _topk_paged_body(pt_ref, pos_ref, base_ref, q_ref, k_ref, scale_ref,
 
     @pl.when(j == ppb - 1)
     def _extract():
-        sc0 = sc_ref[...]                                   # (ppb, ps)
-        fcol = (jax.lax.broadcasted_iota(jnp.int32, (ppb, ps), 0) * ps
-                + jax.lax.broadcasted_iota(jnp.int32, (ppb, ps), 1))
-
-        def extract(t, sc):
-            m = jnp.max(sc)
-            a = jnp.min(jnp.where(sc == m, fcol, bs))       # first argmax
-            vals_ref[0, 0, t] = m
-            idx_ref[0, 0, t] = i * bs + a
-            return jnp.where(fcol == a, -jnp.inf, sc)
-
-        jax.lax.fori_loop(0, kb, extract, sc0)
+        sc0 = sc_ref[...].reshape(1, bs)          # flat == logical order
+        fcol = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        vals, ids = _sorted_block_topk(sc0, fcol, kb)
+        vals_ref[...] = vals[None]
+        idx_ref[...] = (i * bs + ids)[None]
 
 
 def _topk_paged_plain(pt_ref, pos_ref, base_ref, q_ref, k_ref, vals_ref,

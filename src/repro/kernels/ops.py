@@ -349,3 +349,51 @@ def sparse_recon_attention(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
         q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
         n_kv=n_kv, v_bits=v_bits, v_group=v_group, theta=theta,
         softcap=softcap, use_rope=use_rope, pos_base=pos_base)
+
+
+def sparse_recon_attention_window(q, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                                  idx, valid, q_pos, *, n_kv: int,
+                                  n_recent: int = 0, v_bits: int = 8,
+                                  v_group: int = 64, theta: float = 10_000.0,
+                                  softcap: float = 0.0, use_rope: bool = True,
+                                  pos_base: Optional[jnp.ndarray] = None,
+                                  page_table: Optional[jnp.ndarray] = None,
+                                  page_size: int = 0,
+                                  backend: Optional[str] = None):
+    """WINDOWED selected-token decode attention (speculative verify).
+
+    Same contract as :func:`sparse_recon_attention` except ``q`` is
+    (B, q_len, H, dh) and ``q_pos`` is the WINDOW BASE: query t is RoPE'd
+    at ``q_pos + t`` and — with ``n_recent`` > 0 — only attends selected
+    positions ``<= q_pos + t - n_recent`` (the per-draft-position mask
+    advance; younger positions belong to the ring / in-window region the
+    caller merges).  One selection serves the whole window: the selected
+    tokens are gathered / dequantized / reconstructed ONCE.  Returns
+    (m (B,Q,H), l (B,Q,H), o (B,Q,H,dh)); q_len = 1 is bit-identical to
+    :func:`sparse_recon_attention`."""
+    backend = backend or _DEFAULT_BACKEND
+    if page_table is not None:
+        if backend == "pallas":
+            from repro.kernels import sparse_recon_attention as sra
+            return sra.sparse_recon_attention_window_paged_pallas(
+                q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid,
+                q_pos, page_table=page_table, page_size=page_size,
+                n_kv=n_kv, n_recent=n_recent, v_bits=v_bits, v_group=v_group,
+                theta=theta, softcap=softcap, use_rope=use_rope,
+                pos_base=pos_base)
+        return _ref.sparse_recon_attention_window_paged_ref(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+            page_table=page_table, page_size=page_size, n_kv=n_kv,
+            n_recent=n_recent, v_bits=v_bits, v_group=v_group, theta=theta,
+            softcap=softcap, use_rope=use_rope, pos_base=pos_base)
+    if backend == "pallas":
+        from repro.kernels import sparse_recon_attention as sra
+        return sra.sparse_recon_attention_window_pallas(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+            n_kv=n_kv, n_recent=n_recent, v_bits=v_bits, v_group=v_group,
+            theta=theta, softcap=softcap, use_rope=use_rope,
+            pos_base=pos_base)
+    return _ref.sparse_recon_attention_fused_window_ref(
+        q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos,
+        n_kv=n_kv, n_recent=n_recent, v_bits=v_bits, v_group=v_group,
+        theta=theta, softcap=softcap, use_rope=use_rope, pos_base=pos_base)

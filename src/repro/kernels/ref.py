@@ -128,6 +128,23 @@ def sparse_recon_attention_paged_ref(
         pos_base=pos_base)
 
 
+def sparse_recon_attention_window_paged_ref(
+        q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, q_pos, *,
+        page_table: jnp.ndarray, page_size: int, n_kv: int, n_recent: int = 0,
+        v_bits: int = 8, v_group: int = 64, theta: float = 10_000.0,
+        softcap: float = 0.0, use_rope: bool = True, pos_base=None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged WINDOWED fused-attention oracle: gather logical views,
+    delegate.  The cache operands are page pools; ``idx`` stays logical."""
+    view = lambda a: None if a is None else \
+        paged_logical_view(a, page_table, page_size)
+    return sparse_recon_attention_fused_window_ref(
+        q, view(k_lat), view(k_scale), view(v_q), view(v_scale),
+        view(v_zero), u, idx, valid, q_pos, n_kv=n_kv, n_recent=n_recent,
+        v_bits=v_bits, v_group=v_group, theta=theta, softcap=softcap,
+        use_rope=use_rope, pos_base=pos_base)
+
+
 def dequantize_values_ref(code: jnp.ndarray, scale: jnp.ndarray,
                           zero: jnp.ndarray, v_bits: int, v_group: int
                           ) -> jnp.ndarray:
@@ -234,4 +251,94 @@ def sparse_recon_attention_ref(q: jnp.ndarray, lat_sel: jnp.ndarray,
     l = jnp.sum(p, axis=-1)
     vv = jnp.repeat(v_sel.reshape(b, n, n_kv, dh), group, axis=2)
     o = jnp.einsum("bhn,bnhd->bhd", p, vv.astype(jnp.float32))
+    return m, l, o
+
+
+def sparse_recon_attention_fused_window_ref(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        n_kv: int, n_recent: int = 0, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Index-taking WINDOWED oracle: gather-then-attend in plain jnp.
+
+    Same contract as :func:`sparse_recon_attention_fused_ref` except q
+    carries a ``q_len`` axis — see :func:`sparse_recon_attention_window_ref`.
+    """
+    lat, v = gather_dequant_ref(k_lat, k_scale, v_q, v_scale, v_zero, idx,
+                                v_bits=v_bits, v_group=v_group)
+    sel_pos = idx if pos_base is None else \
+        idx + jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32),
+                               (idx.shape[0],))[:, None]
+    return sparse_recon_attention_window_ref(
+        q, lat, v, u, sel_pos, valid, q_pos, n_kv=n_kv, n_recent=n_recent,
+        theta=theta, softcap=softcap, use_rope=use_rope)
+
+
+def sparse_recon_attention_window_ref(q: jnp.ndarray, lat_sel: jnp.ndarray,
+                                      v_sel: jnp.ndarray, u: jnp.ndarray,
+                                      sel_pos: jnp.ndarray,
+                                      valid: jnp.ndarray, q_pos, *,
+                                      n_kv: int, n_recent: int = 0,
+                                      theta: float = 10_000.0,
+                                      softcap: float = 0.0,
+                                      use_rope: bool = True
+                                      ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                 jnp.ndarray]:
+    """WINDOWED reconstruct→RoPE→partial-attention oracle (speculative
+    decode: one selection amortized over a multi-token verify window).
+
+    q: (B, Q, H, dh) pre-RoPE queries; query t sits at position
+    ``q_pos + t`` (q_pos scalar or (B,) window base).  The selected set
+    (lat_sel/v_sel/sel_pos/valid) is SHARED by the whole window — it is
+    reconstructed once.  ``n_recent`` > 0 applies the per-draft-position
+    mask advance: query t attends only selected tokens with
+    ``sel_pos <= q_pos + t - n_recent`` — exactly the positions a
+    sequential decode step at q_pos + t could have selected; younger
+    positions are covered by the ring / in-window region partials the
+    caller merges in.  Returns partials (m (B,Q,H), l (B,Q,H),
+    o (B,Q,H,dh)); with Q = 1 this is bit-identical to
+    :func:`sparse_recon_attention_ref`.
+    """
+    b, ql, h, dh = q.shape
+    n = lat_sel.shape[1]
+    kvd = u.shape[0]
+    group = h // (kvd // dh)
+    base = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    if ql == 1:
+        # delegate to the single-token oracle: the degenerate q axis makes
+        # XLA pick a different dot lowering (gemv vs gemm accumulation
+        # order), which would break the documented bit-identity
+        ok1 = valid
+        if n_recent:
+            ok1 = ok1 & (sel_pos <= base[:, None] - n_recent)
+        m, l, o = sparse_recon_attention_ref(
+            q[:, 0], lat_sel, v_sel, u, sel_pos, ok1, q_pos, n_kv=n_kv,
+            theta=theta, softcap=softcap, use_rope=use_rope)
+        return m[:, None], l[:, None], o[:, None]
+    qpos = base[:, None] + jnp.arange(ql, dtype=jnp.int32)[None, :]  # (B,Q)
+    k_flat = lat_sel.astype(jnp.float32) @ u.T.astype(jnp.float32)  # (B,N,kvd)
+    k_pre = k_flat.reshape(b, n, n_kv, dh)
+    if use_rope:
+        k_r = _rope(k_pre, jnp.broadcast_to(sel_pos, (b, n)), theta)
+        q_r = _rope(q, qpos, theta)
+    else:
+        k_r, q_r = k_pre, q
+    kk = jnp.repeat(k_r, group, axis=2)                         # (B,N,H,dh)
+    logits = jnp.einsum("bqhd,bnhd->bqhn", q_r.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * dh ** -0.5
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = jnp.broadcast_to(valid[:, None, None, :], logits.shape)
+    if n_recent:
+        gate = sel_pos[:, None, :] <= qpos[..., None] - n_recent  # (B,Q,N)
+        ok = ok & gate[:, :, None, :]
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, jnp.exp(logits - m[..., None]))
+    l = jnp.sum(p, axis=-1)
+    vv = jnp.repeat(v_sel.reshape(b, n, n_kv, dh), group, axis=2)
+    o = jnp.einsum("bqhn,bnhd->bqhd", p, vv.astype(jnp.float32))
     return m, l, o

@@ -32,6 +32,17 @@ Returns flash-style partials (m, l, o) for LSE-merging with the
 sink/recent-window partials (and across shards under a sequence-sharded
 cache).  Validated on CPU via ``interpret=True`` against
 ``ref.sparse_recon_attention_fused_ref``.
+
+WINDOWED variants (``sparse_recon_attention_window_pallas`` + paged twin,
+speculative decode): q carries a ``q_len <= 8`` draft-window axis; the
+selected set is gathered / dequantized / reconstructed / RoPE'd ONCE per
+grid step while all ``q_len`` queries (RoPE'd at ``q_pos + t``) score
+against it — the reconstruct-stream bytes are paid once per verify window
+instead of once per token.  A static ``n_recent`` applies the per-draft-
+position mask advance (query t only sees selected positions
+``<= q_pos + t - n_recent``; younger positions belong to the ring /
+in-window region the caller merges).  With q_len = 1 the math reduces
+op-for-op to the single-token kernel — bit-identical outputs.
 """
 from __future__ import annotations
 
@@ -150,6 +161,205 @@ def _fused_kernel_scaled(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
     _fused_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
                 kscale_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
                 o_ref, m_s, l_s, acc_s, q_s, **kw)
+
+
+# ---------------------------------------------------------------------------
+# windowed variant (speculative decode): q_len queries share one selection
+# ---------------------------------------------------------------------------
+
+def _window_queries(q_ref, qpos_ref, q_s, b_, ql: int, h: int, theta: float,
+                    use_rope: bool):
+    """RoPE all ``ql`` window queries once into scratch (query t at
+    position qpos + t), stacked as (ql·h, dh)."""
+    for t in range(ql):
+        q32 = q_ref[0, t].astype(jnp.float32)               # (h, dh)
+        q_s[t * h:(t + 1) * h, :] = \
+            _rope_one(q32, qpos_ref[b_] + t, theta) if use_rope else q32
+
+
+def _window_accumulate(logits, valid_bit, pos, qpos, v_tok, m_s, l_s, acc_s,
+                       *, ql: int, h: int, dh: int, n_kv: int, group: int,
+                       softcap: float, n_recent: int):
+    """Shared online-softmax step over the (ql·h,) folded query axis.
+
+    ``n_recent`` > 0 gates query t to selected positions
+    ``pos <= qpos + t - n_recent`` (the per-draft-position mask advance);
+    0 disables the gate.  With ql = 1 every op matches the single-token
+    kernels bit-for-bit.
+    """
+    logits = logits.reshape(ql * h) * (dh ** -0.5)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    ok = valid_bit != 0
+    if n_recent:
+        t_of = jax.lax.broadcasted_iota(jnp.int32, (ql, h), 0) \
+            .reshape(ql * h)
+        ok = ok & (pos <= qpos + t_of - n_recent)
+    logits = jnp.where(ok, logits, NEG_INF)
+    m_prev = m_s[:, 0]
+    m_new = jnp.maximum(m_prev, logits)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, jnp.exp(logits - m_new))
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[:, 0] = l_s[:, 0] * alpha + p
+    p_g = p.reshape(ql, n_kv, group)
+    acc_s[...] = acc_s[...] * alpha[:, None] \
+        + (p_g[..., None] * v_tok[None, :, None, :]).reshape(ql * h, dh)
+    m_s[:, 0] = m_new
+
+
+def _fused_window_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
+                       kscale_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref,
+                       l_ref, o_ref, m_s, l_s, acc_s, q_s, *, n_kv: int,
+                       group: int, theta: float, softcap: float,
+                       use_rope: bool, nc: int, v_bits: int, v_group: int,
+                       ql: int, n_recent: int):
+    """Windowed :func:`_fused_step`: the selected token is dequantized,
+    reconstructed, and RoPE'd ONCE, then scored by all ``ql`` cached
+    queries (folded into the head axis of the scratch accumulators)."""
+    b_, n_ = pl.program_id(0), pl.program_id(1)
+    h, dh = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(n_ == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        _window_queries(q_ref, qpos_ref, q_s, b_, ql, h, theta, use_rope)
+
+    lat = lat_ref[0].astype(jnp.float32)                    # (1, r)
+    if kscale_ref is not None:
+        lat = lat * kscale_ref[0, 0].astype(jnp.float32)
+    k_flat = jax.lax.dot_general(
+        lat, u_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, kvd)
+    k_pre = k_flat.reshape(n_kv, dh)
+    pos = idx_ref[b_, n_] + base_ref[b_]
+    k_r = _rope_one(k_pre, pos, theta) if use_rope else k_pre
+
+    q_g = q_s[...].reshape(ql, n_kv, group, dh)
+    logits = jnp.sum(q_g * k_r[None, :, None, :], axis=-1)  # (ql,n_kv,group)
+    v_tok = _dequant_token(vq_ref[0, 0], vs_ref[0, 0], vz_ref[0, 0],
+                           v_bits, v_group).reshape(n_kv, dh)
+    _window_accumulate(logits, valid_ref[b_, n_], pos, qpos_ref[b_], v_tok,
+                       m_s, l_s, acc_s, ql=ql, h=h, dh=dh, n_kv=n_kv,
+                       group=group, softcap=softcap, n_recent=n_recent)
+
+    @pl.when(n_ == nc - 1)
+    def _finish():
+        m_ref[0] = m_s[:, 0].reshape(ql, h)
+        l_ref[0] = l_s[:, 0].reshape(ql, h)
+        o_ref[0] = acc_s[...].reshape(ql, h, dh)
+
+
+def _fused_window_plain(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
+                        lat_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                        o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_window_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
+                       None, vq_ref, vs_ref, vz_ref, u_ref, m_ref, l_ref,
+                       o_ref, m_s, l_s, acc_s, q_s, **kw)
+
+
+def _fused_window_scaled(idx_ref, valid_ref, qpos_ref, base_ref, q_ref,
+                         lat_ref, kscale_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                         m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw):
+    _fused_window_step(idx_ref, valid_ref, qpos_ref, base_ref, q_ref, lat_ref,
+                       kscale_ref, vq_ref, vs_ref, vz_ref, u_ref, m_ref,
+                       l_ref, o_ref, m_s, l_s, acc_s, q_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "n_recent", "v_bits",
+                                             "v_group", "theta", "softcap",
+                                             "use_rope"))
+def sparse_recon_attention_window_pallas(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        n_kv: int, n_recent: int = 0, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Windowed fused decode attention (speculative verify window).
+
+    q: (B, q_len, H, dh) pre-RoPE queries; ``q_pos`` (scalar or (B,)) is
+    the WINDOW BASE — query t is RoPE'd at ``q_pos + t``.  One selected
+    set (idx/valid) serves the whole window: each token is reconstructed
+    once and attended by all queries, with the per-draft-position mask
+    advance applied in-kernel (``n_recent`` static; see module docstring).
+    Returns (m (B,Q,H), l (B,Q,H), o (B,Q,H,dh)) f32 partials.
+    """
+    b, ql, h, dh = q.shape
+    r = k_lat.shape[2]
+    code_w = v_q.shape[2]
+    g = v_scale.shape[2]
+    kvd = u.shape[0]
+    nc = idx.shape[1]
+    group = h // n_kv
+
+    idx_i = idx.astype(jnp.int32)
+    valid_i = valid.astype(jnp.int32)
+    qpos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    base_b = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+
+    in_specs = [
+        pl.BlockSpec((1, ql, h, dh),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, 1, r),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+    ]
+    args = [q, k_lat]
+    kw = dict(n_kv=n_kv, group=group, theta=theta, softcap=softcap,
+              use_rope=use_rope, nc=nc, v_bits=v_bits, v_group=v_group,
+              ql=ql, n_recent=n_recent)
+    if k_scale is not None:
+        in_specs.append(
+            pl.BlockSpec((1, 1),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_])))
+        args.append(k_scale)
+        kernel = functools.partial(_fused_window_scaled, **kw)
+    else:
+        kernel = functools.partial(_fused_window_plain, **kw)
+    in_specs += [
+        pl.BlockSpec((1, 1, code_w),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((1, 1, g),
+                     lambda b_, n_, i_, v_, p_, bb_: (b_, i_[b_, n_], 0)),
+        pl.BlockSpec((kvd, r), lambda b_, n_, i_, v_, p_, bb_: (0, 0)),
+    ]
+    args += [v_q, v_scale, v_zero, u]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, ql, h),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0)),
+            pl.BlockSpec((1, ql, h),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0)),
+            pl.BlockSpec((1, ql, h, dh),
+                         lambda b_, n_, i_, v_, p_, bb_: (b_, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((ql * h, 1), jnp.float32),
+            pltpu.VMEM((ql * h, 1), jnp.float32),
+            pltpu.VMEM((ql * h, dh), jnp.float32),
+            pltpu.VMEM((ql * h, dh), jnp.float32),
+        ],
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ql, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, ql, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, ql, h, dh), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(idx_i, valid_i, qpos_b, base_b, *args)
+    return m, l, o
 
 
 # ---------------------------------------------------------------------------
@@ -352,6 +562,180 @@ def sparse_recon_attention_paged_pallas(
             jax.ShapeDtypeStruct((b, h), jnp.float32),
             jax.ShapeDtypeStruct((b, h), jnp.float32),
             jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(idx_i, valid_i, qpos_b, base_b, pt, *args)
+    return m, l, o
+
+
+def _fused_window_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref,
+                             q_ref, lat_ref, kscale_ref, vq_ref, vs_ref,
+                             vz_ref, u_ref, m_ref, l_ref, o_ref, m_s, l_s,
+                             acc_s, q_s, *, n_kv: int, group: int,
+                             theta: float, softcap: float, use_rope: bool,
+                             nc: int, v_bits: int, v_group: int, ps: int,
+                             ql: int, n_recent: int):
+    """Windowed :func:`_fused_paged_step`: whole-page DMA + one
+    reconstruction per selected token, scored by all ``ql`` queries."""
+    b_, n_ = pl.program_id(0), pl.program_id(1)
+    h, dh = q_ref.shape[2], q_ref.shape[3]
+
+    @pl.when(n_ == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+        _window_queries(q_ref, qpos_ref, q_s, b_, ql, h, theta, use_rope)
+
+    row = jax.lax.rem(idx_ref[b_, n_], ps)                  # in-page row
+    lat = jax.lax.dynamic_slice(lat_ref[0], (row, 0), (1, lat_ref.shape[2])) \
+        .astype(jnp.float32)                                # (1, r)
+    if kscale_ref is not None:
+        sc = jax.lax.dynamic_slice(kscale_ref[0], (row,), (1,))
+        lat = lat * sc.astype(jnp.float32)
+    k_flat = jax.lax.dot_general(
+        lat, u_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                 # (1, kvd)
+    k_pre = k_flat.reshape(n_kv, dh)
+    pos = idx_ref[b_, n_] + base_ref[b_]
+    k_r = _rope_one(k_pre, pos, theta) if use_rope else k_pre
+
+    q_g = q_s[...].reshape(ql, n_kv, group, dh)
+    logits = jnp.sum(q_g * k_r[None, :, None, :], axis=-1)  # (ql,n_kv,group)
+    code = jax.lax.dynamic_slice(
+        vq_ref[0], (row, 0), (1, vq_ref.shape[2]))[0]
+    vsc = jax.lax.dynamic_slice(vs_ref[0], (row, 0), (1, vs_ref.shape[2]))[0]
+    vzr = jax.lax.dynamic_slice(vz_ref[0], (row, 0), (1, vz_ref.shape[2]))[0]
+    v_tok = _dequant_token(code, vsc, vzr, v_bits, v_group).reshape(n_kv, dh)
+    _window_accumulate(logits, valid_ref[b_, n_], pos, qpos_ref[b_], v_tok,
+                       m_s, l_s, acc_s, ql=ql, h=h, dh=dh, n_kv=n_kv,
+                       group=group, softcap=softcap, n_recent=n_recent)
+
+    @pl.when(n_ == nc - 1)
+    def _finish():
+        m_ref[0] = m_s[:, 0].reshape(ql, h)
+        l_ref[0] = l_s[:, 0].reshape(ql, h)
+        o_ref[0] = acc_s[...].reshape(ql, h, dh)
+
+
+def _fused_window_paged_plain(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref,
+                              q_ref, lat_ref, vq_ref, vs_ref, vz_ref, u_ref,
+                              m_ref, l_ref, o_ref, m_s, l_s, acc_s, q_s,
+                              **kw):
+    _fused_window_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref,
+                             q_ref, lat_ref, None, vq_ref, vs_ref, vz_ref,
+                             u_ref, m_ref, l_ref, o_ref, m_s, l_s, acc_s,
+                             q_s, **kw)
+
+
+def _fused_window_paged_scaled(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref,
+                               q_ref, lat_ref, kscale_ref, vq_ref, vs_ref,
+                               vz_ref, u_ref, m_ref, l_ref, o_ref, m_s, l_s,
+                               acc_s, q_s, **kw):
+    _fused_window_paged_step(idx_ref, valid_ref, qpos_ref, base_ref, pt_ref,
+                             q_ref, lat_ref, kscale_ref, vq_ref, vs_ref,
+                             vz_ref, u_ref, m_ref, l_ref, o_ref, m_s, l_s,
+                             acc_s, q_s, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("n_kv", "n_recent", "v_bits",
+                                             "v_group", "theta", "softcap",
+                                             "use_rope", "page_size"))
+def sparse_recon_attention_window_paged_pallas(
+        q: jnp.ndarray, k_lat: jnp.ndarray, k_scale: Optional[jnp.ndarray],
+        v_q: jnp.ndarray, v_scale: jnp.ndarray, v_zero: jnp.ndarray,
+        u: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray, q_pos, *,
+        page_table: jnp.ndarray, page_size: int, n_kv: int,
+        n_recent: int = 0, v_bits: int = 8, v_group: int = 64,
+        theta: float = 10_000.0, softcap: float = 0.0, use_rope: bool = True,
+        pos_base: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged twin of :func:`sparse_recon_attention_window_pallas`: cache
+    operands are physical page pools, ``idx`` stays logical, and sorted
+    indices keep the whole-page DMA once-per-page-touched.  Bit-identical
+    to the dense windowed kernel given the same idx order."""
+    b, ql, h, dh = q.shape
+    ps = page_size
+    mp = page_table.shape[1]
+    nc = idx.shape[1]
+    group = h // n_kv
+    r = k_lat.shape[2]
+    code_w = v_q.shape[2]
+    g = v_scale.shape[2]
+    kvd = u.shape[0]
+
+    idx_i = idx.astype(jnp.int32)
+    valid_i = valid.astype(jnp.int32)
+    qpos_b = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (b,))
+    base_b = jnp.zeros((b,), jnp.int32) if pos_base is None \
+        else jnp.broadcast_to(jnp.asarray(pos_base, jnp.int32), (b,))
+    pt = page_table.astype(jnp.int32)
+
+    def page_of(b_, n_, i_, pt_):
+        lp = jnp.minimum(i_[b_, n_] // ps, mp - 1)   # invalid idx: clamp
+        return jnp.clip(pt_[b_, lp], 0, k_lat.shape[0] - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, ql, h, dh),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0, 0)),
+        pl.BlockSpec((1, ps, r),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+    ]
+    args = [q, k_lat]
+    kw = dict(n_kv=n_kv, group=group, theta=theta, softcap=softcap,
+              use_rope=use_rope, nc=nc, v_bits=v_bits, v_group=v_group,
+              ps=ps, ql=ql, n_recent=n_recent)
+    if k_scale is not None:
+        in_specs.append(
+            pl.BlockSpec((1, ps),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_:
+                         (page_of(b_, n_, i_, pt_), 0)))
+        args.append(k_scale)
+        kernel = functools.partial(_fused_window_paged_scaled, **kw)
+    else:
+        kernel = functools.partial(_fused_window_paged_plain, **kw)
+    in_specs += [
+        pl.BlockSpec((1, ps, code_w),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((1, ps, g),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((1, ps, g),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_:
+                     (page_of(b_, n_, i_, pt_), 0, 0)),
+        pl.BlockSpec((kvd, r),
+                     lambda b_, n_, i_, v_, p_, bb_, pt_: (0, 0)),
+    ]
+    args += [v_q, v_scale, v_zero, u]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, ql, h),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0)),
+            pl.BlockSpec((1, ql, h),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0)),
+            pl.BlockSpec((1, ql, h, dh),
+                         lambda b_, n_, i_, v_, p_, bb_, pt_: (b_, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((ql * h, 1), jnp.float32),
+            pltpu.VMEM((ql * h, 1), jnp.float32),
+            pltpu.VMEM((ql * h, dh), jnp.float32),
+            pltpu.VMEM((ql * h, dh), jnp.float32),
+        ],
+    )
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ql, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, ql, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, ql, h, dh), jnp.float32),
         ],
         interpret=_interpret(),
     )(idx_i, valid_i, qpos_b, base_b, pt, *args)

@@ -135,6 +135,20 @@ def main() -> None:
                     help="per-request deadline in scheduler steps (0 = "
                          "none); expiry tears the request down as "
                          "TIMED_OUT through the standard teardown path")
+    ap.add_argument("--request-timeout-ms", type=float, default=0.0,
+                    help="per-request WALL-CLOCK deadline in milliseconds "
+                         "(ISSUE 9; 0 = none); may be combined with "
+                         "--request-timeout-steps — whichever deadline "
+                         "fires first tears the request down as TIMED_OUT "
+                         "through the same path")
+    ap.add_argument("--spec-window", type=int, default=0,
+                    help="speculative decoding (ISSUE 9): verify-window "
+                         "width Q in [2, 8] (0/1 = off).  Each decode "
+                         "step drafts Q-1 tokens per row by n-gram prompt "
+                         "lookup and verifies them through ONE windowed "
+                         "HLO — one latent selection amortized over the "
+                         "window; greedy-only, untiered cache, attention "
+                         "families")
     ap.add_argument("--max-request-retries", type=int, default=2,
                     help="transient per-request faults retry this many "
                          "times with exponential backoff in steps before "
@@ -233,6 +247,8 @@ def main() -> None:
                        max_queue=args.max_queue,
                        queue_policy=args.queue_policy,
                        request_timeout_steps=args.request_timeout_steps,
+                       request_timeout_ms=args.request_timeout_ms,
+                       spec_window=args.spec_window,
                        max_request_retries=args.max_request_retries,
                        audit_every=args.audit_every,
                        priority_classes=args.priority_classes,
@@ -290,6 +306,13 @@ def main() -> None:
                   f"fetch_hits={sched.fetch_hits} "
                   f"prefetch_hits={sched.prefetch_hits} "
                   f"cold_misses={sched.cold_misses}")
+    if args.spec_window > 1 and sched.spec_rounds:
+        acc = sched.spec_accepted / max(1, sched.spec_proposed)
+        print(f"[serve] speculative: window {args.spec_window}, "
+              f"{sched.spec_rounds} verify rounds, "
+              f"{sched.spec_committed} tokens committed "
+              f"({sched.spec_committed / sched.spec_rounds:.2f}/round), "
+              f"draft acceptance {acc:.1%}")
     if args.priority_classes > 1:
         print(f"[serve] slo: {args.priority_classes} classes "
               f"(policy={args.preempt_policy}), parks={sched.parks} "

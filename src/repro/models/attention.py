@@ -355,6 +355,83 @@ def attend_decode_full(params: dict, x: jnp.ndarray, cfg: ModelConfig,
     return y, k_cache, v_cache
 
 
+def attend_decode_full_window(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                              k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                              pos) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                            jnp.ndarray]:
+    """Verify-window decode against a full-precision cache (ISSUE 9).
+
+    x: (B, Q, d) — the pending token plus Q−1 drafts at positions
+    pos..pos+Q−1 (``pos`` scalar or (B,) WINDOW BASE).  READ-ONLY w.r.t.
+    the caller's cache: the window K/V are scattered into a TRANSIENT
+    cache view (discarded on return) so query t reads byte-identical
+    cache rows — and sums the softmax in the identical axis order — to
+    sequential step pos+t; a rejected draft never reaches the persistent
+    cache.  The caller commits the accepted prefix afterwards through
+    :func:`commit_full_window` with the returned post-RoPE window K/V.
+
+    Returns (y (B, Q, d), k_r (B, Q, Hkv, dh) post-RoPE, v (B, Q, Hkv, dh)).
+    """
+    b, ql, _ = x.shape
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    qpos = pos_v[:, None] + jnp.arange(ql, dtype=jnp.int32)[None, :]
+    q, k, v = qkv_proj(params, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, qpos, cfg.rope_theta)
+        k_r = apply_rope(k, qpos, cfg.rope_theta)
+    else:
+        k_r = k
+    rows = jnp.arange(b)[:, None]
+    k_view = k_cache.at[rows, qpos].set(
+        constrain(k_r, ("batch", "seq", "kv_heads", None))
+        .astype(k_cache.dtype))
+    v_view = v_cache.at[rows, qpos].set(
+        constrain(v, ("batch", "seq", "kv_heads", None))
+        .astype(v_cache.dtype))
+    s_max = k_cache.shape[1]
+    valid = jnp.arange(s_max)[None, None, :] <= qpos[:, :, None]  # (B,Q,S)
+    q_g = q.reshape(b, ql, cfg.n_kv_heads, cfg.group_size, cfg.head_dim)
+    logits = jnp.einsum("bqkrd,bskd->bqkrs", q_g, k_view.astype(q.dtype),
+                        preferred_element_type=jnp.float32) \
+        * cfg.head_dim ** -0.5
+    if cfg.attn_logit_softcap:
+        logits = cfg.attn_logit_softcap * jnp.tanh(
+            logits / cfg.attn_logit_softcap)
+    logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqkrs,bskd->bqkrd", p.astype(q.dtype),
+                   v_view.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, ql, cfg.n_heads, cfg.head_dim).astype(x.dtype)
+    y = out_proj(params, o, cfg)
+    return y, k_r, v
+
+
+def commit_full_window(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                       k_r: jnp.ndarray, v: jnp.ndarray, pos, n_accept
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Write the ACCEPTED prefix of a verify window into a full-precision
+    cache: slot t lands at pos + t iff t < n_accept[b] (rejected drafts'
+    scatters redirect out of range and drop).  k_r/v: (B, Q, Hkv, dh) as
+    returned by :func:`attend_decode_full_window`."""
+    b, ql = k_r.shape[:2]
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    n_acc = jnp.broadcast_to(
+        jnp.asarray(n_accept, jnp.int32).reshape(-1), (b,))
+    rows = jnp.arange(b)
+    s_max = k_cache.shape[1]
+    for t in range(ql):
+        tgt = jnp.where(t < n_acc, pos_v + t, s_max)
+        k_cache = k_cache.at[rows, tgt].set(
+            constrain(k_r[:, t], ("batch", "kv_heads", None))
+            .astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[rows, tgt].set(
+            constrain(v[:, t], ("batch", "kv_heads", None))
+            .astype(v_cache.dtype), mode="drop")
+    cache_axes = ("batch", "kv_seq_full", "kv_heads", None)
+    return (constrain(k_cache, cache_axes), constrain(v_cache, cache_axes))
+
+
 def init_full_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
     """Cache pytree for one full-precision layer."""
     shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)

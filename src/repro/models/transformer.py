@@ -40,7 +40,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig, SALSConfig
 from repro.core import latent_cache as lc
-from repro.core.sparse_attention import sals_decode_attend
+from repro.core.sparse_attention import sals_decode_attend, sals_window_attend
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
@@ -617,6 +617,114 @@ def decode_step(params: dict, projectors: Optional[dict], cache: dict,
     if collect_selection:
         return logits, new_cache, touched
     return logits, new_cache
+
+
+def decode_window(params: dict, projectors: Optional[dict], cache: dict,
+                  tokens: jnp.ndarray, pos, cfg: ModelConfig,
+                  sals: Optional[SALSConfig]):
+    """Speculative VERIFY WINDOW: Q tokens through one forward (ISSUE 9).
+
+    tokens: (B, Q) int32 — the pending token plus Q−1 draft tokens at
+    positions pos..pos+Q−1 (``pos`` scalar or (B,) per-row window base).
+    READ-ONLY w.r.t. ``cache``: nothing is appended (rejected drafts must
+    never reach the destructive cache writes) — the caller verifies the
+    drafts against the returned logits and commits the accepted prefix
+    with :func:`commit_window`.  Each SALS layer runs ONE latent
+    selection for the whole window (core.sparse_attention.
+    sals_window_attend); full-precision layers attend a transient
+    scattered view.  At Q = 1 every layer's math is bit-identical to
+    :func:`decode_step` minus the cache write.
+
+    Returns (logits (B, Q, V) f32, aux) — ``aux["seg{i}"]`` holds the
+    per-layer window K/V ((ls, B, Q, Hkv, dh) pre-RoPE for SALS segments,
+    post-RoPE for full segments) that :func:`commit_window` consumes.
+    """
+    if not cfg.is_decoder:
+        raise ValueError("encoder family has no decode step")
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(f"{cfg.family} decode carries recurrent state — a "
+                         "rejected draft would need a state rollback; "
+                         "speculative windows support attention families")
+    x = embed_apply(params["embed"], tokens, cfg)              # (B,Q,d)
+    segs = segment_plan(cfg, sals)
+    aux: Dict[str, Any] = {}
+
+    for si, (i0, i1, mode) in enumerate(segs):
+        bp_seg = _slice_tree(params["blocks"], i0, i1)
+        seg_cache = cache[f"seg{si}"]
+        if mode == "sals":
+            u_seg = projectors["u"][i0:i1]
+
+            def body_sw(x, bp_u_cl):
+                bp, u_l, cl = bp_u_cl
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                a, k_pre, v = sals_window_attend(bp["attn"], u_l, cl, h,
+                                                 pos, cfg, sals)
+                x, _ = _finish_block(bp, x, h, a, None, None, cfg)
+                return x, {"k": k_pre, "v": v}
+
+            x, seg_aux = jax.lax.scan(body_sw, x, (bp_seg, u_seg, seg_cache))
+        else:
+            def body_fw(x, bp_cl):
+                bp, cl = bp_cl
+                h = rmsnorm_apply(bp["attn_norm"], x, cfg.norm_eps)
+                a, k_r, v = attn.attend_decode_full_window(
+                    bp["attn"], h, cfg, cl["k"], cl["v"], pos)
+                x, _ = _finish_block(bp, x, h, a, None, None, cfg)
+                return x, {"k": k_r, "v": v}
+
+            x, seg_aux = jax.lax.scan(body_fw, x, (bp_seg, seg_cache))
+        aux[f"seg{si}"] = seg_aux
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], x, cfg)            # (B,Q,V)
+    return logits, aux
+
+
+def commit_window(projectors: Optional[dict], cache: dict, aux: dict, pos,
+                  n_accept, cfg: ModelConfig, sals: Optional[SALSConfig]
+                  ) -> dict:
+    """Commit a verify window's ACCEPTED prefix into the decode cache.
+
+    ``aux`` is :func:`decode_window`'s window-K/V pytree; ``n_accept``
+    (B,) counts accepted tokens per row (window slot t commits at
+    position pos + t iff t < n_accept[b]).  The write path is the same
+    masked per-slot append the sequential decode uses — latent projection
+    + V quantization + ring/sink inserts for SALS layers (so committed
+    cache bytes are bit-identical to sequential decode of the accepted
+    tokens), plain row scatters for full-precision layers.
+    """
+    segs = segment_plan(cfg, sals)
+    new_cache: Dict[str, Any] = {}
+    for si, (i0, i1, mode) in enumerate(segs):
+        seg_cache = cache[f"seg{si}"]
+        seg_aux = aux[f"seg{si}"]
+        if mode == "sals":
+            u_seg = projectors["u"][i0:i1]
+
+            def body_cs(carry, u_cl_ax):
+                u_l, cl, ax = u_cl_ax
+                k_pre, v = ax["k"], ax["v"]            # (B, Q, Hkv, dh)
+                b, ql = k_pre.shape[:2]
+                k_flat = k_pre.reshape(b, ql, cfg.kv_dim)
+                v_flat = v.reshape(b, ql, cfg.kv_dim)
+                k_lat = jnp.einsum("bqk,kr->bqr", k_flat.astype(jnp.float32),
+                                   u_l.astype(jnp.float32))
+                cl = cl.write_window(sals, pos, k_lat, v_flat, k_pre, v,
+                                     n_accept)
+                return carry, cl
+
+            _, new_seg = jax.lax.scan(body_cs, 0, (u_seg, seg_cache, seg_aux))
+        else:
+            def body_cf(carry, cl_ax):
+                cl, ax = cl_ax
+                k_c, v_c = attn.commit_full_window(cl["k"], cl["v"], ax["k"],
+                                                   ax["v"], pos, n_accept)
+                return carry, {"k": k_c, "v": v_c}
+
+            _, new_seg = jax.lax.scan(body_cf, 0, (seg_cache, seg_aux))
+        new_cache[f"seg{si}"] = new_seg
+    return new_cache
 
 
 def _finish_block(bp, x, h, a, cl, ssm_cl, cfg: ModelConfig):

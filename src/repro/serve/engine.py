@@ -156,6 +156,17 @@ class ServeEngine:
         self._init_prefill = jax.jit(self._init_prefill_impl)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(1,))
         self._decode_sel = jax.jit(self._decode_sel_impl, donate_argnums=(1,))
+        # speculative verify window (ISSUE 9): the window forward reads the
+        # cache WITHOUT donating it (the same buffers are re-read by the
+        # commit), then the commit donates cache + window K/V
+        self._decode_window = jax.jit(self._decode_window_impl)
+        self._commit_window = jax.jit(self._commit_window_impl,
+                                      donate_argnums=(0,))
+        if scfg.spec_window > 1 and not self.ragged_ok:
+            raise ValueError(
+                f"{cfg.family} decode carries recurrent state — a rejected "
+                "draft would need a state rollback; speculative decoding "
+                "needs an attention family (set spec_window=0)")
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
         self._admit_paged = jax.jit(self._admit_paged_impl,
                                     donate_argnums=(0,))
@@ -234,6 +245,14 @@ class ServeEngine:
             mp = self.scfg.max_seq_len // self.scfg.page_size
             union = jnp.zeros((tokens.shape[0], mp), bool)
         return logits, cache, union
+
+    def _decode_window_impl(self, tokens, cache, pos):
+        return tf.decode_window(self.params, self.projectors, cache, tokens,
+                                pos, self.cfg, self.sals)
+
+    def _commit_window_impl(self, cache, aux, pos, n_accept):
+        return tf.commit_window(self.projectors, cache, aux, pos, n_accept,
+                                self.cfg, self.sals)
 
     def _admit_impl(self, cache, one, slot):
         # every cache leaf is layer-stacked (L, B, ...): splice batch row
@@ -828,6 +847,115 @@ class ServeEngine:
             key, sub = jax.random.split(key)
             logits, cache = self._decode(next_tok, cache, pos0 + t)
             next_tok = self._sample(logits, sub)
+        return [GenerationResult(out[i, :n_out[i]], lens[i], int(n_out[i]))
+                for i in range(b)]
+
+    def generate_speculative(self, prompts: List[np.ndarray],
+                             max_new_tokens: Optional[int] = None,
+                             eos_id: Optional[int] = None
+                             ) -> List[GenerationResult]:
+        """Greedy generation through the speculative verify window.
+
+        Each round drafts ``spec_window − 1`` tokens per row (prompt-lookup,
+        :class:`~repro.serve.draft.NgramDrafter`), runs ONE windowed decode
+        HLO over [pending token + drafts], and commits the longest prefix
+        whose greedy continuations match the drafts.  Window slot 0 is the
+        already-emitted pending token, so every round makes progress —
+        all-rejected drafts still commit one token, exactly a sequential
+        step.  Verification is the model's own windowed forward (bit-exact
+        vs sequential per query), so the emitted stream is TOKEN-EXACT with
+        :meth:`generate` under greedy decoding.
+
+        Per-row EOS / budget truncation mirrors :meth:`generate`: a row's
+        commits stop at its own eos (later window slots are never
+        committed), and ``self.spec_stats`` afterwards holds the round /
+        draft / acceptance counters the throughput benchmark reads.
+        """
+        q = self.scfg.spec_window
+        if q < 2:
+            raise ValueError("generate_speculative needs spec_window >= 2 "
+                             f"(got {q}); use generate() for sequential")
+        if self.scfg.temperature > 0:
+            raise ValueError("speculative verify is greedy: argmax "
+                             "continuations are compared token-exactly "
+                             "(temperature must be 0)")
+        if self.tiered:
+            raise ValueError("speculative decoding needs the untiered "
+                             "cache (hot-set prefetch is per committed "
+                             "step)")
+        from repro.serve.draft import NgramDrafter
+        mnt = max_new_tokens or self.scfg.max_new_tokens
+        b = len(prompts)
+        lens = [len(p) for p in prompts]
+        max_len = max(lens)
+        if max_len + mnt + q - 1 > self.scfg.max_seq_len:
+            # the last verify window may READ (never commit) up to q-1
+            # positions past the final token
+            raise ValueError(
+                f"prompt {max_len} + new {mnt} + window {q}-1 exceeds "
+                f"max_seq {self.scfg.max_seq_len}")
+        toks = np.full((b, max_len), self.scfg.pad_id, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :lens[i]] = p
+        pos0 = jnp.asarray(lens, jnp.int32)
+        logits, cache = self._prefill({"tokens": jnp.asarray(toks)}, pos0)
+
+        out = np.zeros((b, mnt), np.int32)
+        done = np.zeros((b,), bool)
+        n_out = np.zeros((b,), np.int32)
+        pending = np.array(jnp.argmax(logits, -1), np.int32)     # (B,)
+        out[:, 0] = pending
+        n_out[:] = 1
+        if eos_id is not None:
+            done |= pending == eos_id
+        done |= n_out >= mnt
+        drafters = [NgramDrafter(list(map(int, prompts[i])) + [int(pending[i])])
+                    for i in range(b)]
+        pos = np.asarray(lens, np.int32)                         # window base
+        self.spec_stats = {"rounds": 0, "proposed": 0, "accepted_drafts": 0,
+                           "committed": 0}
+
+        while not done.all():
+            wt = np.zeros((b, q), np.int32)
+            wt[:, 0] = pending
+            for i in range(b):
+                if not done[i]:
+                    wt[i, 1:] = drafters[i].propose(q - 1)
+            win_logits, aux = self._decode_window(
+                jnp.asarray(wt), cache, jnp.asarray(pos))
+            preds = np.asarray(jnp.argmax(win_logits, -1), np.int32)  # (B,Q)
+            match = wt[:, 1:] == preds[:, :-1]                        # (B,Q-1)
+            n_matched = np.cumprod(match, axis=1).sum(axis=1)
+            n_emit = np.where(done, 0,
+                              np.minimum(n_matched + 1, mnt - n_out))
+            emitted_rows: List[List[int]] = []
+            for i in range(b):
+                row = [int(t) for t in preds[i, :n_emit[i]]]
+                if eos_id is not None and eos_id in row:
+                    row = row[:row.index(eos_id) + 1]   # stop at own eos
+                emitted_rows.append(row)
+            n_commit = np.asarray([len(r) for r in emitted_rows], np.int32)
+            # commit exactly the emitted tokens' input slots: slot t's
+            # input is correct for t < n_commit, and the new pending token
+            # (last emitted) becomes the NEXT window's slot 0
+            cache = self._commit_window(cache, aux, jnp.asarray(pos),
+                                        jnp.asarray(n_commit))
+            self.spec_stats["rounds"] += 1
+            for i in range(b):
+                row = emitted_rows[i]
+                if not row:
+                    continue
+                self.spec_stats["proposed"] += q - 1
+                self.spec_stats["accepted_drafts"] += int(n_matched[i])
+                self.spec_stats["committed"] += len(row)
+                out[i, n_out[i]:n_out[i] + len(row)] = row
+                n_out[i] += len(row)
+                pending[i] = row[-1]
+                pos[i] += len(row)
+                drafters[i].extend(row)
+                if (eos_id is not None and row[-1] == eos_id) \
+                        or n_out[i] >= mnt:
+                    done[i] = True
         return [GenerationResult(out[i, :n_out[i]], lens[i], int(n_out[i]))
                 for i in range(b)]
 

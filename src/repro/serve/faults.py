@@ -15,6 +15,10 @@ threaded through the scheduler/engine/pager hot path:
     ``spill``          TieredPagePool.begin_spill, before the HBM→host read
     ``park``           ServeEngine.detach_slot, before the snapshot read
     ``resume``         ServeEngine.attach_slot, before the donating splice
+    ``draft_verify``   RequestScheduler speculative loop (ISSUE 9), before
+                       the windowed verify jit call — the cache is still
+                       whole, drafting is pure host work, so the whole
+                       verify round retries like a ``decode_step`` fault
 
 The two preemption points (ISSUE 8) follow the same placement rule: a
 ``park`` fault fires before any state is touched, so the victim simply

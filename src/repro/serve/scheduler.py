@@ -129,6 +129,31 @@ SLO SCHEDULING (ISSUE 8).  The front door is no longer plain FIFO:
     non-DONE teardowns flush the partial stream into a
     ``complete=False`` result.
 
+SPECULATIVE DECODING (ISSUE 9, ``ServeConfig.spec_window > 1``): the
+per-arena decode step becomes a VERIFY WINDOW — each resident's pending
+token plus ``spec_window−1`` prompt-lookup drafts (``serve/draft.py``,
+per-slot state on ``_Slot.drafter``) run through ONE compiled windowed
+HLO (``engine._decode_window``: one latent selection amortized over the
+window, one reconstruction pass attending every window query), greedy
+verify accepts each row's longest matching draft prefix, and the masked
+``engine._commit_window`` writes ONLY accepted positions — cache bytes
+and the emitted token stream are bit-identical to sequential greedy
+decode whatever the drafts were.  ``on_token`` fires once per ACCEPTED
+token in commit order with contiguous indices; rejected draft positions
+never reach the client.  Requires greedy decoding, an attention family
+and the untiered cache (``config.base`` validates); paged rows map every
+page the window span can touch before the step.  The ``draft_verify``
+fault point fires before the windowed jit call, so an injected fault
+retries the whole round like a ``decode_step`` fault.  Counters:
+``spec_rounds`` / ``spec_proposed`` / ``spec_accepted`` /
+``spec_committed``.
+
+WALL-CLOCK DEADLINES (ISSUE 9): ``ServeConfig.request_timeout_ms`` (per-
+request override ``Request.timeout_ms``) arms a monotonic-clock deadline
+at submit, swept by the same teardown path as ``request_timeout_steps``
+— either deadline may fire first.  The clock source is injectable
+(``RequestScheduler(clock=...)``) for deterministic tests.
+
 "static" mode survives as the GPT-fast-style baseline (and the fallback for
 recurrent-state families, whose prefill can neither right-pad nor chunk):
 fixed-size batches, length-bucketed FIFO (priority/tenant knobs are
@@ -144,6 +169,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import time
 import warnings
 from typing import Callable, Dict, List, Optional
 
@@ -155,6 +181,7 @@ from repro.core.pager import (PagePool, PageTable, PagerInvariantError,
                               PrefixIndex, audit_pager)
 from repro.core.tiering import HotTierThrash, TieredPagePool
 from repro.serve import faults
+from repro.serve.draft import NgramDrafter
 from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
 from repro.serve.lifecycle import (NanLogitsError, QueueFull,
                                    RequestCancelled, RequestState,
@@ -173,8 +200,10 @@ class Request:
     state: RequestState = RequestState.QUEUED
     error: Optional[BaseException] = None
     timeout_steps: Optional[int] = None   # None = ServeConfig default
+    timeout_ms: Optional[float] = None    # None = ServeConfig default
     retries: int = 0                      # transient-fault retries consumed
     deadline_step: Optional[int] = None   # set at submit
+    deadline_time: Optional[float] = None  # wall-clock deadline (ISSUE 9)
     not_before_step: int = 0              # retry backoff gate
     cancel_requested: bool = False
     # --- SLO scheduling (ISSUE 8) ------------------------------------------
@@ -213,6 +242,10 @@ class _Slot:
     req: Request
     out: List[int]                 # generated token ids so far
     seq: int = 0                   # admission order (preemption tie-break)
+    # speculative decoding (ISSUE 9): per-request prompt-lookup draft
+    # state.  Rebuilt from prompt + out on every (re)admission and resume,
+    # so evictions, retries and park/resume need no extra bookkeeping.
+    drafter: Optional[NgramDrafter] = None
 
 
 @dataclasses.dataclass
@@ -260,8 +293,13 @@ class RequestScheduler:
     """
 
     def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None,
-                 mode: Optional[str] = None):
+                 mode: Optional[str] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.engine = engine
+        # wall-clock source for request_timeout_ms deadlines (ISSUE 9);
+        # injectable so deadline tests are deterministic, monotonic so a
+        # system clock step never expires (or revives) a request
+        self._clock: Callable[[], float] = clock or time.monotonic
         self.max_batch = max_batch or engine.scfg.max_batch
         mode = mode or engine.scfg.scheduler
         if mode not in ("continuous", "static"):
@@ -309,6 +347,11 @@ class RequestScheduler:
         self.fetch_hits: int = 0                # touched pages already hot
         self.prefetch_hits: int = 0             # ... warmed by the prefetcher
         self.cold_misses: int = 0               # demand host→HBM fetches
+        # --- speculative decoding observability (ISSUE 9) ------------------
+        self.spec_rounds: int = 0               # verify windows executed
+        self.spec_proposed: int = 0             # draft tokens proposed
+        self.spec_accepted: int = 0             # draft tokens accepted
+        self.spec_committed: int = 0            # tokens committed via windows
         # --- SLO scheduling (ISSUE 8) --------------------------------------
         self.parks: int = 0                     # preempt-park events
         self.resumes: int = 0                   # successful park resumes
@@ -383,6 +426,12 @@ class RequestScheduler:
                    else scfg.request_timeout_steps)
         if timeout:
             req.deadline_step = self.steps + timeout
+        # wall-clock deadline (ISSUE 9): EITHER deadline may fire — both
+        # sweep through the same TIMED_OUT teardown path
+        timeout_ms = (req.timeout_ms if req.timeout_ms is not None
+                      else scfg.request_timeout_ms)
+        if timeout_ms:
+            req.deadline_time = self._clock() + timeout_ms / 1000.0
         req.submit_step = self.steps
         self._tenant_gauge(req.tenant_id)["submitted"] += 1
         self.pending.append(req)
@@ -634,6 +683,9 @@ class RequestScheduler:
         host_table = np.zeros((b, mp), np.int32) if self.paged else None
         dirty = [False]
         fault_streak = 0           # consecutive batch-wide decode faults
+        # speculative decoding (ISSUE 9): width of the verify window the
+        # decode step runs through the windowed kernels; 0/1 = sequential
+        spec_q = eng.scfg.spec_window if eng.scfg.spec_window > 1 else 0
         # tiered state (ISSUE 7): the host mirror of the device hot-slot
         # table, each row's pinned-hot write page, and each row's previous
         # selection (the prefetch oracle)
@@ -1008,66 +1060,78 @@ class RequestScheduler:
                     return None
                 push_tables()
 
-        def ensure_writable(i: int):
-            """Pre-decode page upkeep for resident row i: map the page its
-            next write lands in (allocating on page crossings) and COW any
-            still-shared target (structurally unreachable — sharing is
-            whole-page and the cache append-only — but guarded so a future
-            sharing policy cannot silently corrupt a shared page).  If the
-            pool is exhausted even after dropping cache entries, the row
-            evicts ITSELF to the queue (see evict_to_requeue).  Tiered:
-            also pins the write page hot (ensure_write_pin)."""
+        def ensure_writable(i: int, span: int = 1):
+            """Pre-decode page upkeep for resident row i: map every page
+            its next ``span`` writes can land in (allocating on page
+            crossings; a speculative verify window commits up to
+            spec_window tokens in one step, so its span covers the whole
+            window) and COW any still-shared target (structurally
+            unreachable — sharing is whole-page and the cache append-only —
+            but guarded so a future sharing policy cannot silently corrupt
+            a shared page).  If the pool is exhausted even after dropping
+            cache entries, the row evicts ITSELF to the queue (see
+            evict_to_requeue).  Tiered: also pins the write page hot
+            (ensure_write_pin)."""
             nonlocal cache
-            p = int(positions[i]) // ps
             ptab = tables[i]
-            if p >= ptab.n_pages:
-                if self.pool.pages_free < 1 and not drop_entries(1):
-                    evict_to_requeue(i)
-                    return
-                ptab.ensure_for_position(int(positions[i]))
-                host_table[i, :ptab.n_pages] = ptab.pages
-                dirty[0] = True
-            elif self.pool.refcount(ptab.pages[p]) > 1:
-                if self.pool.pages_free < 1 and not drop_entries(1):
-                    evict_to_requeue(i)
-                    return
-                old, new = ptab.ensure_exclusive(p)
-                if self.tiered:
-                    # score page: physical-id copy, always device-resident
-                    cache = eng.copy_score_page(cache, old, new)
-                    if old in pool.hot:
-                        slot = claim_slot({old, new})
-                        cache = eng.copy_page(cache, pool.hot[old], slot)
-                        pool.set_hot(new, slot)
-                    else:              # cold source: host-mirror duplicate
-                        faults.maybe_fault("cow_copy")
-                        pool.set_cold(new, {
-                            seg: {f: v.copy() for f, v in fl.items()}
-                            for seg, fl in pool.cold[old].items()})
-                    hot_dirty[0] = True
-                else:
-                    cache = eng.copy_page(cache, old, new)
-                host_table[i, p] = new
-                dirty[0] = True
-                self.cow_copies += 1
+            lo = int(positions[i]) // ps
+            hi = (int(positions[i]) + span - 1) // ps
+            for p in range(lo, hi + 1):
+                if p >= ptab.n_pages:
+                    if self.pool.pages_free < 1 and not drop_entries(1):
+                        evict_to_requeue(i)
+                        return
+                    ptab.ensure_for_position(p * ps)
+                    host_table[i, :ptab.n_pages] = ptab.pages
+                    dirty[0] = True
+                elif self.pool.refcount(ptab.pages[p]) > 1:
+                    if self.pool.pages_free < 1 and not drop_entries(1):
+                        evict_to_requeue(i)
+                        return
+                    old, new = ptab.ensure_exclusive(p)
+                    if self.tiered:
+                        # score page: physical-id copy, device-resident
+                        cache = eng.copy_score_page(cache, old, new)
+                        if old in pool.hot:
+                            slot = claim_slot({old, new})
+                            cache = eng.copy_page(cache, pool.hot[old], slot)
+                            pool.set_hot(new, slot)
+                        else:          # cold source: host-mirror duplicate
+                            faults.maybe_fault("cow_copy")
+                            pool.set_cold(new, {
+                                seg: {f: v.copy() for f, v in fl.items()}
+                                for seg, fl in pool.cold[old].items()})
+                        hot_dirty[0] = True
+                    else:
+                        cache = eng.copy_page(cache, old, new)
+                    host_table[i, p] = new
+                    dirty[0] = True
+                    self.cow_copies += 1
             if self.tiered:
                 ensure_write_pin(i)
 
-        def emit_token(i: int) -> bool:
-            """Stream row ``i``'s newest committed token through its
-            request's ``on_token`` callback (ISSUE 8).  A raising callback
-            is the client's failure signal: it fails (non-transiently,
-            unless the raised error says otherwise) THAT request alone.
-            Returns False when the row was torn down."""
+        def emit_tokens(i: int, n_new: int) -> bool:
+            """Stream row ``i``'s ``n_new`` newest committed tokens through
+            its request's ``on_token`` callback (ISSUE 8), in COMMIT ORDER
+            with contiguous indices.  ISSUE 9 bugfix: a verify window that
+            accepts k > 1 tokens fires the callback k times — once per
+            accepted token, never for rejected draft positions — so the
+            index sequence a client observes is exactly 0, 1, 2, ...
+            whatever mix of sequential and speculative steps committed
+            them.  A raising callback is the client's failure signal: it
+            fails (non-transiently, unless the raised error says
+            otherwise) THAT request alone — tokens already delivered stay
+            delivered.  Returns False when the row was torn down."""
             req = slots[i].req
             if req.on_token is None:
                 return True
-            tok = slots[i].out[-1]
-            try:
-                req.on_token(int(tok), len(slots[i].out) - 1)
-            except Exception as exc:
-                fail_resident(i, exc)
-                return False
+            base = len(slots[i].out) - n_new
+            for k in range(n_new):
+                try:
+                    req.on_token(int(slots[i].out[base + k]), base + k)
+                except Exception as exc:
+                    fail_resident(i, exc)
+                    return False
             return True
 
         # ---- preempt-park machinery (ISSUE 8) -----------------------------
@@ -1159,7 +1223,10 @@ class RequestScheduler:
             dirty[0] = True
             if self.tiered:
                 hot_dirty[0] = True  # hot rows rebuild from pool residency
-            slots[i] = _Slot(rec.req, out=rec.out, seq=next(admit_seq))
+            slots[i] = _Slot(rec.req, out=rec.out, seq=next(admit_seq),
+                             drafter=NgramDrafter(
+                                 list(rec.req.prompt) + rec.out)
+                             if spec_q else None)
             tokens[i] = rec.out[-1]
             positions[i] = rec.position
             transition(rec.req, RequestState.DECODING)
@@ -1315,13 +1382,23 @@ class RequestScheduler:
             if req.deadline_step is not None \
                     and self.steps >= req.deadline_step:
                 return RequestState.TIMED_OUT
+            if req.deadline_time is not None \
+                    and self._clock() >= req.deadline_time:
+                return RequestState.TIMED_OUT
             return None
 
         def _overdue_error(req: Request, state: RequestState):
             if state is RequestState.CANCELLED:
                 return RequestCancelled(f"req {req.req_id} cancelled")
+            if req.deadline_step is not None \
+                    and self.steps >= req.deadline_step:
+                return RequestTimeout(
+                    f"req {req.req_id} missed deadline step "
+                    f"{req.deadline_step}")
+            ms = (req.timeout_ms if req.timeout_ms is not None
+                  else self.engine.scfg.request_timeout_ms)
             return RequestTimeout(
-                f"req {req.req_id} missed deadline step {req.deadline_step}")
+                f"req {req.req_id} missed wall-clock deadline ({ms:g} ms)")
 
         while self.pending or self._active or self.parked \
                 or any(s is not None for s in slots):
@@ -1429,11 +1506,14 @@ class RequestScheduler:
                         continue
                     tok0 = int(np.asarray(tok_arr)[0])
                     slots[i] = _Slot(active.req, out=[tok0],
-                                     seq=next(admit_seq))
+                                     seq=next(admit_seq),
+                                     drafter=NgramDrafter(
+                                         list(active.req.prompt) + [tok0])
+                                     if spec_q else None)
                     tokens[i] = tok0
                     positions[i] = len(active.req.prompt)
                     self.admissions.append((self.steps, i, active.req.req_id))
-                    if not emit_token(i):
+                    if not emit_tokens(i, 1):
                         continue
                     if len(slots[i].out) >= active.req.max_new_tokens:
                         finish(i)
@@ -1455,8 +1535,14 @@ class RequestScheduler:
             if self.paged:
                 for i in range(b):
                     if slots[i] is not None:
+                        # speculative window: the verify step may commit up
+                        # to min(spec_window, remaining budget) tokens in
+                        # one shot — map every page that span can touch
+                        span = 1 if not spec_q else \
+                            min(spec_q, slots[i].req.max_new_tokens
+                                - len(slots[i].out))
                         try:
-                            ensure_writable(i)
+                            ensure_writable(i, span)
                         except HotTierThrash as exc:
                             shed_thrash(i, exc)    # load, not the request
                         except Exception as exc:   # alloc/COW fault: only
@@ -1490,6 +1576,13 @@ class RequestScheduler:
             try:
                 # batch-wide fault point; BEFORE _decode donates the cache
                 faults.maybe_fault("decode_step")
+                if spec_q:
+                    # draft-verify fault point (ISSUE 9): fires before the
+                    # windowed jit call, while the cache is still whole —
+                    # the whole window round retries like a decode_step
+                    # fault (drafting is pure host work, re-proposing is
+                    # free and deterministic)
+                    faults.maybe_fault("draft_verify")
             except faults.InjectedFault:
                 # nothing ran: retry the whole step, bounded so a rate-1.0
                 # schedule cannot spin forever
@@ -1499,38 +1592,106 @@ class RequestScheduler:
                     raise
                 continue
             fault_streak = 0
-            if self.tiered:
-                logits = tiered_decode(prefetched)
-                if logits is None:      # fetch faults tore every row down
-                    continue
+            if spec_q:
+                # ---- speculative verify window (ISSUE 9): ONE latent
+                # selection + ONE windowed reconstruction serves the
+                # pending token plus spec_q-1 prompt-lookup drafts; greedy
+                # verify accepts the longest matching prefix and the
+                # masked commit writes ONLY accepted positions, so cache
+                # bytes and the token stream stay bit-identical to
+                # sequential decode whatever the drafts were --------------
+                wt = np.zeros((b, spec_q), np.int32)
+                for i in range(b):
+                    if slots[i] is not None:
+                        wt[i, 0] = tokens[i]
+                        wt[i, 1:] = slots[i].drafter.propose(spec_q - 1)
+                win_logits, aux = eng._decode_window(
+                    jnp.asarray(wt), cache, jnp.asarray(positions))
+                live = [i for i in range(b) if slots[i] is not None]
+                pick = faults.maybe_pick("nan_logits", len(live))
+                if pick is not None:
+                    # poison ONE live row's window logits — the finiteness
+                    # verdict must confine the blast radius to that row
+                    win_logits = win_logits.at[live[pick]].set(jnp.nan)
+                wl = np.asarray(win_logits)                   # (B, Q, V)
+                preds = wl.argmax(axis=-1).astype(np.int32)   # (B, Q)
+                finite = np.isfinite(wl).all(axis=(1, 2))
+                n_matched = np.cumprod(
+                    wt[:, 1:] == preds[:, :-1], axis=1).sum(axis=1)
+                n_commit = np.zeros((b,), np.int32)
+                emitted: List[List[int]] = [[] for _ in range(b)]
+                for i in range(b):
+                    if slots[i] is None or not finite[i]:
+                        continue
+                    left = slots[i].req.max_new_tokens - len(slots[i].out)
+                    n_emit = int(min(n_matched[i] + 1, left))
+                    row = [int(wt[i, 1 + k]) for k in range(n_emit - 1)]
+                    row.append(int(preds[i, n_emit - 1]))
+                    emitted[i] = row
+                    n_commit[i] = n_emit
+                # the committed window slots are the PENDING token plus the
+                # accepted drafts; the last emitted token becomes the new
+                # pending token (its KV lands next round).  Rejected and
+                # idle rows commit nothing (OOB-drop scatters).
+                cache = eng._commit_window(cache, aux,
+                                           jnp.asarray(positions),
+                                           jnp.asarray(n_commit))
+                self.steps += 1
+                self.spec_rounds += 1
+                for i in range(b):
+                    if slots[i] is None:
+                        continue
+                    if not finite[i]:
+                        fail_resident(i, NanLogitsError(
+                            f"req {slots[i].req.req_id}: non-finite window "
+                            f"logits at step {self.steps}"))
+                        continue
+                    row = emitted[i]
+                    self.spec_proposed += spec_q - 1
+                    self.spec_accepted += min(int(n_matched[i]),
+                                              len(row) - 1)
+                    self.spec_committed += len(row)
+                    slots[i].out.extend(row)
+                    slots[i].drafter.extend(row)
+                    tokens[i] = row[-1]
+                    positions[i] += len(row)
+                    if not emit_tokens(i, len(row)):
+                        continue
+                    if len(slots[i].out) >= slots[i].req.max_new_tokens:
+                        finish(i)
             else:
-                logits, cache = eng._decode(
-                    jnp.asarray(tokens), cache, jnp.asarray(positions))
-            live = [i for i in range(b) if slots[i] is not None]
-            pick = faults.maybe_pick("nan_logits", len(live))
-            if pick is not None:
-                # poison ONE live row's logits — the blast radius the
-                # sample_checked verdict must confine to that row
-                logits = logits.at[live[pick]].set(jnp.nan)
-            key, sub = jax.random.split(key)
-            tok_arr, ok = eng.sample_checked(logits, sub)
-            new_toks = np.asarray(tok_arr)
-            self.steps += 1
-            for i in range(b):
-                if slots[i] is None:
-                    continue
-                if not ok[i]:
-                    fail_resident(i, NanLogitsError(
-                        f"req {slots[i].req.req_id}: non-finite logits or "
-                        f"out-of-vocab token at step {self.steps}"))
-                    continue
-                slots[i].out.append(int(new_toks[i]))
-                tokens[i] = new_toks[i]
-                positions[i] += 1
-                if not emit_token(i):
-                    continue
-                if len(slots[i].out) >= slots[i].req.max_new_tokens:
-                    finish(i)
+                if self.tiered:
+                    logits = tiered_decode(prefetched)
+                    if logits is None:  # fetch faults tore every row down
+                        continue
+                else:
+                    logits, cache = eng._decode(
+                        jnp.asarray(tokens), cache, jnp.asarray(positions))
+                live = [i for i in range(b) if slots[i] is not None]
+                pick = faults.maybe_pick("nan_logits", len(live))
+                if pick is not None:
+                    # poison ONE live row's logits — the blast radius the
+                    # sample_checked verdict must confine to that row
+                    logits = logits.at[live[pick]].set(jnp.nan)
+                key, sub = jax.random.split(key)
+                tok_arr, ok = eng.sample_checked(logits, sub)
+                new_toks = np.asarray(tok_arr)
+                self.steps += 1
+                for i in range(b):
+                    if slots[i] is None:
+                        continue
+                    if not ok[i]:
+                        fail_resident(i, NanLogitsError(
+                            f"req {slots[i].req.req_id}: non-finite logits "
+                            f"or out-of-vocab token at step {self.steps}"))
+                        continue
+                    slots[i].out.append(int(new_toks[i]))
+                    tokens[i] = new_toks[i]
+                    positions[i] += 1
+                    if not emit_tokens(i, 1):
+                        continue
+                    if len(slots[i].out) >= slots[i].req.max_new_tokens:
+                        finish(i)
             if self.paged:
                 row = {
                     "step": self.steps,
@@ -1668,8 +1829,12 @@ class RequestScheduler:
                 transition(req, RequestState.PREFILLING)
                 transition(req, RequestState.DECODING)
             mnt = max(r.max_new_tokens for r in batch)
-            results = self.engine.generate(
-                [r.prompt for r in batch], max_new_tokens=mnt)
+            if self.engine.scfg.spec_window > 1:
+                results = self.engine.generate_speculative(
+                    [r.prompt for r in batch], max_new_tokens=mnt)
+            else:
+                results = self.engine.generate(
+                    [r.prompt for r in batch], max_new_tokens=mnt)
             for req, res in zip(batch, results):
                 req.result = GenerationResult(
                     res.tokens[:req.max_new_tokens], res.prompt_len,

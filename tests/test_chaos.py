@@ -262,6 +262,47 @@ def test_decode_step_fault_retries_step(eng, model):
              schedule=faults.FaultSchedule(at={"decode_step": [0, 1, 2]}))
 
 
+def test_draft_verify_fault_retries_round_token_exact(model):
+    """ISSUE 9: ``draft_verify`` fires BEFORE the windowed verify jit
+    call, so an injected fault retries the whole round — drafting is pure
+    host work, re-proposing is free — and the run stays token-exact vs
+    the fault-free speculative run, cache audited every step."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_new_tokens=8, max_batch=2,
+                       sals=sals, prefill_chunk=8, page_size=16,
+                       prefill_token_budget=8, audit_every=1,
+                       spec_window=4, temperature=0.0)
+    eng_s = ServeEngine(params, proj, cfg, scfg)
+    rng = np.random.default_rng(31)
+    base = rng.integers(1, 128, size=8).astype(np.int32)
+    prompts = [np.tile(base, 4)[:20], np.tile(base, 4)[:26]]
+
+    def run(schedule=None):
+        reqs = _reqs(prompts, mnt=9)
+        sched = _run(eng_s, reqs, schedule=schedule)
+        for r in reqs:
+            assert r.state is RequestState.DONE, (r.req_id, r.state, r.error)
+        _drain_check(sched)
+        return [r.result.tokens.copy() for r in reqs], sched
+
+    want, s0 = run()
+    assert s0.step_faults == 0 and s0.spec_rounds > 0
+    got, s1 = run(faults.FaultSchedule(at={"draft_verify": [1]}))
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(g, w)
+    # the round retried as a STEP fault: no request paid, no row retry
+    assert s1.step_faults == 1 and s1.retries == 0 and s1.failures == 0
+    # rounds may re-batch (the retry shifts admission interleaving) but
+    # every token still commits through a verify round
+    assert s1.spec_rounds > 0
+    assert s1.spec_committed == sum(len(t) for t in got) - len(got)
+    # consecutive strikes beyond the bound must propagate, not spin
+    reqs = _reqs(prompts[:1], mnt=6)
+    with pytest.raises(faults.InjectedFault):
+        _run(eng_s, reqs,
+             schedule=faults.FaultSchedule(at={"draft_verify": [0, 1, 2]}))
+
+
 # ---------------------------------------------------------------------------
 # deadlines / cancellation / backpressure
 # ---------------------------------------------------------------------------

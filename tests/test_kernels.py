@@ -542,3 +542,41 @@ def test_ragged_fused_path_materializes_no_cache_scale_buffers():
             if size >= limit:
                 offenders.append((eqn.primitive.name, ov.aval.shape))
     assert not offenders, offenders
+
+
+def test_window_fused_path_materializes_no_cache_scale_buffers():
+    """ISSUE 9: the WINDOWED (speculative verify, q_len > 1) hot path must
+    uphold the same jaxpr no-dense-copy invariant — one selection and one
+    in-kernel gather/dequant serve all q_len window queries without any
+    cache-scale intermediate."""
+    b, ql, s, r, r_star, n_kv, dh, h, nc, vg = 3, 4, 512, 32, 16, 2, 64, \
+        4, 64, 32
+    kvd = n_kv * dh
+    args = _fused_inputs(b, h, n_kv, dh, s, r, nc, k_int8=True, v_bits=8,
+                         v_group=vg, seed=17)
+    _, k_lat, k_scale, v_q, v_scale, v_zero, u = args[:7]
+    q = jax.random.normal(KEY, (b, ql, h, dh), jnp.float32)
+    q_lat = jax.random.normal(KEY, (b, r_star))
+    pos = jnp.array([500, 200, 37], jnp.int32)          # window bases
+
+    def window_pipeline(q, q_lat, k_lat, k_scale, v_q, v_scale, v_zero, u,
+                        pos):
+        idx, valid = ops.latent_topk(q_lat, k_lat, k_scale, pos + ql - 1,
+                                     n_critical=nc, n_sink=4, n_recent=16,
+                                     backend="pallas")
+        return ops.sparse_recon_attention_window(
+            q, k_lat, k_scale, v_q, v_scale, v_zero, u, idx, valid, pos,
+            n_kv=n_kv, n_recent=16, v_bits=8, v_group=vg, backend="pallas")
+
+    jaxpr = jax.make_jaxpr(window_pipeline)(q, q_lat, k_lat, k_scale, v_q,
+                                            v_scale, v_zero, u, pos)
+    limit = min(b * s * r_star,              # old score slice/pad copy
+                b * s * r,                   # old dense dequant pass
+                b * nc * kvd)                # old gathered value buffer
+    offenders = []
+    for eqn in _walk_eqns(jaxpr.jaxpr, []):
+        for ov in eqn.outvars:
+            size = int(np.prod(ov.aval.shape)) if ov.aval.shape else 1
+            if size >= limit:
+                offenders.append((eqn.primitive.name, ov.aval.shape))
+    assert not offenders, offenders

@@ -416,6 +416,102 @@ def test_midstream_cancel_flushes_partial(model):
     assert [i for i, _t in toks] == list(range(len(toks)))
 
 
+def test_streaming_contiguous_under_multi_token_commits(model):
+    """Regression (ISSUE 9 bugfix): when a verify round accepts > 1 token,
+    on_token must fire once per ACCEPTED token in commit order with
+    contiguous indices — not once per round, not for rejected draft
+    positions.  Repetitive prompts force multi-token rounds (observable as
+    spec_committed > spec_rounds)."""
+    cfg, params, sals, proj = model
+    scfg = ServeConfig(max_seq_len=128, max_batch=2, temperature=0.0,
+                       sals=sals, spec_window=4)
+    eng = ServeEngine(params, proj, cfg, scfg)
+    rng = np.random.default_rng(23)
+    base = rng.integers(1, 127, size=8)
+    prompts = [np.tile(base, 3).astype(np.int32)[: 20 + 4 * i]
+               for i in range(2)]
+    streams = {i: [] for i in range(2)}
+    reqs = [Request(p, max_new_tokens=15,
+                    on_token=lambda t, i, k=k: streams[k].append((i, t)))
+            for k, p in enumerate(prompts)]
+    sched = RequestScheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    # the window actually amortized: fewer verify rounds than tokens, so
+    # some on_token burst delivered several accepted tokens at once
+    assert sched.spec_committed > sched.spec_rounds > 0
+    for k, r in enumerate(reqs):
+        assert r.done
+        assert [i for i, _t in streams[k]] == list(range(15))
+        assert [t for _i, t in streams[k]] == r.result.tokens.tolist()
+
+
+# ------------------------------------------------------- wall-clock deadline
+
+
+def test_wall_clock_timeout_tears_down(model):
+    """ISSUE 9: Request.timeout_ms arms a wall-clock deadline on the
+    injected scheduler clock — same TIMED_OUT teardown as the step
+    deadline, partial stream flushed as complete=False."""
+    eng = _dense_engine(model)
+    now = [0.0]
+    sched = RequestScheduler(eng, clock=lambda: now[0])
+    prompts = _prompts([14, 12], seed=19)
+    seen = []
+    victim = Request(prompts[0], max_new_tokens=8, timeout_ms=110.0,
+                     on_token=lambda t, i: seen.append(t))
+    other = Request(prompts[1], max_new_tokens=8)
+    sched.submit(victim)
+    sched.submit(other)
+
+    def on_step(sch, step):
+        now[0] += 0.020                    # 20 ms of fake wall time / step
+
+    sched.run(on_step=on_step)
+    assert victim.state.value == "timed_out"
+    assert "ms" in str(victim.error)
+    assert victim.result is not None and not victim.result.complete
+    assert 0 < len(victim.result.tokens) < 8
+    assert victim.result.tokens.tolist() == seen   # flushed == streamed
+    assert other.done and len(other.result.tokens) == 8
+
+
+def test_wall_clock_timeout_from_serve_config_default(model):
+    """ServeConfig.request_timeout_ms applies to every request that does
+    not carry its own timeout_ms; 0 (default) arms nothing."""
+    eng = _dense_engine(model, request_timeout_ms=45.0)
+    now = [0.0]
+    sched = RequestScheduler(eng, clock=lambda: now[0])
+    r = Request(_prompts([13], seed=21)[0], max_new_tokens=8)
+    sched.submit(r)
+    assert r.deadline_time is not None
+    sched.run(on_step=lambda s, step: now.__setitem__(0, now[0] + 0.030))
+    assert r.state.value == "timed_out"
+    # no wall-clock deadline when the knob is off
+    eng2 = _dense_engine(model)
+    sched2 = RequestScheduler(eng2, clock=lambda: 1e9)
+    r2 = Request(_prompts([13], seed=21)[0], max_new_tokens=4)
+    sched2.submit(r2)
+    assert r2.deadline_time is None
+    sched2.run()
+    assert r2.done
+
+
+def test_wall_clock_and_step_deadlines_coexist(model):
+    """Either deadline fires first; with a generous wall clock the step
+    deadline still tears the request down."""
+    eng = _dense_engine(model, request_timeout_steps=2)
+    now = [0.0]
+    sched = RequestScheduler(eng, clock=lambda: now[0])
+    r = Request(_prompts([28], seed=25)[0], max_new_tokens=8,
+                timeout_ms=1e6)
+    sched.submit(r)
+    sched.run()
+    assert r.state.value == "timed_out"
+    assert "step" in str(r.error)
+
+
 def test_raising_stream_callback_fails_only_that_request(model):
     """A callback that raises is a client-side failure of ONE request:
     that request FAILs with the callback's exception and a partial
