@@ -295,13 +295,13 @@ def run() -> list:
         "speculative_traffic_model": spec_rows,
     }
     # measured cells emitted by other benchmarks (overlap_score writes
-    # selection_stability, throughput writes slo_report and
-    # speculative_throughput) live in the same file — carry them across
-    # re-emits
+    # selection_stability, throughput writes slo_report,
+    # speculative_throughput and obs_overhead) live in the same file —
+    # carry them across re-emits
     if BENCH_JSON.exists():
         prev = json.loads(BENCH_JSON.read_text())
         for section in ("selection_stability", "slo_report",
-                        "speculative_throughput"):
+                        "speculative_throughput", "obs_overhead"):
             if section in prev:
                 payload[section] = prev[section]
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")

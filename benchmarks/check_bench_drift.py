@@ -41,12 +41,14 @@ MODELED_SECTIONS = {
 
 # measured (not recomputable here) but REQUIRED: the step-to-step
 # selection-stability cell written by ``benchmarks/overlap_score.py`` is
-# the tiered prefetcher's hit-rate model, and the per-class SLO and
+# the tiered prefetcher's hit-rate model, the per-class SLO and
 # speculative-decode cells written by ``benchmarks/throughput.py`` are the
 # scheduling-policy story (FIFO vs evict vs park) and the verify-window
-# acceptance/throughput story — a re-emit must not drop any of them
+# acceptance/throughput story, and the telemetry-cost cell (also
+# ``benchmarks/throughput.py``) is the ISSUE 10 gate that observability
+# stays off the hot path — a re-emit must not drop any of them
 MEASURED_SECTIONS = ("selection_stability", "slo_report",
-                     "speculative_throughput")
+                     "speculative_throughput", "obs_overhead")
 
 
 def _normalize(rows):
@@ -79,7 +81,8 @@ def main() -> int:
             print(f"ok: {section} ({len(want)} rows)")
     measured_by = {"selection_stability": "benchmarks.overlap_score",
                    "slo_report": "benchmarks.throughput",
-                   "speculative_throughput": "benchmarks.throughput"}
+                   "speculative_throughput": "benchmarks.throughput",
+                   "obs_overhead": "benchmarks.throughput"}
     for section in MEASURED_SECTIONS:
         got = committed.get(section)
         if not got:
@@ -89,6 +92,32 @@ def main() -> int:
                   f"{measured_by[section]}' to measure it")
         else:
             print(f"ok: {section} present ({len(got)} rows, measured)")
+    for row in committed.get("obs_overhead") or []:
+        if row.get("overhead_pct", 0) > row.get("budget_pct", 0):
+            bad = True
+            print(f"DRIFT: obs_overhead {row.get('mode')!r} measured "
+                  f"{row.get('overhead_pct')}% > budget "
+                  f"{row.get('budget_pct')}% — telemetry has crept onto "
+                  "the hot path")
+    # the telemetry exporters themselves are drift-checked in-process: an
+    # exported snapshot / Prometheus page that stops validating would break
+    # every scrape, so it fails CI here rather than in production
+    from repro.obs.metrics import (MetricsRegistry, validate_prometheus,
+                                   validate_snapshot)
+    reg = MetricsRegistry()
+    reg.counter("drift_check_total", "exporter self-test").inc()
+    reg.gauge("drift_check_gauge", "exporter self-test",
+              labelnames=("tenant",)).set(2.0, tenant="t0")
+    reg.histogram("drift_check_ms", "exporter self-test").observe(3.0)
+    errs = validate_snapshot(reg.snapshot()) + \
+        validate_prometheus(reg.to_prometheus())
+    if errs:
+        bad = True
+        print("DRIFT: telemetry exporter schema self-test failed:")
+        for e in errs:
+            print(f"  {e}")
+    else:
+        print("ok: obs exporters validate (snapshot + prometheus)")
     if bad:
         print("re-run: PYTHONPATH=src python -m benchmarks.attention_latency")
         return 1

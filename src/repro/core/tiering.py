@@ -215,6 +215,8 @@ class TieredPagePool(PagePool):
             raise PagerInvariantError(f"finish_fetch of {kind} page {pid}")
         self.hot[pid] = slot
         self.fetches += 1
+        if _pager._metrics_hook is not None:
+            _pager._metrics_hook("tier_fetch")
         self.touch([pid])
 
     def abort_fetch(self, pid: int) -> None:
@@ -244,6 +246,8 @@ class TieredPagePool(PagePool):
         self._slots_free.append(slot)
         self.cold[pid] = mirror
         self.spills += 1
+        if _pager._metrics_hook is not None:
+            _pager._metrics_hook("tier_spill")
 
     # -- audit ---------------------------------------------------------------
 

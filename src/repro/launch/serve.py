@@ -194,6 +194,18 @@ def main() -> None:
                     help="run the cross-structure pager invariant audit "
                          "every N scheduler steps (0 = off); host-side "
                          "O(pages + residents) per run")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the unified metrics registry at drain: a "
+                         "path ending in .json gets the JSON snapshot "
+                         "schema, anything else Prometheus text exposition")
+    ap.add_argument("--trace-out", default="",
+                    help="write per-request lifecycle spans as Chrome-"
+                         "trace-event JSON (load in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--obs-snapshot-every", type=int, default=0,
+                    help="re-export --metrics-out every N scheduler steps "
+                         "while serving (0 = only at drain); implies "
+                         "telemetry on")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -258,12 +270,33 @@ def main() -> None:
                        tenant_max_inflight=args.tenant_max_inflight,
                        gauge_history=args.gauge_history,
                        sals=sals or SALSConfig(enabled=False))
+    # telemetry must be installed BEFORE the scheduler is built — it
+    # adopts the active registry/tracer/accountant in __init__
+    obs_handles = None
+    if args.metrics_out or args.trace_out or args.obs_snapshot_every:
+        from repro import obs
+        obs_handles = obs.enable(
+            gauge_history=args.gauge_history, cfg=cfg, sals=sals,
+            with_traffic=sals is not None and cfg.has_attention)
     engine = ServeEngine(params, projectors, cfg, scfg,
                          n_groups=args.groups)  # validates divisibility
     sched = RequestScheduler(engine)
 
+    def write_metrics(path):
+        from repro.obs import metrics as obs_metrics
+        reg = obs_handles["registry"]
+        with open(path, "w") as f:
+            f.write(obs_metrics.snapshot_to_json(reg)
+                    if path.endswith(".json") else reg.to_prometheus())
+
+    timeline = None
+    if args.stream:
+        from repro.obs.trace import RequestTimeline
+        timeline = RequestTimeline(
+            clock=time.time,
+            registry=obs_handles["registry"] if obs_handles else None)
+
     rng = np.random.default_rng(args.seed)
-    stream_stamps: dict = {}
     for i in range(args.requests):
         plen = max(4, args.prompt_len + int(rng.integers(-8, 8)))
         prompt = corpus.batch(50_000 + i, 1, plen)["tokens"][0]
@@ -272,14 +305,19 @@ def main() -> None:
         req = Request(prompt, max_new_tokens=args.max_new_tokens,
                       priority=i % args.priority_classes,
                       tenant_id=f"tenant{i % 2}")
-        if args.stream:
-            stream_stamps[req.req_id] = [time.time()]
-            req.on_token = lambda tok, idx, rid=req.req_id: \
-                stream_stamps[rid].append(time.time())
+        if timeline is not None:
+            timeline.submitted(req.req_id)
+            timeline.attach(req)
         sched.submit(req)
 
+    on_step = None
+    if args.obs_snapshot_every and args.metrics_out:
+        def on_step(_sched, step, _every=args.obs_snapshot_every):
+            if step % _every == 0:
+                write_metrics(args.metrics_out)
+
     t0 = time.time()
-    done = sched.run()
+    done = sched.run(on_step=on_step)
     dt = time.time() - t0
     ok = [r for r in done if r.done]
     total_new = sum(r.result.steps for r in ok)
@@ -325,16 +363,29 @@ def main() -> None:
                   f"({g['admitted_tokens']} tokens), deferrals "
                   f"rate={g['rate_deferrals']} cap={g['cap_deferrals']}, "
                   f"max wait {g['max_wait_steps']} steps")
-    if args.stream:
-        ttfts, gaps = [], []
-        for ts in stream_stamps.values():
-            if len(ts) > 1:
-                ttfts.append((ts[1] - ts[0]) * 1e3)
-                gaps.extend(np.diff(np.asarray(ts)) * 1e3)
-        if gaps:
-            print(f"[serve] streaming: mean ttft {np.mean(ttfts):.1f}ms, "
-                  f"p99 inter-token {np.percentile(gaps, 99):.1f}ms "
+    if timeline is not None:
+        s = timeline.summary()
+        if s["ttft_p50_ms"] is not None:
+            print(f"[serve] streaming: p50 ttft {s['ttft_p50_ms']:.1f}ms, "
+                  f"p99 inter-token {s['inter_token_p99_ms'] or 0:.1f}ms "
                   f"(client-observed, includes queueing)")
+    if obs_handles is not None:
+        if args.metrics_out:
+            write_metrics(args.metrics_out)
+            print(f"[serve] metrics -> {args.metrics_out}")
+        if args.trace_out:
+            tracer = obs_handles["tracer"]
+            tracer.dump(args.trace_out)
+            print(f"[serve] trace -> {args.trace_out} "
+                  f"({tracer.ended} spans, "
+                  f"{'balanced' if tracer.balanced() else 'UNBALANCED'})")
+        traffic = obs_handles["traffic"]
+        if traffic is not None and traffic.reconciled:
+            rep = traffic.report()
+            meas = sum(rep["measured"].values())
+            print(f"[serve] traffic: {rep['reconciled']} steps reconciled "
+                  f"vs benchmarks/memory_access.py, {meas / 1e6:.1f} MB "
+                  f"measured, drifts={rep['drifts']}")
     for r in ok[:3]:
         print(f"  req {r.req_id}: prompt[{r.result.prompt_len}] -> "
               f"{r.result.tokens[:10]}...")

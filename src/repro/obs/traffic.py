@@ -1,0 +1,305 @@
+"""Measured-vs-modeled traffic accountant: the §4.5 ledger as a runtime
+invariant.
+
+Every perf PR in this repo is justified against the HBM-traffic ledger in
+``benchmarks/memory_access.py`` — but that ledger is *modeled only*.
+:class:`TrafficAccountant` closes the loop: each decode step it counts
+the bytes the fused kernels ACTUALLY move, derived from the shapes and
+dtypes of the live cache arena (the same arrays the kernels stream —
+``k_lat``/``k_score`` itemsize gives ``b_lat``, the quantized value
+record gives ``v_tok``, the sink/recent buffers give the window, the
+resident projector gives ``U_r``), and reconciles them term by term
+against ``decode_stage_bytes`` / ``tiered_capacity_model`` /
+``speculative_traffic_model``.  Divergence beyond ``tol`` raises a typed
+:class:`TrafficDriftError` — change the cache layout without updating
+the ledger (or vice versa) and serving fails loudly instead of the
+ROADMAP quietly lying.
+
+Ledger terms per decode step per SALS layer (fused path):
+
+* score stream   ``s_i·(r*·b_lat + b_scale) + 2·nb·kb·8``  (candidates)
+* selected       ``N_c·(r·b_lat + b_scale + v_tok) + N_c·8``
+* window K/V     ``(n_sink + n_recent)·2·kvd·b_win``
+* projector      ``kvd·r·b_U``
+* spec window    ``q_len·2·kvd·b_win``  (verify windows only)
+* tier transfer  ``pages·ps·payload_bpt·n_layers``  (host↔HBM mirrors,
+  measured from the actual numpy mirror ``nbytes``)
+
+Scope: SALS layers only — skip layers run full attention outside the
+§4.5 ledger.  Install contract matches ``serve/faults.py``.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+__all__ = ["TrafficAccountant", "TrafficDriftError",
+           "active", "install", "installed", "uninstall"]
+
+_DECODE_TERMS = ("score_bytes", "selected_bytes", "window_bytes", "u_bytes")
+
+
+class TrafficDriftError(RuntimeError):
+    """Measured bytes diverged from the modeled ledger beyond tolerance."""
+
+    def __init__(self, term: str, measured: float, modeled: float,
+                 tol: float, where: str):
+        self.term, self.measured, self.modeled = term, measured, modeled
+        self.tol, self.where = tol, where
+        super().__init__(
+            f"traffic drift[{where}] term {term!r}: measured {measured:.1f}"
+            f" vs modeled {modeled:.1f} B (tol {tol:.2%}) — the cache "
+            "layout and benchmarks/memory_access.py disagree")
+
+
+def _rel_close(a: float, b: float, tol: float) -> bool:
+    return abs(a - b) <= tol * max(abs(a), abs(b), 1.0)
+
+
+class TrafficAccountant:
+    """Counts actual bytes per decode step and reconciles vs the model.
+
+    Construct with the engine's model config + SALS config; byte widths
+    are captured lazily from the first live cache arena seen (so they are
+    the engine's real dtypes, not assumptions).  The scheduler calls
+    :meth:`observe_decode` once per decode step / verify window and
+    :meth:`observe_transfer` per tier fetch/spill; both reconcile
+    immediately and accumulate onto the attached registry when present.
+    """
+
+    def __init__(self, cfg, sals, tol: float = 0.01, registry=None,
+                 strict: bool = True):
+        self.cfg = cfg
+        self.sals = sals
+        self.tol = tol
+        self.strict = strict
+        self.registry = registry
+        self.widths: Optional[dict] = None
+        self.steps = 0
+        self.reconciled = 0
+        self.drifts = 0
+        self.measured_totals: Dict[str, float] = {
+            t: 0.0 for t in _DECODE_TERMS}
+        self.measured_totals.update(spec_window_bytes=0.0,
+                                    fetch_bytes=0.0, spill_bytes=0.0)
+        self.modeled_totals = dict(self.measured_totals)
+        self._bytes_ctr = None
+        if registry is not None:
+            self._bytes_ctr = registry.counter(
+                "traffic_bytes_total",
+                "actual HBM/PCIe bytes moved per ledger term",
+                labelnames=("term", "source"))
+        self._model = None   # lazy: benchmarks package import
+        # decode_stage_bytes is pure in (cfg, sals, s) — memoize per s so
+        # the hot path pays dict arithmetic, not a model re-derivation.
+        # The MEASURED side is never cached: it must re-read ``widths``
+        # every step so a layout change (or test tamper) surfaces.
+        self._model_rows: Dict[int, dict] = {}
+
+    # -- model access (benchmarks lives at the repo root, not in repro) ----
+
+    def _ledger(self):
+        if self._model is None:
+            try:
+                from benchmarks import memory_access
+            except ImportError as e:     # repo root not on sys.path
+                raise RuntimeError(
+                    "TrafficAccountant needs the benchmarks package "
+                    "(run from the repo root)") from e
+            self._model = memory_access
+        return self._model
+
+    # -- width capture -----------------------------------------------------
+
+    def _capture(self, engine, cache):
+        segs = engine._latent_segs(cache)
+        if not segs:
+            # every layer is a skip layer — the §4.5 ledger is empty and
+            # there is nothing to reconcile (scope: SALS layers only)
+            self.widths = {}
+            return self.widths
+        seg = next(iter(segs.values()))
+        n_layers = sum(s.k_lat.shape[0] for s in segs.values())
+        v_tok = (seg.v_q.shape[-1] * seg.v_q.dtype.itemsize
+                 + seg.v_scale.shape[-1] * seg.v_scale.dtype.itemsize
+                 + seg.v_zero.shape[-1] * seg.v_zero.dtype.itemsize)
+        kvd = seg.sink_k.shape[-1] * seg.sink_k.shape[-2]
+        score_src = seg.k_score if seg.k_score is not None else None
+        r_star = (score_src.shape[-1] if score_src is not None
+                  else self.sals.score_rank(kvd))
+        u = engine.projectors["u"]
+        self.widths = {
+            "n_layers": n_layers,
+            "r": seg.k_lat.shape[-1],
+            "r_star": r_star,
+            "lat_b": seg.k_lat.dtype.itemsize,
+            "scale_b": (seg.k_scale.dtype.itemsize
+                        if seg.k_scale is not None else 0),
+            "v_tok": v_tok,
+            "kvd": kvd,
+            "win_tokens": seg.sink_k.shape[-3] + seg.recent_k.shape[-3],
+            "win_b": seg.sink_k.dtype.itemsize,
+            "u_bytes": u.shape[-2] * u.shape[-1] * u.dtype.itemsize,
+        }
+        return self.widths
+
+    # -- measured side -----------------------------------------------------
+
+    _cand_shape = None
+
+    def _measured_row(self, s: int) -> dict:
+        """Actual fused-path bytes for ONE row at context length ``s``,
+        per SALS layer — every width read off the live arena."""
+        if self._cand_shape is None:
+            from repro.kernels import latent_score
+            # instance attr, so no descriptor binding: plain function ref
+            self._cand_shape = latent_score.topk_candidate_shape
+        w = self.widths
+        nb, kb = self._cand_shape(s, self.sals.n_critical)
+        nc = min(s, self.sals.n_critical)
+        return {
+            "score_bytes": s * (w["r_star"] * w["lat_b"] + w["scale_b"])
+            + 2 * nb * kb * 8,
+            "selected_bytes": nc * (w["r"] * w["lat_b"] + w["scale_b"]
+                                    + w["v_tok"]) + nc * 8,
+            "window_bytes": w["win_tokens"] * 2 * w["kvd"] * w["win_b"],
+            "u_bytes": w["u_bytes"],
+        }
+
+    # -- observation + reconciliation -------------------------------------
+
+    def _drift(self, term, measured, modeled, where):
+        self.drifts += 1
+        if self.registry is not None:
+            self.registry.counter(
+                "traffic_drift_total", "reconciliation failures",
+                labelnames=("term",)).inc(term=term)
+        if self.strict:
+            raise TrafficDriftError(term, measured, modeled, self.tol,
+                                    where)
+
+    def observe_decode(self, engine, cache, positions, *, q_len: int = 1):
+        """Account one decode step (or one verify window when
+        ``q_len > 1``) for live rows at context lengths ``positions``.
+        Reconciles each ledger term against ``decode_stage_bytes`` (and
+        the window-K/V term of ``speculative_traffic_model``)."""
+        if not positions:
+            return
+        if self.widths is None:
+            self._capture(engine, cache)
+        if not self.widths:       # zero SALS layers: empty ledger scope
+            return
+        mem = self._ledger()
+        nl = self.widths["n_layers"]
+        meas = {t: 0.0 for t in _DECODE_TERMS}
+        model = {t: 0.0 for t in _DECODE_TERMS}
+        for s in positions:
+            s = int(s)
+            m = self._measured_row(s)
+            ref = self._model_rows.get(s)
+            if ref is None:
+                ref = self._model_rows[s] = mem.decode_stage_bytes(
+                    self.cfg, self.sals, s, fused=True)
+            for t in _DECODE_TERMS:
+                meas[t] += m[t] * nl
+                model[t] += ref[t] * nl
+        where = f"decode step {self.steps}"
+        for t in _DECODE_TERMS:
+            if not _rel_close(meas[t], model[t], self.tol):
+                self._drift(t, meas[t], model[t], where)
+            self.measured_totals[t] += meas[t]
+            self.modeled_totals[t] += model[t]
+            if self._bytes_ctr is not None:
+                self._bytes_ctr.inc(meas[t], term=t, source="measured")
+                self._bytes_ctr.inc(model[t], term=t, source="modeled")
+        if q_len > 1:
+            # verify window: the only EXTRA bytes are its in-flight K/V
+            w = self.widths
+            meas_win = len(positions) * q_len * 2 * w["kvd"] * w["win_b"] \
+                * nl
+            ref = mem.speculative_traffic_model(
+                self.cfg, self.sals, max(int(s) for s in positions),
+                q_len, acceptance=0.0)
+            model_win = len(positions) * ref["window_kv_bytes"] * nl
+            if not _rel_close(meas_win, model_win, self.tol):
+                self._drift("spec_window_bytes", meas_win, model_win,
+                            where)
+            self.measured_totals["spec_window_bytes"] += meas_win
+            self.modeled_totals["spec_window_bytes"] += model_win
+            if self._bytes_ctr is not None:
+                self._bytes_ctr.inc(meas_win, term="spec_window_bytes",
+                                    source="measured")
+        self.steps += 1
+        self.reconciled += 1
+
+    def observe_transfer(self, kind: str, pages: int, nbytes: int):
+        """Account one host↔HBM transfer batch: ``nbytes`` is the SUM of
+        the actual numpy mirror ``.nbytes`` moved (kind: "fetch" |
+        "spill"); modeled side is ``pages·ps·payload_bpt·n_layers`` from
+        ``tiered_capacity_model``'s payload term."""
+        if pages <= 0:
+            return
+        if self._page_size is None:
+            raise RuntimeError("observe_transfer before bind_page_size")
+        if self._payload_page_bytes is None:
+            # n_layers from the config mask — a prefetch can fire before
+            # the first decode step captures the live arena's widths
+            from repro.core import latent_cache as lc
+            n_layers = sum(
+                1 for m in self.sals.sals_layer_mask(self.cfg.n_layers)
+                if m)
+            self._payload_page_bytes = (
+                self._page_size
+                * lc.cache_bytes_per_token(self.cfg, self.sals) * n_layers)
+        modeled = pages * self._payload_page_bytes
+        key = f"{kind}_bytes"
+        if key not in self.measured_totals:
+            raise ValueError(f"unknown transfer kind {kind!r}")
+        if not _rel_close(float(nbytes), modeled, self.tol):
+            self._drift(key, float(nbytes), modeled,
+                        f"{kind} of {pages} page(s)")
+        self.measured_totals[key] += float(nbytes)
+        self.modeled_totals[key] += modeled
+        if self._bytes_ctr is not None:
+            self._bytes_ctr.inc(float(nbytes), term=key, source="measured")
+            self._bytes_ctr.inc(modeled, term=key, source="modeled")
+
+    _page_size = None
+    _payload_page_bytes = None
+
+    def bind_page_size(self, page_size: int):
+        self._page_size = page_size
+
+    def report(self) -> dict:
+        return {"steps": self.steps, "reconciled": self.reconciled,
+                "drifts": self.drifts,
+                "measured": dict(self.measured_totals),
+                "modeled": dict(self.modeled_totals)}
+
+
+# -- install / uninstall: the serve/faults.py contract ---------------------
+
+_ACTIVE: Optional[TrafficAccountant] = None
+
+
+def active() -> Optional[TrafficAccountant]:
+    return _ACTIVE
+
+
+def install(acct: Optional[TrafficAccountant]):
+    global _ACTIVE
+    _ACTIVE = acct
+
+
+def uninstall():
+    install(None)
+
+
+@contextmanager
+def installed(acct: TrafficAccountant):
+    prev = _ACTIVE
+    install(acct)
+    try:
+        yield acct
+    finally:
+        install(prev)

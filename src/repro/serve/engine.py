@@ -961,8 +961,16 @@ class ServeEngine:
 
     def decode_throughput(self, batch_size: int, context_len: int,
                           n_steps: int = 32) -> float:
-        """tokens/s of the steady-state decode loop (benchmark helper)."""
-        import time
+        """tokens/s of the steady-state decode loop (benchmark helper).
+
+        Timed through the obs tracer (ISSUE 10) — the installed
+        :class:`~repro.obs.trace.SpanTracer` when telemetry is on, a
+        private one otherwise — so this benchmark cell and live serving
+        metrics share one clock and one span code path instead of
+        hand-rolled ``perf_counter`` bracketing."""
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.active() or obs_trace.SpanTracer()
         prompts = [np.ones((context_len,), np.int32) for _ in range(batch_size)]
         toks = jnp.asarray(np.stack(prompts))
         logits, cache = self._prefill({"tokens": toks})
@@ -971,9 +979,18 @@ class ServeEngine:
         # warmup + compile
         lg, cache = self._decode(next_tok, cache, pos0)
         lg.block_until_ready()
-        t0 = time.perf_counter()
+        sid = tracer.begin("decode_throughput", "engine",
+                           batch=batch_size, context=context_len,
+                           steps=n_steps)
         for t in range(n_steps):
             lg, cache = self._decode(next_tok, cache, pos0 + 1 + t)
         lg.block_until_ready()
-        dt = time.perf_counter() - t0
-        return batch_size * n_steps / dt
+        dt = tracer.end(sid)
+        tok_s = batch_size * n_steps / dt
+        reg = obs_metrics.active()
+        if reg is not None:
+            reg.gauge("engine_decode_tokens_per_s",
+                      "steady-state decode throughput (last probe)",
+                      labelnames=("batch", "context")).set(
+                tok_s, batch=batch_size, context=context_len)
+        return tok_s

@@ -180,6 +180,10 @@ import numpy as np
 from repro.core.pager import (PagePool, PageTable, PagerInvariantError,
                               PrefixIndex, audit_pager)
 from repro.core.tiering import HotTierThrash, TieredPagePool
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs import traffic as obs_traffic
+from repro.obs.metrics import MetricsRegistry
 from repro.serve import faults
 from repro.serve.draft import NgramDrafter
 from repro.serve.engine import GenerationResult, PrefillTask, ServeEngine
@@ -278,6 +282,28 @@ class _Parked:
     parked_step: int               # FIFO resume order within a class
 
 
+class _CounterView:
+    """ISSUE 10 migration shim: a legacy public int counter
+    (``sched.prefix_hits`` et al.) that is now a THIN VIEW over the
+    scheduler's :class:`~repro.obs.metrics.MetricsRegistry`.  Existing
+    ``+= 1`` sites, tests and benchmarks keep working unchanged; the
+    registry is the single store, so exporters can never disagree with
+    the public fields."""
+
+    __slots__ = ("metric",)
+
+    def __init__(self, metric: str):
+        self.metric = metric
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return int(obj.metrics.counter(self.metric).value())
+
+    def __set__(self, obj, value):
+        obj.metrics.counter(self.metric).set_to(float(value))
+
+
 class RequestScheduler:
     """``mode``: "continuous" (default, from ``engine.scfg.scheduler``) or
     "static".  Recurrent-state families always run static (see engine).
@@ -291,6 +317,31 @@ class RequestScheduler:
                            sharing a step index with n_resident > 0 bounds
                            how long residents waited between decode steps).
     """
+
+    # Public counters, migrated onto the metrics registry (ISSUE 10).
+    # Reads and ``+= 1`` writes behave exactly as the old plain ints did.
+    prefix_hits = _CounterView("serve_prefix_hits_total")
+    cow_copies = _CounterView("serve_cow_copies_total")
+    admission_stalls = _CounterView("serve_admission_stalls_total")
+    evictions = _CounterView("serve_evictions_total")
+    failures = _CounterView("serve_requests_failed_total")
+    timeouts = _CounterView("serve_requests_timed_out_total")
+    cancellations = _CounterView("serve_requests_cancelled_total")
+    retries = _CounterView("serve_retries_total")
+    step_faults = _CounterView("serve_step_faults_total")
+    shed = _CounterView("serve_shed_total")
+    fetch_hits = _CounterView("serve_fetch_hits_total")
+    prefetch_hits = _CounterView("serve_prefetch_hits_total")
+    cold_misses = _CounterView("serve_cold_misses_total")
+    spec_rounds = _CounterView("serve_spec_rounds_total")
+    spec_proposed = _CounterView("serve_spec_proposed_total")
+    spec_accepted = _CounterView("serve_spec_accepted_total")
+    spec_committed = _CounterView("serve_spec_committed_total")
+    parks = _CounterView("serve_parks_total")
+    resumes = _CounterView("serve_resumes_total")
+    preemptions = _CounterView("serve_preemptions_total")
+    submitted = _CounterView("serve_requests_submitted_total")
+    done = _CounterView("serve_requests_done_total")
 
     def __init__(self, engine: ServeEngine, max_batch: Optional[int] = None,
                  mode: Optional[str] = None,
@@ -332,33 +383,57 @@ class RequestScheduler:
         # benchmarks (pages_in_use ≈ prefix + Σ unique suffixes under
         # prefix sharing, high-water = peak live tokens, ...)
         self.pool_gauges: collections.deque = collections.deque(maxlen=hist)
-        self.prefix_hits: int = 0               # admissions reusing pages
-        self.cow_copies: int = 0                # copy-on-write page dups
-        self.admission_stalls: int = 0          # sweeps blocked on pages
-        self.evictions: int = 0                 # evict-to-requeue events
-        # --- fault-tolerance observability (ISSUE 6) -----------------------
-        self.failures: int = 0                  # requests ending FAILED
-        self.timeouts: int = 0                  # requests ending TIMED_OUT
-        self.cancellations: int = 0             # requests ending CANCELLED
-        self.retries: int = 0                   # transient requeues granted
-        self.step_faults: int = 0               # batch-wide decode retries
-        self.shed: int = 0                      # queue-policy sheds
-        # --- two-tier pool observability (ISSUE 7) -------------------------
-        self.fetch_hits: int = 0                # touched pages already hot
-        self.prefetch_hits: int = 0             # ... warmed by the prefetcher
-        self.cold_misses: int = 0               # demand host→HBM fetches
-        # --- speculative decoding observability (ISSUE 9) ------------------
-        self.spec_rounds: int = 0               # verify windows executed
-        self.spec_proposed: int = 0             # draft tokens proposed
-        self.spec_accepted: int = 0             # draft tokens accepted
-        self.spec_committed: int = 0            # tokens committed via windows
-        # --- SLO scheduling (ISSUE 8) --------------------------------------
-        self.parks: int = 0                     # preempt-park events
-        self.resumes: int = 0                   # successful park resumes
-        self.preemptions: int = 0               # park + evict preemptions
+        # --- unified telemetry (ISSUE 10) ----------------------------------
+        # The registry is the single store behind every public counter
+        # above the class (``_CounterView``): an externally installed
+        # registry (``obs.metrics.install``) is adopted so exporters see
+        # this scheduler; otherwise a private one backs the views at the
+        # same cost.  Label-set growth shares the gauge_history cap.
+        self.metrics: MetricsRegistry = (
+            obs_metrics.active()
+            or MetricsRegistry(max_series=hist or 0))
+        # per-step gauge publishing only runs for an INSTALLED registry
+        # (someone is scraping); the private fallback registry exists just
+        # to back the counter views, so disabled mode stays one-check cheap
+        self._metrics_installed = obs_metrics.active() is not None
+        self.tracer = obs_trace.active()        # None = spans disabled
+        self.traffic = obs_traffic.active()     # None = no byte accounting
+        for view in (
+                # paged-pool observability (ISSUE 5 satellite)
+                "prefix_hits",       # admissions reusing pages
+                "cow_copies",        # copy-on-write page dups
+                "admission_stalls",  # sweeps blocked on pages
+                "evictions",         # evict-to-requeue events
+                # fault-tolerance observability (ISSUE 6)
+                "failures",          # requests ending FAILED
+                "timeouts",          # requests ending TIMED_OUT
+                "cancellations",     # requests ending CANCELLED
+                "retries",           # transient requeues granted
+                "step_faults",       # batch-wide decode retries
+                "shed",              # queue-policy sheds
+                # two-tier pool observability (ISSUE 7)
+                "fetch_hits",        # touched pages already hot
+                "prefetch_hits",     # ... warmed by the prefetcher
+                "cold_misses",       # demand host→HBM fetches
+                # speculative decoding observability (ISSUE 9)
+                "spec_rounds",       # verify windows executed
+                "spec_proposed",     # draft tokens proposed
+                "spec_accepted",     # draft tokens accepted
+                "spec_committed",    # tokens committed via windows
+                # SLO scheduling (ISSUE 8)
+                "parks",             # preempt-park events
+                "resumes",           # successful park resumes
+                "preemptions",       # park + evict preemptions
+                # request conservation (ISSUE 10): submitted must equal
+                # done+failures+timeouts+cancellations at drain
+                "submitted", "done"):
+            setattr(self, view, 0)
         self.parked: List[_Parked] = []         # live parked records
-        # per-tenant starvation/fairness gauges (see _tenant_gauge)
-        self.tenant_gauges: Dict[str, dict] = {}
+        # per-tenant starvation/fairness gauges (see _tenant_gauge);
+        # insertion-ordered so the gauge_history LRU cap can evict the
+        # least-recently-touched tenant (ISSUE 10 bugfix)
+        self.tenant_gauges: "collections.OrderedDict[str, dict]" = \
+            collections.OrderedDict()
         self._drr_rot: Dict[int, List[str]] = {}      # DRR rotation / class
         self._drr_deficit: Dict[int, Dict[str, float]] = {}
         self._rate_credit: Dict[str, float] = {}      # tenant token credit
@@ -379,6 +454,8 @@ class RequestScheduler:
                                      n_reserved=1)
             if scfg.prefix_cache:
                 self.prefix_index = PrefixIndex(self.pool)
+            if self.traffic is not None:
+                self.traffic.bind_page_size(scfg.page_size)
         # live loop state, mirrored on self so audit_serving_state can see
         # it mid-run (tests also call it after run: drained == empty)
         self._slots: List[Optional[_Slot]] = []
@@ -434,6 +511,10 @@ class RequestScheduler:
             req.deadline_time = self._clock() + timeout_ms / 1000.0
         req.submit_step = self.steps
         self._tenant_gauge(req.tenant_id)["submitted"] += 1
+        self.submitted += 1
+        if self.tracer is not None:
+            self.tracer.begin("queue_wait", f"req{req.req_id}",
+                              tenant=req.tenant_id, priority=req.priority)
         self.pending.append(req)
         return req.req_id
 
@@ -457,6 +538,18 @@ class RequestScheduler:
 
     # ----------------------------------------------------------- lifecycle
 
+    def _trace_phase(self, req: Request, name: str, **args) -> None:
+        """Move ``req`` to lifecycle phase ``name`` on its trace track
+        (ISSUE 10).  Each request has AT MOST ONE open span — its current
+        phase — so closing the previous phase first keeps begin/end
+        balanced through every teardown, retry, eviction and park path.
+        No-op when tracing is disabled."""
+        tr = self.tracer
+        if tr is not None:
+            track = f"req{req.req_id}"
+            tr.end_track(track)
+            tr.begin(name, track, **args)
+
     def _terminate(self, req: Request, state: RequestState,
                    error: Optional[BaseException] = None,
                    issued: Optional[List[Request]] = None,
@@ -479,6 +572,17 @@ class RequestScheduler:
             self.timeouts += 1
         elif state is RequestState.CANCELLED:
             self.cancellations += 1
+        elif state is RequestState.DONE:
+            self.done += 1
+        if self.tracer is not None:
+            # close whatever lifecycle phase was open (queue_wait /
+            # prefill / decode / parked — teardown can arrive from ANY of
+            # them) so spans balance on every terminal path, then record
+            # the teardown itself
+            track = f"req{req.req_id}"
+            self.tracer.end_track(track)
+            self.tracer.end(self.tracer.begin("teardown", track,
+                                              state=state.name))
         if partial is not None and state is not RequestState.DONE \
                 and req.on_token is not None \
                 and req.result is None and partial[0]:
@@ -526,6 +630,7 @@ class RequestScheduler:
             req.not_before_step = gate
             transition(req, RequestState.QUEUED)
             self.retries += 1
+            self._trace_phase(req, "queue_wait", retry=req.retries)
             self.pending.append(req)
         else:
             self._terminate(req, RequestState.FAILED, exc, issued,
@@ -542,10 +647,27 @@ class RequestScheduler:
     def _tenant_gauge(self, tenant: str) -> dict:
         """Per-tenant starvation/fairness counters (created on first
         touch): submissions, admissions (+tokens), deferrals by cause,
-        and the worst admission wait seen, in steps."""
-        return self.tenant_gauges.setdefault(tenant, {
-            "submitted": 0, "admitted": 0, "admitted_tokens": 0,
-            "rate_deferrals": 0, "cap_deferrals": 0, "max_wait_steps": 0})
+        and the worst admission wait seen, in steps.
+
+        LRU-capped by ``gauge_history`` (ISSUE 10 bugfix; 0 = unbounded,
+        the same ring policy as ``pool_gauges``): the old ``setdefault``
+        dict grew one entry per unique tenant id FOREVER — a long-running
+        front door with per-user tenant ids leaks without bound.  Every
+        touch refreshes recency; past the cap the least-recently-touched
+        tenant's gauges are dropped (it restarts from zero if it ever
+        returns — starvation gauges are ring history, not billing)."""
+        g = self.tenant_gauges.get(tenant)
+        if g is None:
+            g = {"submitted": 0, "admitted": 0, "admitted_tokens": 0,
+                 "rate_deferrals": 0, "cap_deferrals": 0,
+                 "max_wait_steps": 0}
+            self.tenant_gauges[tenant] = g
+        else:
+            self.tenant_gauges.move_to_end(tenant)
+        cap = self.engine.scfg.gauge_history
+        while cap and len(self.tenant_gauges) > cap:
+            self.tenant_gauges.popitem(last=False)
+        return g
 
     def _tenant_inflight(self, tenant: str) -> int:
         """Requests of ``tenant`` currently holding serving resources:
@@ -795,6 +917,7 @@ class RequestScheduler:
             clear_slot(i)
             transition(req, RequestState.QUEUED)   # eviction != a retry:
             req.not_before_step = 0                # no fault, no backoff
+            self._trace_phase(req, "queue_wait", evicted=True)
             self.pending.appendleft(req)           # restarts from scratch
             self.evictions += 1
 
@@ -911,8 +1034,11 @@ class RequestScheduler:
                         f"no spillable hot page among {len(pool.hot)} "
                         f"({len(pool.pins)} pinned)")
                 vslot = pool.begin_spill(victim)   # fires "spill" first
+                sid = None if self.tracer is None else self.tracer.begin(
+                    "tier_spill", "scheduler", page=victim)
                 mirror = eng.read_page_payload(cache, vslot)
                 pool.finish_spill(victim, mirror)
+                self._note_transfer("spill", mirror, sid)
                 hot_dirty[0] = True
                 slot = pool.take_slot()
             return slot
@@ -929,13 +1055,18 @@ class RequestScheduler:
             except BaseException:
                 pool.give_slot(slot)
                 raise
+            sid = None if self.tracer is None else self.tracer.begin(
+                "tier_fetch", "scheduler", page=pid)
             try:
                 cache = eng.load_page(cache, slot, payload)
             except BaseException:
+                if sid is not None:
+                    self.tracer.end(sid, aborted=True)
                 pool.abort_fetch(pid)
                 pool.give_slot(slot)
                 raise
             pool.finish_fetch(pid, slot)
+            self._note_transfer("fetch", payload, sid)
             hot_dirty[0] = True
 
         def ensure_write_pin(i: int):
@@ -1159,8 +1290,11 @@ class RequestScheduler:
                         vslot = pool.begin_spill(pid)  # fires "spill" first
                     except faults.InjectedFault:
                         return         # retried next iteration
+                    sid = None if self.tracer is None else self.tracer.begin(
+                        "tier_spill", "scheduler", page=pid, parked=True)
                     mirror = eng.read_page_payload(cache, vslot)
                     pool.finish_spill(pid, mirror)
+                    self._note_transfer("spill", mirror, sid)
                     hot_dirty[0] = True
 
         def park_resident(i: int):
@@ -1192,6 +1326,7 @@ class RequestScheduler:
                 hot_dirty[0] = True
             cache = eng.release_slot(cache, i)     # metadata-only
             transition(req, RequestState.PARKED)
+            self._trace_phase(req, "parked")
             self.parked.append(rec)
             req.parks += 1
             self.parks += 1
@@ -1230,6 +1365,7 @@ class RequestScheduler:
             tokens[i] = rec.out[-1]
             positions[i] = rec.position
             transition(rec.req, RequestState.DECODING)
+            self._trace_phase(rec.req, "decode", resumed=True)
             self.resumes += 1
             if audit_on:
                 self.audit_serving_state()
@@ -1441,21 +1577,29 @@ class RequestScheduler:
                                                       req.prompt))
                     req.attempts += 1
                     transition(req, RequestState.PREFILLING)
+                    self._trace_phase(req, "prefill", attempt=req.attempts)
                 active = self._active
                 self.prefill_chunks.append(
                     (self.steps, active.req.req_id, active.task.next_chunk,
                      sum(s is not None for s in slots)))
+                csid = None if self.tracer is None else self.tracer.begin(
+                    "prefill_chunk", "scheduler", req=active.req.req_id,
+                    chunk=active.task.next_chunk)
                 try:
                     eng.prefill_chunk_step(active.task)
                 except Exception as exc:
                     # the task's own cache/scratch are lost (donated or
                     # torn) but the ARENA is untouched: release the
                     # reservation, retry-or-fail this request alone
+                    if csid is not None:
+                        self.tracer.end(csid, faulted=True)
                     teardown_admission(active)
                     self._active = None
                     self._fail_or_retry(active.req, exc, issued)
                     spent += 1
                     continue
+                if csid is not None:
+                    self.tracer.end(csid)
                 spent += 1
                 if active.task.done:
                     i = active.slot
@@ -1494,6 +1638,7 @@ class RequestScheduler:
                     # the same table twice (resident + in-flight)
                     self._active = None
                     transition(active.req, RequestState.DECODING)
+                    self._trace_phase(active.req, "decode")
                     key, sub = jax.random.split(key)
                     tok_arr, ok = eng.sample_checked(active.task.logits, sub)
                     if not ok[0]:
@@ -1592,6 +1737,16 @@ class RequestScheduler:
                     raise
                 continue
             fault_streak = 0
+            # ISSUE 10: step span + the live rows' context lengths, read
+            # BEFORE the step commits (the traffic accountant reconciles
+            # the §4.5 terms at exactly the positions the selection ran at)
+            tr = self.tracer
+            dsid = None if tr is None else tr.begin(
+                "verify_window" if spec_q else "decode_step", "scheduler",
+                step=self.steps,
+                n_live=sum(s is not None for s in slots))
+            live_pos = [int(positions[i]) for i in range(b)
+                        if slots[i] is not None]
             if spec_q:
                 # ---- speculative verify window (ISSUE 9): ONE latent
                 # selection + ONE windowed reconstruction serves the
@@ -1638,6 +1793,9 @@ class RequestScheduler:
                                            jnp.asarray(n_commit))
                 self.steps += 1
                 self.spec_rounds += 1
+                if self.traffic is not None:
+                    self.traffic.observe_decode(eng, cache, live_pos,
+                                                q_len=spec_q)
                 for i in range(b):
                     if slots[i] is None:
                         continue
@@ -1663,6 +1821,8 @@ class RequestScheduler:
                 if self.tiered:
                     logits = tiered_decode(prefetched)
                     if logits is None:  # fetch faults tore every row down
+                        if dsid is not None:
+                            tr.end(dsid, aborted=True)
                         continue
                 else:
                     logits, cache = eng._decode(
@@ -1677,6 +1837,12 @@ class RequestScheduler:
                 tok_arr, ok = eng.sample_checked(logits, sub)
                 new_toks = np.asarray(tok_arr)
                 self.steps += 1
+                if self.traffic is not None:
+                    # tiered fetch-and-rerun rounds re-stream the same
+                    # terms; the ledger (and so this reconciliation) is
+                    # per COMMITTED step — PCIe bytes are accounted at the
+                    # fetch/spill sites themselves
+                    self.traffic.observe_decode(eng, cache, live_pos)
                 for i in range(b):
                     if slots[i] is None:
                         continue
@@ -1692,6 +1858,8 @@ class RequestScheduler:
                         continue
                     if len(slots[i].out) >= slots[i].req.max_new_tokens:
                         finish(i)
+            if dsid is not None:
+                tr.end(dsid)
             if self.paged:
                 row = {
                     "step": self.steps,
@@ -1717,12 +1885,74 @@ class RequestScheduler:
                         "spills": pool.spills,
                     })
                 self.pool_gauges.append(row)
+            # gauges are point-in-time samples: publish at 1/4 step rate
+            # (scrape intervals dwarf 4 steps) — the unconditional publish
+            # at drain below keeps end-state reads exact
+            if self._metrics_installed and self.steps % 4 == 0:
+                self._publish_gauges()
             if audit_on and self.steps % self.engine.scfg.audit_every == 0:
                 self.audit_serving_state(
                     self.pool_gauges[-1] if self.pool_gauges else None)
             if on_step:
                 on_step(self, self.steps)
+        self._publish_gauges()
         return issued
+
+    # ------------------------------------------------------ telemetry (10)
+
+    @staticmethod
+    def _mirror_nbytes(mirror: dict) -> int:
+        """ACTUAL bytes of a host page mirror ({seg: {field: np array}}) —
+        the measured side of the tiered PCIe ledger term."""
+        return sum(int(a.nbytes)
+                   for seg in mirror.values() for a in seg.values())
+
+    def _note_transfer(self, kind: str, mirror: dict,
+                       sid: Optional[int]) -> None:
+        """Account one host↔HBM page transfer: close its span with the
+        measured byte count and feed the traffic accountant."""
+        if self.tracer is None and self.traffic is None:
+            return
+        nbytes = self._mirror_nbytes(mirror)
+        if sid is not None:
+            self.tracer.end(sid, bytes=nbytes)
+        if self.traffic is not None:
+            self.traffic.observe_transfer(kind, 1, nbytes)
+
+    def _publish_gauges(self) -> None:
+        """Refresh the registry's point-in-time gauges (occupancy, queue
+        depths, tenant fairness).  Cumulative counts live in the counters
+        behind the ``_CounterView`` fields and never pass through here."""
+        g = self.metrics
+        g.gauge("serve_steps", "decode steps executed").set(self.steps)
+        g.gauge("serve_pending", "requests waiting in queue").set(
+            len(self.pending))
+        g.gauge("serve_residents", "slots running decode").set(
+            sum(s is not None for s in self._slots))
+        g.gauge("serve_parked_requests", "preempt-parked residents").set(
+            len(self.parked))
+        if self.pool is not None:
+            g.gauge("serve_pages_in_use", "refcounted pool pages").set(
+                self.pool.pages_in_use)
+            g.gauge("serve_pages_free", "allocatable pool pages").set(
+                self.pool.pages_free)
+            if self.tiered:
+                g.gauge("serve_host_pages", "cold (host-mirror) pages").set(
+                    self.pool.host_pages)
+                g.counter("serve_tier_spills_total",
+                          "HBM→host page spills").set_to(self.pool.spills)
+                g.counter("serve_tier_fetches_total",
+                          "host→HBM page fetches").set_to(self.pool.fetches)
+        if self.prefix_index is not None:
+            g.gauge("serve_prefix_entries", "live prefix-cache entries").set(
+                len(self.prefix_index.entries))
+        if self.tenant_gauges:
+            tg = g.gauge("serve_tenant_stat",
+                         "per-tenant fairness/starvation gauges",
+                         labelnames=("tenant", "stat"))
+            for t, gd in self.tenant_gauges.items():
+                for k, v in gd.items():
+                    tg.set(v, tenant=t, stat=k)
 
     # ---------------------------------------------------------------- audit
 

@@ -933,3 +933,97 @@ def test_park_chaos_sweep_randomized(eng, eng_prio, model, seed):
 def test_tiered_park_chaos_sweep(eng, eng_prio_tiered, model, seed):
     _park_chaos_run(eng, eng_prio_tiered, model, seed, TIERED_PARK_RATES,
                     tiered=True)
+
+
+# ---------------------------------------------------------------------------
+# unified telemetry conservation (ISSUE 10): re-run the chaos episodes with
+# the FULL obs stack installed (registry + tracer + traffic accountant,
+# audit_every=1 on the engines) and assert the metrics themselves conserve:
+# submitted == Σ terminal-state counters, every span balanced with zero
+# dangling tracks at drain, exporters schema-valid, and the §4.5 byte
+# ledger reconciled on every committed step
+# ---------------------------------------------------------------------------
+
+from repro import obs                                        # noqa: E402
+
+
+def _obs_conservation_check(sched, handles):
+    assert sched.submitted == (sched.done + sched.failures + sched.timeouts
+                               + sched.cancellations), \
+        "a request left the system without hitting a terminal counter"
+    reg = handles["registry"]
+    assert reg.counter("serve_requests_submitted_total").value() == \
+        sched.submitted
+    tr = handles["tracer"]
+    assert tr.balanced(), (tr.begun, tr.ended, tr.open_tracks())
+    assert tr.open_tracks() == []                # zero dangling at drain
+    assert obs.trace.validate_chrome_trace(tr.chrome_trace()) == []
+    from repro.obs.metrics import validate_prometheus, validate_snapshot
+    assert validate_snapshot(reg.snapshot()) == []
+    assert validate_prometheus(reg.to_prometheus()) == []
+    acct = handles["traffic"]
+    if acct is not None:
+        assert acct.drifts == 0
+        assert acct.reconciled > 0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_obs_chaos_conservation(eng, model, seed):
+    """The randomized fault sweep with telemetry on: the same acceptance
+    properties as test_chaos_sweep_deterministic PLUS metric conservation
+    — and the telemetry itself must not perturb tokens (DONE rows stay
+    exact vs the obs-off reference)."""
+    cfg, params, sals, proj = model
+    ref = _reference(eng, model)
+    reqs = _reqs(_workload(model))
+    schedule = faults.FaultSchedule(seed=seed, rates=RATES)
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as handles:
+        try:
+            sched = _run(eng, reqs, schedule=schedule)
+        except faults.InjectedFault:
+            assert schedule.log[-1][0] == "decode_step"
+            return
+        _obs_conservation_check(sched, handles)
+    for r, want in zip(reqs, ref):
+        assert r.finished, (r.req_id, r.state)
+        if r.state is RequestState.DONE:
+            np.testing.assert_array_equal(r.result.tokens, want)
+    _drain_check(sched)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_obs_tiered_chaos_conservation(eng, eng_tiered, model, seed):
+    """Tiered flavor: fetch/spill fault points fire mid-transfer while
+    the accountant reconciles every PCIe batch — spans for aborted
+    transfers must still close."""
+    cfg, params, sals, proj = model
+    _reference(eng, model)
+    reqs = _reqs(_workload(model))
+    schedule = faults.FaultSchedule(seed=seed, rates=TIERED_RATES)
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as handles:
+        try:
+            sched = _run(eng_tiered, reqs, schedule=schedule)
+        except faults.InjectedFault:
+            assert schedule.log[-1][0] == "decode_step"
+            return
+        _obs_conservation_check(sched, handles)
+    _drain_check_tiered(sched)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_obs_park_chaos_conservation(eng, eng_prio, model, seed):
+    """Park/resume flavor: parked requests hold an open 'parked' phase
+    span while off the arena; every park/resume/retry path must hand the
+    span back before drain."""
+    cfg, params, sals, proj = model
+    _park_reference(eng, model)
+    reqs = _park_reqs(model, priorities=True)
+    schedule = faults.FaultSchedule(seed=seed, rates=PARK_RATES)
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as handles:
+        try:
+            sched = _staged_park_run(eng_prio, reqs, schedule)
+        except faults.InjectedFault:
+            assert schedule.log[-1][0] == "decode_step"
+            return
+        _obs_conservation_check(sched, handles)
+    _drain_check(sched)

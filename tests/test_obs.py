@@ -1,0 +1,533 @@
+"""Unified telemetry (ISSUE 10): metrics registry, span tracer, traffic
+accountant.
+
+Four contracts under test:
+
+  (a) the registry's instruments are typed, labeled, LRU-bounded by the
+      ``gauge_history`` policy, and both exporters (Prometheus text, JSON
+      snapshot) emit schema-valid output;
+  (b) spans balance — through every teardown/retry path, park/evict/fault
+      episodes included — and the Chrome-trace export stays valid;
+  (c) the traffic accountant reconciles MEASURED decode-step bytes against
+      ``benchmarks/memory_access.py`` within 1% on the proxy config for the
+      dense, paged, tiered and speculative paths, and raises a typed
+      ``TrafficDriftError`` the moment the cache layout and the ledger
+      disagree;
+  (d) telemetry is invisible when disabled — the core hook stays None and
+      scheduler/engine behavior is unchanged.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.config import SALSConfig, ServeConfig
+from repro.configs import get_config
+from repro.core import calibration as cal
+from repro.models import transformer as tf
+from repro.obs.metrics import (MetricsRegistry, validate_prometheus,
+                               validate_snapshot)
+from repro.obs.trace import RequestTimeline, SpanTracer, validate_chrome_trace
+from repro.obs.traffic import TrafficAccountant, TrafficDriftError
+from repro.serve import Request, RequestScheduler, RequestState, ServeEngine
+from repro.serve import faults
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    """The chaos proxy config: every layer between the skip margins is a
+    SALS layer, so the §4.5 ledger has substance."""
+    cfg = get_config("qwen2-1.5b").reduced(n_layers=3, vocab_size=128)
+    params = tf.init_params(KEY, cfg, jnp.float32)
+    sals = SALSConfig(rank_ratio=0.5, score_ratio=0.5, n_critical=16,
+                      n_sink=2, n_recent=8, v_bits=8, v_group=32,
+                      skip_layers_front=1, skip_layers_back=1)
+    proj = cal.random_layer_projectors(KEY, cfg, sals, cfg.n_layers)
+    return cfg, params, sals, proj
+
+
+def _engine(model, **kw):
+    cfg, params, sals, proj = model
+    base = dict(max_seq_len=128, max_new_tokens=8, max_batch=3, sals=sals,
+                prefill_chunk=8, prefill_token_budget=8)
+    base.update(kw)
+    return ServeEngine(params, proj, cfg, ServeConfig(**base))
+
+
+@pytest.fixture(scope="module")
+def eng_dense(model):
+    return _engine(model)
+
+
+@pytest.fixture(scope="module")
+def eng_paged(model):
+    return _engine(model, page_size=16, audit_every=1)
+
+
+@pytest.fixture(scope="module")
+def eng_tiered(model):
+    return _engine(model, page_size=16, hbm_pages=4, audit_every=1)
+
+
+@pytest.fixture(scope="module")
+def eng_spec(model):
+    return _engine(model, page_size=16, audit_every=1, spec_window=4,
+                   max_batch=2, temperature=0.0)
+
+
+def _prompts(seed=42, n=4):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 128, size=int(rng.integers(10, 30)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _drain(eng, reqs, schedule=None, on_step=None):
+    sched = RequestScheduler(eng, mode="continuous")
+    for r in reqs:
+        sched.submit(r)
+    if schedule is None:
+        sched.run(on_step=on_step)
+    else:
+        with faults.injected(schedule):
+            sched.run(on_step=on_step)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# (a) registry + exporters
+# ---------------------------------------------------------------------------
+
+def test_registry_typed_instruments():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", labelnames=("tenant",))
+    c.inc(tenant="a")
+    c.inc(2.0, tenant="b")
+    assert c.value(tenant="a") == 1.0 and c.value(tenant="b") == 2.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0, tenant="a")                 # counters are monotonic
+    with pytest.raises(ValueError):
+        c.inc(tenant="a", extra="x")            # undeclared label
+    g = reg.gauge("depth")
+    g.set(5.0)
+    g.dec(2.0)
+    assert g.value() == 3.0
+    h = reg.histogram("lat_ms", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0):
+        h.observe(v)
+    assert h.count() == 4 and h.sum() == 555.5
+    # idempotent re-registration returns the same instrument; a type or
+    # label mismatch is a bug, not a merge
+    assert reg.counter("req_total", labelnames=("tenant",)) is c
+    with pytest.raises(ValueError):
+        reg.gauge("req_total")
+    with pytest.raises(ValueError):
+        reg.counter("req_total", labelnames=("other",))
+    with pytest.raises(ValueError):
+        reg.counter("bad name!")
+
+
+def test_registry_series_lru_cap():
+    """max_series is the registry-side twin of the gauge_history ring:
+    the least-recently-touched label set is evicted past the cap."""
+    reg = MetricsRegistry(max_series=3)
+    c = reg.counter("x_total", labelnames=("t",))
+    for t in "abcd":
+        c.inc(t=t)
+    c.inc(t="b")                                # refresh b
+    kept = {s["labels"]["t"] for s in reg.snapshot()["metrics"][0]["series"]}
+    assert kept == {"b", "c", "d"}              # a was LRU
+    assert len(kept) == 3
+
+
+def test_exporters_validate():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "help text", labelnames=("k",)).inc(k='q"uote')
+    reg.gauge("b").set(-1.5)
+    reg.histogram("c_ms").observe(3.0)
+    snap = reg.snapshot()
+    assert validate_snapshot(snap) == []
+    assert validate_snapshot(json.loads(json.dumps(snap))) == []
+    assert validate_prometheus(reg.to_prometheus()) == []
+    # the validators actually reject garbage
+    assert validate_snapshot({"schema": "nope", "metrics": 3})
+    assert validate_prometheus('bad{-}line 1\n')
+
+
+def test_core_hook_contract(model):
+    """core.pager._metrics_hook follows the _fault_hook contract: None
+    when disabled (zero-cost), wired by install(), counting page events
+    under core_events_total when enabled — core never imports obs."""
+    from repro.core import pager
+    assert pager._metrics_hook is None
+    pool = pager.PagePool(4, 4, n_reserved=1)
+    pid = pool.alloc()
+    pool.free(pid)                              # no registry: nothing breaks
+    with obs.metrics.installed(MetricsRegistry()) as reg:
+        assert pager._metrics_hook is not None
+        pid = pool.alloc()
+        pool.share(pid)
+        pool.free(pid)
+        pool.free(pid)
+        ev = reg.counter("core_events_total", labelnames=("point",))
+        assert ev.value(point="page_alloc") == 1
+        assert ev.value(point="page_share") == 1
+        assert ev.value(point="page_free") == 1  # on refcount -> 0 only
+    assert pager._metrics_hook is None
+
+
+# ---------------------------------------------------------------------------
+# (b) span tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_balance_and_ring_cap():
+    t = [0.0]
+    tr = SpanTracer(max_events=2, clock=lambda: t.__setitem__(0, t[0] + 1)
+                    or t[0])
+    sids = [tr.begin("a", "r1"), tr.begin("b", "r1"), tr.begin("c", "r2")]
+    assert tr.open_count == 3 and tr.open_tracks() == ["r1", "r2"]
+    assert tr.end(sids[2]) > 0
+    with pytest.raises(ValueError):
+        tr.end(sids[2])                         # double close is the bug
+    assert tr.end_track("r1") == 2              # newest-first unwind
+    assert tr.balanced()
+    # ring kept only 2 completed events but the CUMULATIVE counters
+    # survive eviction — balance checks stay exact
+    assert len(tr.events) == 2 and tr.begun == tr.ended == 3
+    tr.instant("marker", "r1")
+    payload = tr.chrome_trace()
+    assert validate_chrome_trace(payload) == []
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert "marker" in names and "thread_name" in names
+
+
+def test_tracer_span_ctx_tolerates_end_track():
+    tr = SpanTracer()
+    with tr.span("outer", "req1"):
+        tr.begin("inner", "req1")
+        tr.end_track("req1")                    # teardown closed everything
+    assert tr.balanced()
+
+
+def test_request_timeline_feeds_histograms():
+    t = [0.0]
+
+    def clock():
+        t[0] += 0.010
+        return t[0]
+
+    reg = MetricsRegistry()
+    tl = RequestTimeline(clock=clock, registry=reg)
+    tl.submitted(7)
+    tl.stamp(7)                                 # first token -> ttft
+    tl.stamp(7)                                 # second -> inter-token
+    assert tl.ttft_ms(7) == pytest.approx(10.0)
+    assert tl.gaps_ms(7) == [pytest.approx(10.0)]
+    assert reg.get("obs_ttft_ms").count() == 1
+    assert reg.get("obs_inter_token_ms").count() == 1
+    s = tl.summary()
+    assert s["n"] == 1 and s["ttft_p50_ms"] == pytest.approx(10.0)
+
+
+def test_timeline_attach_chains_two_arg_callback():
+    """Scheduler emit_tokens calls on_token(tok, idx): the chained
+    wrapper must forward BOTH args to the client callback."""
+    tl = RequestTimeline()
+    seen = []
+    req = Request(np.array([1, 2], np.int32))
+    req.on_token = lambda tok, idx: seen.append((tok, idx))
+    tl.submitted(req.req_id)
+    tl.attach(req)
+    req.on_token(5, 0)
+    req.on_token(6, 1)
+    assert seen == [(5, 0), (6, 1)]
+    assert len(tl.stamps[req.req_id]) == 3      # submit + 2 tokens
+
+
+# ---------------------------------------------------------------------------
+# (c) traffic accountant: measured == modeled on every serving path
+# ---------------------------------------------------------------------------
+
+def _reconciled_run(eng, model, reqs, schedule=None, on_step=None):
+    cfg, params, sals, proj = model
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as h:
+        sched = _drain(eng, reqs, schedule=schedule, on_step=on_step)
+        acct = h["traffic"]
+        assert acct.reconciled > 0, "accountant never saw a decode step"
+        assert acct.drifts == 0
+        rep = acct.report()
+        for term, meas in rep["measured"].items():
+            mod = rep["modeled"][term]
+            assert abs(meas - mod) <= 0.01 * max(meas, mod, 1.0), \
+                (term, meas, mod)
+        return sched, rep, h
+
+
+def test_traffic_reconciles_dense(eng_dense, model):
+    reqs = [Request(p, max_new_tokens=4) for p in _prompts()]
+    _, rep, _ = _reconciled_run(eng_dense, model, reqs)
+    for term in ("score_bytes", "selected_bytes", "window_bytes", "u_bytes"):
+        assert rep["measured"][term] > 0
+
+
+def test_traffic_reconciles_paged(eng_paged, model):
+    reqs = [Request(p, max_new_tokens=4) for p in _prompts(43)]
+    sched, rep, _ = _reconciled_run(eng_paged, model, reqs)
+    assert sched.paged and rep["measured"]["score_bytes"] > 0
+
+
+def test_traffic_reconciles_tiered(eng_tiered, model):
+    """The PCIe terms: every fetch/spill's actual host-mirror nbytes must
+    equal pages x page_size x payload-bytes-per-token x SALS layers."""
+    rng = np.random.default_rng(44)
+    reqs = [Request(rng.integers(1, 128, size=30).astype(np.int32),
+                    max_new_tokens=8) for _ in range(5)]
+    sched, rep, _ = _reconciled_run(eng_tiered, model, reqs)
+    assert sched.tiered
+    assert sched.pool.spills > 0 or sched.pool.fetches > 0
+    if sched.pool.spills:
+        assert rep["measured"]["spill_bytes"] > 0
+    if sched.pool.fetches:
+        assert rep["measured"]["fetch_bytes"] > 0
+
+
+def test_traffic_reconciles_speculative(eng_spec, model):
+    """Verify windows reconcile the EXTRA in-flight window K/V term
+    against speculative_traffic_model."""
+    rng = np.random.default_rng(45)
+    base = rng.integers(1, 128, size=8).astype(np.int32)
+    reqs = [Request(np.tile(base, 4)[:20 + 6 * i], max_new_tokens=8)
+            for i in range(2)]
+    sched, rep, _ = _reconciled_run(eng_spec, model, reqs)
+    assert sched.spec_rounds > 0
+    assert rep["measured"]["spec_window_bytes"] > 0
+
+
+def test_traffic_drift_error_on_layout_tamper(eng_dense, model):
+    """Change the (believed) cache layout without updating the ledger and
+    the NEXT decode step raises a typed TrafficDriftError out of run() —
+    the ROADMAP ledger is an enforced invariant, not documentation."""
+    cfg, params, sals, proj = model
+    reqs = [Request(p, max_new_tokens=6) for p in _prompts(46, n=2)]
+
+    def tamper(s, step):
+        acct = obs.traffic.active()
+        if step == 1 and acct.widths:
+            acct.widths["win_tokens"] += 5      # phantom window rows
+
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True):
+        with pytest.raises(TrafficDriftError) as ei:
+            _drain(eng_dense, reqs, on_step=tamper)
+    assert ei.value.term == "window_bytes"
+    assert ei.value.measured > ei.value.modeled
+
+
+def test_traffic_accountant_empty_scope(model):
+    """A model whose every layer is a skip layer has an empty ledger —
+    the accountant observes nothing rather than erroring."""
+    cfg, params, sals, proj = model
+    import dataclasses
+    all_skip = dataclasses.replace(sals, skip_layers_front=2,
+                                   skip_layers_back=1)
+    acct = TrafficAccountant(cfg, all_skip)
+
+    class _FakeEngine:
+        def _latent_segs(self, cache):
+            return {}
+
+    acct.observe_decode(_FakeEngine(), {}, [10, 20])
+    assert acct.reconciled == 0 and acct.drifts == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: views, conservation, LRU bugfix, lifecycle spans
+# ---------------------------------------------------------------------------
+
+def test_counter_views_are_registry_backed(eng_dense, model):
+    """Legacy public fields (prefix_hits, failures, ...) stay readable /
+    writable but the registry is the single store."""
+    cfg, params, sals, proj = model
+    with obs.enabled(cfg=cfg, sals=sals) as h:
+        sched = RequestScheduler(eng_dense, mode="continuous")
+        assert sched.metrics is h["registry"]
+        sched.prefix_hits += 3
+        assert sched.prefix_hits == 3
+        assert h["registry"].counter(
+            "serve_prefix_hits_total").value() == 3.0
+
+
+def test_metrics_conservation_and_terminal_counters(eng_dense, model):
+    """submitted == done + failures + timeouts + cancellations at drain,
+    in the public views AND the registry series they proxy."""
+    rng = np.random.default_rng(47)
+    cfg, params, sals, proj = model
+    with obs.enabled(cfg=cfg, sals=sals) as h:
+        reqs = [Request(rng.integers(1, 128, size=12).astype(np.int32),
+                        max_new_tokens=6) for _ in range(3)]
+        reqs.append(Request(rng.integers(1, 128, size=12).astype(np.int32),
+                            max_new_tokens=30, timeout_steps=3))
+        victim = Request(rng.integers(1, 128, size=12).astype(np.int32),
+                         max_new_tokens=30)
+        reqs.append(victim)
+
+        def on_step(s, step):
+            if step == 2:
+                victim.cancel()
+
+        sched = _drain(eng_dense, reqs, on_step=on_step)
+        assert all(r.finished for r in reqs)
+        assert sched.submitted == 5
+        assert sched.submitted == (sched.done + sched.failures
+                                   + sched.timeouts + sched.cancellations)
+        assert sched.timeouts == 1 and sched.cancellations == 1
+        reg = h["registry"]
+        assert reg.counter("serve_requests_submitted_total").value() == 5.0
+        assert reg.counter("serve_requests_done_total").value() == 3.0
+        # gauges published at drain: nothing pending, nothing resident
+        assert reg.gauge("serve_pending").value() == 0
+        assert reg.gauge("serve_residents").value() == 0
+
+
+def test_tenant_gauges_lru_capped(eng_dense, model):
+    """ISSUE 10 satellite bugfix: the per-tenant setdefault dict grew
+    forever on a long-lived scheduler; it now follows the gauge_history
+    ring policy (0 = unbounded)."""
+    cfg, params, sals, proj = model
+    import dataclasses
+    scfg = dataclasses.replace(eng_dense.scfg, gauge_history=4)
+    eng2 = ServeEngine.__new__(ServeEngine)
+    eng2.__dict__.update(eng_dense.__dict__)
+    eng2.scfg = scfg
+    sched = RequestScheduler(eng2, mode="continuous")
+    for i in range(10):
+        sched._tenant_gauge(f"tenant{i}")
+    assert len(sched.tenant_gauges) == 4
+    assert set(sched.tenant_gauges) == {f"tenant{i}" for i in range(6, 10)}
+    sched._tenant_gauge("tenant6")              # refresh 6
+    sched._tenant_gauge("tenant99")             # evicts 7 (LRU), not 6
+    assert "tenant6" in sched.tenant_gauges
+    assert "tenant7" not in sched.tenant_gauges
+    # unbounded default keeps the pre-fix behavior
+    sched0 = RequestScheduler(eng_dense, mode="continuous")
+    for i in range(10):
+        sched0._tenant_gauge(f"t{i}")
+    assert len(sched0.tenant_gauges) == 10
+
+
+def test_spans_balance_park_evict_fault_episode(model):
+    """Acceptance: a park + evict + fault episode ends with every span
+    closed and a valid Chrome-trace export covering the full lifecycle
+    vocabulary."""
+    cfg, params, sals, proj = model
+    eng_p = _engine(model, page_size=16, audit_every=1, max_batch=2,
+                    priority_classes=2, preempt_policy="park")
+    prompts = _prompts(48, n=5)
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as h:
+        sched = RequestScheduler(eng_p, mode="continuous")
+        lo = [Request(p, max_new_tokens=8, priority=0) for p in prompts[:2]]
+        hi = [Request(p, max_new_tokens=4, priority=1) for p in prompts[2:]]
+        for r in lo:
+            sched.submit(r)
+        arrivals = [(2, hi[0]), (4, hi[1]), (6, hi[2])]
+
+        def on_step(s, step):
+            while arrivals and step >= arrivals[0][0]:
+                s.submit(arrivals.pop(0)[1])
+
+        schedule = faults.FaultSchedule(at={"nan_logits": [1]})
+        with faults.injected(schedule):
+            sched.run(on_step=on_step)
+        assert sched.parks >= 1, "park never exercised"
+        assert sched.retries >= 1, "fault retry never exercised"
+        assert all(r.finished for r in lo + hi)
+        tr = h["tracer"]
+        assert tr.balanced(), (tr.open_tracks(), tr.begun, tr.ended)
+        payload = tr.chrome_trace()
+        assert validate_chrome_trace(payload) == []
+        names = {e["name"] for e in payload["traceEvents"]}
+        for want in ("queue_wait", "prefill", "prefill_chunk", "decode",
+                     "decode_step", "parked", "teardown"):
+            assert want in names, f"missing lifecycle span {want!r}"
+        assert h["traffic"].drifts == 0
+    # evict flavor of the same episode
+    eng_e = _engine(model, page_size=16, audit_every=1, max_batch=2,
+                    priority_classes=2, preempt_policy="evict")
+    with obs.enabled(cfg=cfg, sals=sals) as h:
+        sched = RequestScheduler(eng_e, mode="continuous")
+        lo = [Request(p, max_new_tokens=8, priority=0) for p in prompts[:2]]
+        hi = [Request(p, max_new_tokens=4, priority=1) for p in prompts[2:]]
+        for r in lo:
+            sched.submit(r)
+        arrivals = [(2, hi[0]), (4, hi[1]), (6, hi[2])]
+
+        def on_step2(s, step):
+            while arrivals and step >= arrivals[0][0]:
+                s.submit(arrivals.pop(0)[1])
+
+        sched.run(on_step=on_step2)
+        assert sched.preemptions >= 1
+        assert h["tracer"].balanced()
+        assert validate_chrome_trace(h["tracer"].chrome_trace()) == []
+
+
+def test_disabled_mode_is_invisible(eng_dense, model):
+    """(d) With nothing installed the scheduler runs exactly as before:
+    no tracer, no traffic, public views still count, same tokens as an
+    enabled run (telemetry must never perturb decoding)."""
+    from repro.core import pager
+    cfg, params, sals, proj = model
+    prompts = _prompts(49, n=2)
+
+    def run():
+        reqs = [Request(p, max_new_tokens=4) for p in prompts]
+        sched = _drain(eng_dense, reqs)
+        return sched, [r.result.tokens.copy() for r in reqs]
+
+    assert obs.metrics.active() is None and pager._metrics_hook is None
+    sched_off, toks_off = run()
+    assert sched_off.tracer is None and sched_off.traffic is None
+    assert sched_off.done == 2                  # local registry backs views
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True):
+        sched_on, toks_on = run()
+    for a, b in zip(toks_off, toks_on):
+        np.testing.assert_array_equal(a, b)
+    assert obs.metrics.active() is None and pager._metrics_hook is None
+
+
+def test_engine_decode_throughput_on_tracer(eng_dense, model):
+    """Satellite 2: the hand-rolled perf_counter in decode_throughput now
+    rides the tracer and publishes a gauge when telemetry is on."""
+    cfg, params, sals, proj = model
+    tput = eng_dense.decode_throughput(2, 16, n_steps=2)   # disabled path
+    assert tput > 0
+    with obs.enabled(cfg=cfg, sals=sals) as h:
+        tput = eng_dense.decode_throughput(2, 16, n_steps=2)
+        assert tput > 0
+        g = h["registry"].gauge("engine_decode_tokens_per_s",
+                                labelnames=("batch", "context"))
+        assert g.value(batch="2", context="16") == pytest.approx(tput)
+        spans = [e for e in h["tracer"].events
+                 if e["name"] == "decode_throughput"]
+        assert spans and h["tracer"].balanced()
+
+
+def test_launcher_style_export_roundtrip(eng_dense, model, tmp_path):
+    """The --metrics-out/--trace-out shapes: both files written at drain
+    validate, and the JSON snapshot round-trips."""
+    cfg, params, sals, proj = model
+    with obs.enabled(cfg=cfg, sals=sals, with_traffic=True) as h:
+        reqs = [Request(p, max_new_tokens=4) for p in _prompts(50, n=2)]
+        _drain(eng_dense, reqs)
+        prom = tmp_path / "metrics.prom"
+        prom.write_text(h["registry"].to_prometheus())
+        snap = tmp_path / "metrics.json"
+        snap.write_text(obs.metrics.snapshot_to_json(h["registry"]))
+        trace = tmp_path / "trace.json"
+        h["tracer"].dump(trace)
+    assert validate_prometheus(prom.read_text()) == []
+    assert validate_snapshot(json.loads(snap.read_text())) == []
+    assert validate_chrome_trace(json.loads(trace.read_text())) == []
